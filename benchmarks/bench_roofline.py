@@ -1,0 +1,102 @@
+"""Roofline aggregation: read the dry-run artifacts and emit the per-cell
+three-term table (§Roofline in EXPERIMENTS.md).
+
+Derived fields missing from older records (min-bytes, fractions) are
+recomputed here from the stored raw costs, so the bench is the single
+source of truth for the table.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import (
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    min_bytes_estimate,
+    model_flops,
+)
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(label: str | None = None) -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        rec = json.load(open(f))
+        if label and rec.get("label") != label:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def derive(rec: dict) -> dict | None:
+    if not rec.get("applicable", True):
+        return None
+    cfg = configs.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = rec["n_chips"]
+    pc = rec.get("probe_corrected")
+    if pc:
+        flops, bytes_, coll = pc["flops"], pc["bytes"], pc["coll_bytes"]
+        corrected = True
+    else:
+        flops = rec["cost_analysis"].get("flops", 0.0)
+        bytes_ = rec["cost_analysis"].get("bytes accessed", 0.0)
+        coll = float(rec["collectives"]["total_bytes"])
+        corrected = False
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / LINK_BW
+    t_max = max(t_c, t_m, t_x)
+    mf = model_flops(cfg, shape) / n
+    minb = min_bytes_estimate(cfg, shape, n)
+    frac = max(mf / PEAK_FLOPS, minb / HBM_BW) / t_max if t_max else None
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "label": rec.get("label", "baseline"),
+        "corrected": corrected,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "useful_flops_ratio": mf / flops if flops else None,
+        "roofline_fraction": frac,
+        "hbm_per_chip_gb": rec.get("memory_analysis", {}).get(
+            "argument_size_in_bytes", 0) / 1e9,
+        "temp_per_chip_gb": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0) / 1e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def run(csv_rows: list) -> dict:
+    rows = [d for d in (derive(r) for r in load_cells())
+            if d is not None]
+    skips = [r for r in load_cells() if not r.get("applicable", True)]
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"], d["mesh"],
+                                         d["label"])):
+        csv_rows.append((
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}/{d['label']}",
+            0.0,
+            f"tC={d['t_compute_s']:.4f};tM={d['t_memory_s']:.4f};"
+            f"tX={d['t_collective_s']:.4f};dom={d['dominant']};"
+            f"frac={d['roofline_fraction'] if d['roofline_fraction'] is not None else -1:.4f};"
+            f"useful={d['useful_flops_ratio'] if d['useful_flops_ratio'] else -1:.3f};"
+            f"corrected={int(d['corrected'])}",
+        ))
+    for s in skips:
+        csv_rows.append((
+            f"roofline/{s['arch']}/{s['shape']}/{s['mesh']}/SKIP", 0.0,
+            s.get("skip_reason", ""),
+        ))
+    n_cells = len({(d["arch"], d["shape"]) for d in rows})
+    summary = {"cells": n_cells, "rows": len(rows), "skips": len(skips)}
+    csv_rows.append(("roofline/summary", 0.0,
+                     ";".join(f"{k}={v}" for k, v in summary.items())))
+    return summary

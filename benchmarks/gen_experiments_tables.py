@@ -1,0 +1,66 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments_tables > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+from benchmarks.bench_roofline import derive, load_cells
+
+
+def fmt(x, nd=3):
+    if x is None:
+        return "-"
+    return f"{x:.{nd}f}"
+
+
+def main() -> None:
+    cells = load_cells()
+    rows = []
+    skips = []
+    for r in cells:
+        d = derive(r)
+        if d is None:
+            skips.append(r)
+        else:
+            d["_mem"] = r.get("memory_analysis", {})
+            rows.append(d)
+
+    print("### Baseline roofline table (single-pod 16x16, probe-corrected)\n")
+    print("| arch | shape | tC (s) | tM (s) | tX (s) | dominant | useful-FLOPs | frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"])):
+        if d["mesh"] != "pod16x16" or d["label"] != "baseline":
+            continue
+        print(f"| {d['arch']} | {d['shape']} | {fmt(d['t_compute_s'])} "
+              f"| {fmt(d['t_memory_s'])} | {fmt(d['t_collective_s'])} "
+              f"| {d['dominant']} | {fmt(d['useful_flops_ratio'])} "
+              f"| {fmt(d['roofline_fraction'], 4)} |")
+    print("\n### Multi-pod (2x16x16) shard-proof (compile + memory per chip; "
+          "costs uncorrected — scan bodies counted once)\n")
+    print("| arch | shape | compile (s) | args GB/chip | temp GB/chip | dominant(raw) |")
+    print("|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"])):
+        if d["mesh"] != "pod2x16x16":
+            continue
+        print(f"| {d['arch']} | {d['shape']} | {fmt(d['compile_s'], 1)} "
+              f"| {fmt(d['hbm_per_chip_gb'], 2)} "
+              f"| {fmt(d['temp_per_chip_gb'], 2)} | {d['dominant']} |")
+    print("\n### Skipped cells\n")
+    for s in skips:
+        if s["mesh"] == "pod16x16":
+            print(f"- {s['arch']} x {s['shape']}: {s['skip_reason']}")
+    print("\n### Perf-variant cells\n")
+    print("| arch | shape | variant | tC (s) | tM (s) | tX (s) | dominant | frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"], d["label"])):
+        if d["label"] == "baseline" or d["mesh"] != "pod16x16":
+            continue
+        print(f"| {d['arch']} | {d['shape']} | {d['label']} "
+              f"| {fmt(d['t_compute_s'])} | {fmt(d['t_memory_s'])} "
+              f"| {fmt(d['t_collective_s'])} | {d['dominant']} "
+              f"| {fmt(d['roofline_fraction'], 4)} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_peak_memory      Fig. 10/15  peak footprint vs TFLite order
+  bench_offchip_traffic  Fig. 11     Belady off-chip traffic sweep
+  bench_footprint_trace  Fig. 12     SwiftNet-A running footprint
+  bench_scheduling_time  Fig. 13/T2  D&C + soft-budget ablation
+  bench_roofline         (ours)      dry-run roofline table (§Roofline)
+  bench_jaxpr_sched      (ours)      SERENITY-on-jaxpr liveness gains
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import (
+        bench_footprint_trace,
+        bench_jaxpr_sched,
+        bench_offchip_traffic,
+        bench_peak_memory,
+        bench_roofline,
+        bench_scheduling_time,
+    )
+
+    modules = [
+        bench_peak_memory,
+        bench_offchip_traffic,
+        bench_footprint_trace,
+        bench_scheduling_time,
+        bench_roofline,
+        bench_jaxpr_sched,
+    ]
+    rows: list[tuple] = []
+    failed = 0
+    for mod in modules:
+        try:
+            mod.run(rows)
+        except Exception:
+            failed += 1
+            print(f"# BENCH FAILED: {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        raise SystemExit(f"{failed} bench modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: SERENITY in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Schedule an irregularly wired cell for minimal peak activation memory.
+2. Rewrite concat+conv patterns and re-schedule (paper Fig. 9).
+3. Apply the same scheduler to a JAX function's jaxpr (framework feature).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedule
+from repro.core.jax_bridge import serenity_transform
+from repro.graphs import swiftnet_cell
+
+
+def main() -> None:
+    # -- 1/2: the paper's pipeline on an edge-style NAS cell ----------------
+    g = swiftnet_cell("A")
+    plain = schedule(g, rewrite=False)
+    rew = schedule(g, rewrite=True)
+    kahn = plain.baseline_peaks["kahn"]
+    print(f"SwiftNet cell A ({len(g)} nodes)")
+    print(f"  TFLite-order peak : {kahn/1024:8.1f} KB")
+    print(f"  SERENITY schedule : {plain.peak_bytes/1024:8.1f} KB "
+          f"({kahn/plain.peak_bytes:.2f}x)")
+    print(f"  + graph rewriting : {rew.peak_bytes/1024:8.1f} KB "
+          f"({kahn/rew.peak_bytes:.2f}x)")
+    print(f"  arena (allocator) : {rew.arena_bytes/1024:8.1f} KB")
+
+    # -- 3: the same optimization on a JAX computation -----------------------
+    def nas_like(x):
+        branches = []
+        for i in range(6):
+            h = jnp.tanh(x * (i + 1.0))
+            h = h @ jnp.ones((x.shape[-1], 4 * x.shape[-1]), x.dtype)
+            h = jax.nn.relu(h) @ jnp.ones((4 * x.shape[-1], 16), x.dtype)
+            branches.append(h)
+        return jnp.sum(jnp.concatenate(branches, -1) ** 2)
+
+    x = jnp.ones((64, 128), jnp.float32)
+    fn = serenity_transform(nas_like)
+    y = jax.jit(fn)(x)
+    r = fn.report
+    print("\njaxpr scheduling (same algorithm, one level down):")
+    print(f"  {r.n_eqns} equations; traced-order live peak "
+          f"{r.original_peak/1024:.0f} KB -> {r.optimal_peak/1024:.0f} KB "
+          f"({r.reduction_vs_original:.2f}x), output preserved: "
+          f"{bool(jnp.allclose(y, nas_like(x)))}")
+
+
+if __name__ == "__main__":
+    main()

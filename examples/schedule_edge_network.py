@@ -1,0 +1,36 @@
+"""Paper walk-through: schedule every evaluation network end to end,
+including the adaptive soft-budget trajectory and the Belady off-chip
+traffic sweep (Figs. 8, 10, 11).
+
+    PYTHONPATH=src python examples/schedule_edge_network.py
+"""
+
+from repro.core import schedule, simulate_traffic
+from repro.graphs import BENCHMARK_GRAPHS
+
+
+def main() -> None:
+    for name, fn in BENCHMARK_GRAPHS.items():
+        g = fn()
+        res = schedule(g, rewrite=True, state_quota=4000)
+        kahn = res.baseline_peaks["kahn"]
+        print(f"\n=== {name} ({len(g)} nodes -> {len(res.graph)} after "
+              f"rewriting, {len(res.segments)} segments)")
+        print(f"  peak: kahn {kahn/1024:.0f} KB -> serenity "
+              f"{res.peak_bytes/1024:.0f} KB ({kahn/res.peak_bytes:.2f}x); "
+              f"arena {res.arena_bytes/1024:.0f} KB; "
+              f"sched time {res.wall_time_s*1e3:.1f} ms")
+        for st in res.budget_stats:
+            traj = " -> ".join(f"{t//1024}KB:{f}" for t, f in
+                               st.tau_trajectory)
+            print(f"  soft-budget trajectory: {traj}")
+        cap = res.peak_bytes
+        t = simulate_traffic(res.graph, res.order, cap,
+                             include_weights=False)
+        print(f"  off-chip traffic at {cap//1024} KB on-chip: "
+              f"{t.total_bytes//1024} KB "
+              f"({'fits entirely' if t.fits_entirely else 'spills'})")
+
+
+if __name__ == "__main__":
+    main()

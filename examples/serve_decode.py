@@ -1,0 +1,21 @@
+"""Batched serving example: prefill + greedy decode with the SERENITY
+arena-planned decode state.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+
+Uses the reduced (smoke) config of any assigned architecture so it runs on
+CPU; the identical driver serves the full config on a TPU mesh
+(launch/serve.py --mesh single).
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    if "--smoke" not in sys.argv:
+        sys.argv.append("--smoke")
+    if not any(a.startswith("--arch") for a in sys.argv):
+        sys.argv += ["--arch", "llama3.2-1b"]
+    serve_main()

@@ -1,0 +1,98 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model on the
+synthetic pipeline, with checkpoint/restart and straggler accounting.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_tiny_lm.py --preset 25m  --steps 120
+
+(CPU container note: the 100m preset is the assignment's "train ~100M model"
+driver; the 25m preset covers quick verification.  Both exercise the same
+code path as launch/train.py on a TPU mesh.)
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.data import DataPipeline
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models.zoo import build_model
+from repro.runtime import FaultTolerantLoop
+
+PRESETS = {
+    # ~104M params: 10L x d640 x ff2560, 32k vocab
+    "100m": dict(n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+                 head_dim=64, d_ff=2560, vocab_size=32_000, batch=4,
+                 seq=256),
+    # ~26M params for quick runs
+    "25m": dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=3,
+                head_dim=64, d_ff=1536, vocab_size=8_192, batch=4,
+                seq=128),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="25m")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+
+    p = dict(PRESETS[args.preset])
+    batch_size, seq = p.pop("batch"), p.pop("seq")
+    cfg = dataclasses.replace(
+        C.get("llama3.2-1b"), name=f"llama-{args.preset}", **p
+    )
+    model = build_model(cfg)
+    opt = make_optimizer(cfg, lr=args.lr)
+    step_fn = jax.jit(
+        make_train_step(model, opt, None, peak_lr=args.lr,
+                        warmup=args.steps // 10, total_steps=args.steps),
+        donate_argnums=(0,),
+    )
+
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{batch_size}x{seq} tokens/step")
+    state = {"params": params, "opt": opt.init(params)}
+
+    pipe = DataPipeline(cfg=cfg, seq_len=seq, global_batch=batch_size)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    start = latest_step(args.ckpt_dir) or 0
+    if start:
+        print(f"[train] resuming from step {start}")
+        state = restore(args.ckpt_dir, start, state)
+
+    losses = []
+    t0 = time.perf_counter()
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % 20 == 0:
+            dt = time.perf_counter() - t0
+            print(f"[train] step {step:4d} loss {losses[-1]:.4f} "
+                  f"({step * batch_size * seq / max(dt, 1e-9):.0f} tok/s)")
+
+    loop = FaultTolerantLoop(
+        step_fn=lambda s, b: step_fn(
+            s, {k: jnp.asarray(v) for k, v in b.items()}
+        ),
+        ckpt_manager=ckpt,
+        batch_iter_factory=pipe.iter_from,
+        ckpt_every=max(args.steps // 4, 25),
+    )
+    state, end = loop.run(state, start, args.steps, on_metrics=on_metrics)
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"[train] finished step {end}: loss {first:.4f} -> {last:.4f} "
+          f"(improved: {last < first})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.checkpoint.ckpt import (
+    CheckpointManager,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

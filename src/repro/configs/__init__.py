@@ -1,0 +1,54 @@
+"""Config registry: ``get(name)`` -> ArchConfig, ``smoke(name)`` -> reduced.
+
+Assigned architectures (exact published dims, see each module's citation):
+  gemma-7b llama3.2-1b granite-20b starcoder2-7b chameleon-34b
+  granite-moe-3b-a800m deepseek-v3-671b rwkv6-7b seamless-m4t-medium
+  recurrentgemma-2b
+plus the paper's own edge benchmark graphs under ``serenity_edge``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, ShardingRules
+
+_MODULES = {
+    "gemma-7b": "gemma_7b",
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-20b": "granite_20b",
+    "starcoder2-7b": "starcoder2_7b",
+    "chameleon-34b": "chameleon_34b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "rwkv6-7b": "rwkv6_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ArchConfig:
+    return _mod(name).CONFIG
+
+
+def smoke(name: str) -> ArchConfig:
+    return _mod(name).smoke_config()
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "ArchConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "ShardingRules",
+    "get",
+    "smoke",
+]

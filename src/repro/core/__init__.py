@@ -1,0 +1,63 @@
+"""SERENITY core: memory-aware scheduling of irregularly wired neural networks.
+
+Public API:
+
+    Graph, Node, simulate_schedule          -- dataflow IR + footprint model
+    dp_schedule, brute_force_schedule       -- Algorithm 1 (+ oracle for tests)
+    adaptive_budget_schedule                -- Algorithm 2
+    partition, find_separators              -- divide & conquer
+    rewrite_graph                           -- identity graph rewriting
+    plan_arena                              -- TFLite-style linear arena
+    simulate_traffic                        -- Belady off-chip traffic model
+    schedule                                -- end-to-end pipeline (Fig. 4)
+"""
+
+from repro.core.allocator import ArenaPlan, plan_arena
+from repro.core.budget import adaptive_budget_schedule
+from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
+from repro.core.heuristics import (
+    BASELINES,
+    dfs_schedule,
+    greedy_schedule,
+    kahn_schedule,
+)
+from repro.core.partition import Segment, find_separators, partition
+from repro.core.rewriter import RewriteReport, rewrite_graph
+from repro.core.scheduler import (
+    NoSolutionError,
+    ScheduleResult,
+    SearchTimeout,
+    brute_force_schedule,
+    dp_schedule,
+)
+from repro.core.serenity import SerenityResult, schedule
+from repro.core.traffic import TrafficResult, simulate_traffic
+
+__all__ = [
+    "ArenaPlan",
+    "BASELINES",
+    "Graph",
+    "GraphError",
+    "Node",
+    "NoSolutionError",
+    "RewriteReport",
+    "ScheduleResult",
+    "SearchTimeout",
+    "Segment",
+    "SerenityResult",
+    "SimResult",
+    "TrafficResult",
+    "adaptive_budget_schedule",
+    "brute_force_schedule",
+    "dfs_schedule",
+    "dp_schedule",
+    "find_separators",
+    "greedy_schedule",
+    "kahn_schedule",
+    "partition",
+    "plan_arena",
+    "rewrite_graph",
+    "schedule",
+    "simulate_schedule",
+    "simulate_traffic",
+]

@@ -1,0 +1,111 @@
+"""TFLite-style linear memory arena (simple_memory_arena reimplementation).
+
+The paper's evaluation (Fig. 12a) measures footprint *through the allocator*:
+tensors get byte offsets in one linear arena; the arena's high watermark is
+the reported peak.  TFLite's ``SimpleMemoryArena`` allocates in execution
+order with first-fit-by-offset against the currently live allocations; we
+reproduce that policy (plus an optional best-fit variant) on the live
+intervals implied by a schedule.
+
+Alias chains (in-place rewiring from the graph rewriter) share one buffer:
+the union of the members' live intervals, sized by the largest member.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class Allocation:
+    node_ids: list[int]       # members of the alias chain sharing this buffer
+    offset: int
+    size: int
+    t_alloc: int              # schedule index of first allocation
+    t_free: int               # schedule index after last use (exclusive)
+
+
+@dataclasses.dataclass
+class ArenaPlan:
+    allocations: list[Allocation]
+    arena_bytes: int          # high watermark == required arena size
+
+    def offset_of(self, node_id: int) -> int:
+        for a in self.allocations:
+            if node_id in a.node_ids:
+                return a.offset
+        raise KeyError(node_id)
+
+
+def plan_arena(
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int] = (),
+    policy: Literal["first_fit", "best_fit"] = "first_fit",
+) -> ArenaPlan:
+    n = len(g)
+    pos = {u: i for i, u in enumerate(order)}
+    for p in preplaced:
+        pos[p] = -1
+
+    # --- union alias chains into storage roots --------------------------------
+    root = list(range(n))
+
+    def find(x: int) -> int:
+        while root[x] != x:
+            root[x] = root[root[x]]
+            x = root[x]
+        return x
+
+    for u in order:
+        for p in g.nodes[u].alias_preds:
+            root[find(p)] = find(u)
+
+    members: dict[int, list[int]] = {}
+    for u in list(preplaced) + list(order):
+        members.setdefault(find(u), []).append(u)
+
+    # --- live interval per storage root ---------------------------------------
+    horizon = len(order)
+    items: list[Allocation] = []
+    for r, mem in members.items():
+        t_alloc = min(pos[m] for m in mem)
+        last_use = t_alloc
+        is_output = False
+        for m in mem:
+            consumers = [s for s in g.succs[m] if s in pos]
+            if not consumers:
+                is_output = True
+            for s in consumers:
+                last_use = max(last_use, pos[s])
+        t_free = horizon + 1 if is_output else last_use + 1
+        size = max(g.sizes[m] for m in mem)
+        items.append(Allocation([*sorted(mem)], -1, size, t_alloc, t_free))
+
+    # --- allocate in schedule order against live set ---------------------------
+    items.sort(key=lambda a: (a.t_alloc, -a.size))
+    live: list[Allocation] = []
+    watermark = 0
+    for it in items:
+        live = [a for a in live if a.t_free > it.t_alloc]
+        gaps = sorted(live, key=lambda a: a.offset)
+        candidates: list[int] = []
+        cursor = 0
+        for a in gaps:
+            if a.offset - cursor >= it.size:
+                candidates.append(cursor)
+            cursor = max(cursor, a.offset + a.size)
+        candidates.append(cursor)
+        if policy == "first_fit":
+            it.offset = candidates[0]
+        else:  # best_fit: tightest gap
+            def gap_len(off: int) -> int:
+                following = [a.offset for a in gaps if a.offset >= off + it.size]
+                return (min(following) - off) if following else 1 << 60
+            it.offset = min(candidates, key=gap_len)
+        live.append(it)
+        watermark = max(watermark, it.offset + it.size)
+    return ArenaPlan(allocations=items, arena_bytes=watermark)

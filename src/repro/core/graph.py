@@ -1,0 +1,275 @@
+"""Dataflow-graph intermediate representation for SERENITY scheduling.
+
+The IR mirrors the paper's augmented graph (Section 3): every node carries
+operation type, input/output edges, output shape and memory cost.  The memory
+model is exactly Algorithm 1's:
+
+  * scheduling node ``u`` allocates ``u.size_bytes`` (its output activation),
+  * the running footprint ``mu`` is bumped, the peak ``mu_peak`` updated,
+  * any predecessor whose consumers are now all scheduled is deallocated.
+
+Two extensions (documented in DESIGN.md §3) generalize the model without
+changing it on paper graphs:
+
+  * ``alias_preds`` — in-place/viewing ops (the rewriter's accumulating
+    partial-conv and slice-writing concat) whose output storage subsumes the
+    listed predecessors' storage.  Scheduling such a node adds
+    ``size - sum(aliased sizes)`` bytes and the aliased predecessors are never
+    separately freed (their storage lives on inside the node's output).
+  * ``preplaced`` nodes — used by divide-and-conquer: boundary tensors that are
+    already resident when a sub-schedule starts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Mapping, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One operation in the dataflow graph."""
+
+    id: int
+    name: str
+    op: str
+    size_bytes: int                      # bytes of the node's output activation
+    preds: tuple[int, ...] = ()
+    alias_preds: frozenset[int] = frozenset()
+    weight_bytes: int = 0                # parameter bytes read by this op (traffic model)
+    meta: tuple[tuple[str, object], ...] = ()
+
+    def replace(self, **kw) -> "Node":
+        return dataclasses.replace(self, **kw)
+
+
+class GraphError(ValueError):
+    pass
+
+
+class Graph:
+    """An immutable DAG of :class:`Node` with O(1) pred/succ lookups.
+
+    Node ids must be dense ``0..n-1``.  Edges are implied by ``node.preds``.
+    """
+
+    def __init__(self, nodes: Sequence[Node], name: str = "graph"):
+        nodes = sorted(nodes, key=lambda n: n.id)
+        if [n.id for n in nodes] != list(range(len(nodes))):
+            raise GraphError("node ids must be dense 0..n-1")
+        self.name = name
+        self.nodes: tuple[Node, ...] = tuple(nodes)
+        n = len(nodes)
+        succs: list[list[int]] = [[] for _ in range(n)]
+        for nd in nodes:
+            for p in nd.preds:
+                if not (0 <= p < n):
+                    raise GraphError(f"node {nd.id} has out-of-range pred {p}")
+                if p == nd.id:
+                    raise GraphError(f"self-loop at node {nd.id}")
+                succs[p].append(nd.id)
+        self.succs: tuple[tuple[int, ...], ...] = tuple(tuple(s) for s in succs)
+        self.sizes: tuple[int, ...] = tuple(nd.size_bytes for nd in nodes)
+        # Bitmask helpers for the DP scheduler.
+        self.pred_mask: tuple[int, ...] = tuple(
+            _mask(nd.preds) for nd in nodes
+        )
+        self.succ_mask: tuple[int, ...] = tuple(_mask(s) for s in self.succs)
+        self._validate()
+
+    # -- construction helpers ------------------------------------------------
+
+    @staticmethod
+    def build(specs: Iterable[Mapping], name: str = "graph") -> "Graph":
+        """Build from dicts with keys name/op/size_bytes/preds[/alias_preds]."""
+        nodes = []
+        for i, s in enumerate(specs):
+            nodes.append(
+                Node(
+                    id=i,
+                    name=s.get("name", f"n{i}"),
+                    op=s.get("op", "op"),
+                    size_bytes=int(s["size_bytes"]),
+                    preds=tuple(s.get("preds", ())),
+                    alias_preds=frozenset(s.get("alias_preds", ())),
+                    weight_bytes=int(s.get("weight_bytes", 0)),
+                    meta=tuple(sorted(dict(s.get("meta", {})).items())),
+                )
+            )
+        return Graph(nodes, name=name)
+
+    # -- basic queries ---------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(nd.preds) for nd in self.nodes)
+
+    def entries(self) -> tuple[int, ...]:
+        return tuple(nd.id for nd in self.nodes if not nd.preds)
+
+    def exits(self) -> tuple[int, ...]:
+        return tuple(nd.id for nd in self.nodes if not self.succs[nd.id])
+
+    def total_bytes(self) -> int:
+        return sum(self.sizes)
+
+    def topo_order(self) -> list[int]:
+        """Kahn order with FIFO tie-break on node id (deterministic)."""
+        from collections import deque
+
+        indeg = [len(nd.preds) for nd in self.nodes]
+        q = deque(i for i in range(len(self)) if indeg[i] == 0)
+        order: list[int] = []
+        while q:
+            u = q.popleft()
+            order.append(u)
+            for v in self.succs[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    q.append(v)
+        if len(order) != len(self):
+            raise GraphError("graph has a cycle")
+        return order
+
+    def is_topological(self, order: Sequence[int]) -> bool:
+        pos = {u: i for i, u in enumerate(order)}
+        if len(pos) != len(self):
+            return False
+        return all(pos[p] < pos[nd.id] for nd in self.nodes for p in nd.preds)
+
+    # -- structure -------------------------------------------------------------
+
+    def ancestors_masks(self) -> list[int]:
+        """Bitmask of strict ancestors per node (O(V·E/64) via topo DP)."""
+        anc = [0] * len(self)
+        for u in self.topo_order():
+            m = 0
+            for p in self.nodes[u].preds:
+                m |= anc[p] | (1 << p)
+            anc[u] = m
+        return anc
+
+    def induced_subgraph(
+        self, node_ids: Sequence[int]
+    ) -> tuple["Graph", dict[int, int]]:
+        """Subgraph on ``node_ids``; edges from outside are dropped.
+
+        Returns (subgraph, old_id -> new_id map).
+        """
+        idmap = {old: new for new, old in enumerate(sorted(node_ids))}
+        nodes = []
+        for old in sorted(node_ids):
+            nd = self.nodes[old]
+            preds = tuple(idmap[p] for p in nd.preds if p in idmap)
+            alias = frozenset(idmap[p] for p in nd.alias_preds if p in idmap)
+            nodes.append(
+                Node(
+                    id=idmap[old],
+                    name=nd.name,
+                    op=nd.op,
+                    size_bytes=nd.size_bytes,
+                    preds=preds,
+                    alias_preds=alias,
+                    weight_bytes=nd.weight_bytes,
+                    meta=nd.meta,
+                )
+            )
+        return Graph(nodes, name=f"{self.name}.sub"), idmap
+
+    # -- validation ------------------------------------------------------------
+
+    def _validate(self) -> None:
+        self.topo_order()  # raises on cycles
+        for nd in self.nodes:
+            if nd.size_bytes < 0:
+                raise GraphError(f"negative size at node {nd.id}")
+            extra = nd.alias_preds - set(nd.preds)
+            if extra:
+                raise GraphError(f"alias_preds {extra} of node {nd.id} not preds")
+            for p in nd.alias_preds:
+                if len(self.succs[p]) != 1:
+                    raise GraphError(
+                        f"node {nd.id} aliases pred {p} which has "
+                        f"{len(self.succs[p])} consumers (must be 1)"
+                    )
+
+    def __repr__(self) -> str:
+        return (
+            f"Graph({self.name!r}, nodes={len(self)}, edges={self.n_edges}, "
+            f"bytes={self.total_bytes()})"
+        )
+
+
+def _mask(ids: Iterable[int]) -> int:
+    m = 0
+    for i in ids:
+        m |= 1 << i
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Memory simulation (the single source of truth for the footprint model).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimResult:
+    peak_bytes: int
+    trace: list[int]          # footprint after each scheduled node (incl. deallocs)
+    final_bytes: int
+
+
+def simulate_schedule(
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int] = (),
+    keep_outputs: bool = True,
+) -> SimResult:
+    """Replay ``order`` through the paper's alloc/dealloc model.
+
+    ``preplaced`` nodes start resident (their bytes count toward mu_0) and are
+    freed after their last in-schedule consumer, like any other tensor.
+    ``keep_outputs``: tensors with no consumers stay resident to the end
+    (graph outputs must survive), matching the paper's trace in Fig. 12(b).
+    """
+    n = len(g)
+    pre = set(preplaced)
+    sched_set = set(order)
+    if sched_set & pre:
+        raise GraphError("schedule and preplaced overlap")
+    # remaining consumers *within this schedule* for every producer
+    remaining = [0] * n
+    for u in order:
+        for p in g.nodes[u].preds:
+            remaining[p] += 1
+    resident = [False] * n
+    mu = 0
+    for p in pre:
+        resident[p] = True
+        mu += g.sizes[p]
+    peak = mu
+    trace: list[int] = []
+    for u in order:
+        nd = g.nodes[u]
+        for p in nd.preds:
+            if not resident[p]:
+                raise GraphError(
+                    f"schedule not topological: node {u} needs {p} "
+                    f"which is not resident"
+                )
+        alias_bytes = sum(g.sizes[p] for p in nd.alias_preds)
+        mu += g.sizes[u] - alias_bytes
+        resident[u] = True
+        peak = max(peak, mu)
+        for p in nd.preds:
+            remaining[p] -= 1
+            if remaining[p] == 0 and resident[p]:
+                resident[p] = False
+                if p not in nd.alias_preds:   # aliased storage lives on inside u
+                    mu -= g.sizes[p]
+        trace.append(mu)
+    del keep_outputs  # outputs (no consumers) are never freed by construction
+    return SimResult(peak_bytes=peak, trace=trace, final_bytes=mu)

@@ -1,0 +1,184 @@
+"""SERENITY <-> JAX integration: schedule jaxprs for minimal live memory.
+
+The paper schedules operator graphs of edge networks; a jaxpr is the same
+thing one level down — a DAG of equations whose issue order determines how
+long each output buffer stays live.  XLA's buffer assigner honours (unfused)
+program order, so reordering equations with the paper's DP lowers the
+activation high-watermark exactly the way the paper lowers TFLite's arena
+peak.
+
+Public API
+----------
+jaxpr_to_graph(closed_jaxpr)          -> (Graph, eqn_nodes)
+schedule_jaxpr(closed_jaxpr, ...)     -> (reordered ClosedJaxpr, report)
+serenity_transform(fn)(*args)         -> fn with memory-optimal eqn order
+analyze_fn(fn, *args)                 -> footprint report (no transform)
+memory_aware_remat(fn, budget, *args) -> fn or jax.checkpoint(fn) chosen by
+                                         the scheduler's footprint analysis
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core
+from jax._src.core import eval_jaxpr as _eval_jaxpr
+
+from repro.core.graph import Graph, simulate_schedule
+from repro.core.heuristics import kahn_schedule
+from repro.core.scheduler import dp_schedule
+from repro.core.budget import adaptive_budget_schedule
+from repro.core.scheduler import SearchTimeout
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def jaxpr_to_graph(closed) -> tuple[Graph, list[int]]:
+    """Lift a ClosedJaxpr into the SERENITY IR.
+
+    Node 0..n_in-1: the jaxpr invars (op='input').  One node per equation
+    afterwards; the node's cost is the sum of its output aval bytes.
+    Returns (graph, eqn_node_ids) where eqn_node_ids[i] is the node id of
+    equation i.
+    """
+    jaxpr = closed.jaxpr
+    specs: list[dict] = []
+    producer: dict[Any, int] = {}
+
+    for v in jaxpr.invars:
+        nid = len(specs)
+        specs.append(dict(name=f"in{nid}", op="input",
+                          size_bytes=_aval_bytes(v.aval), preds=[]))
+        producer[v] = nid
+    eqn_nodes: list[int] = []
+    for i, eqn in enumerate(jaxpr.eqns):
+        preds = []
+        for v in eqn.invars:
+            if isinstance(v, core.Literal):
+                continue
+            if v in producer:
+                preds.append(producer[v])
+        size = sum(_aval_bytes(o.aval) for o in eqn.outvars)
+        nid = len(specs)
+        specs.append(dict(
+            name=f"{eqn.primitive.name}.{i}",
+            op=eqn.primitive.name,
+            size_bytes=size,
+            preds=sorted(set(preds)),
+        ))
+        eqn_nodes.append(nid)
+        for o in eqn.outvars:
+            producer[o] = nid
+    return Graph.build(specs, name="jaxpr"), eqn_nodes
+
+
+@dataclasses.dataclass
+class JaxprScheduleReport:
+    n_eqns: int
+    original_peak: int
+    kahn_peak: int
+    optimal_peak: int
+    exact: bool                    # False if the beam fallback was used
+    order: list[int]
+
+    @property
+    def reduction_vs_original(self) -> float:
+        return self.original_peak / max(self.optimal_peak, 1)
+
+
+def schedule_jaxpr(closed, *, state_quota: int = 4000,
+                   beam_fallback: bool = True):
+    """Reorder the equations of ``closed`` into a memory-optimal order."""
+    g, eqn_nodes = jaxpr_to_graph(closed)
+    node_to_eqn = {n: i for i, n in enumerate(eqn_nodes)}
+
+    # footprint of the original (trace) order — itself a feasible schedule,
+    # so it seeds the soft budget (tighter than Kahn on traced programs)
+    orig_order = list(range(len(g)))
+    orig = simulate_schedule(g, orig_order)
+    kahn = kahn_schedule(g)
+    tau = min(orig.peak_bytes, kahn.peak_bytes)
+
+    exact = True
+    try:
+        res = dp_schedule(g, budget=tau, state_quota=state_quota)
+    except SearchTimeout:
+        if not beam_fallback:
+            raise
+        # beam runs UNBUDGETED: beam width alone bounds the search — a
+        # budget would dead-end it (low-peak states it keeps can all hit
+        # the budget wall while the feasible path got evicted)
+        exact = False
+        res = dp_schedule(g, state_quota=state_quota, on_quota="beam")
+
+    candidates = [
+        (orig.peak_bytes, orig_order),
+        (kahn.peak_bytes, kahn.order),
+        (res.peak_bytes, res.order),
+    ]
+    best_peak, best_order = min(candidates, key=lambda c: c[0])
+    new_eqns = [closed.jaxpr.eqns[node_to_eqn[n]] for n in best_order
+                if n in node_to_eqn]
+    assert len(new_eqns) == len(closed.jaxpr.eqns)
+    new_jaxpr = closed.jaxpr.replace(eqns=new_eqns)
+    new_closed = core.ClosedJaxpr(new_jaxpr, closed.consts)
+    report = JaxprScheduleReport(
+        n_eqns=len(new_eqns),
+        original_peak=orig.peak_bytes,
+        kahn_peak=kahn.peak_bytes,
+        optimal_peak=best_peak,
+        exact=exact,
+        order=list(best_order),
+    )
+    return new_closed, report
+
+
+def serenity_transform(fn: Callable, **kw) -> Callable:
+    """Return ``fn`` with its jaxpr equations in memory-optimal order.
+    The returned callable also exposes ``.report`` after first call."""
+    def wrapped(*args, **kwargs):
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        new_closed, report = schedule_jaxpr(closed, **kw)
+        wrapped.report = report
+        flat, _ = jax.tree.flatten((args, kwargs))
+        out = _eval_jaxpr(new_closed.jaxpr, new_closed.consts, *flat)
+        out_tree = jax.tree.structure(jax.eval_shape(fn, *args, **kwargs))
+        return jax.tree.unflatten(out_tree, out)
+
+    wrapped.report = None
+    return wrapped
+
+
+def analyze_fn(fn: Callable, *args, **kw) -> JaxprScheduleReport:
+    closed = jax.make_jaxpr(fn)(*args)
+    _, report = schedule_jaxpr(closed, **kw)
+    return report
+
+
+def memory_aware_remat(fn: Callable, budget_bytes: int, *abstract_args,
+                       **kw) -> tuple[Callable, dict]:
+    """Budget-driven remat choice (the paper's cap, our policy knob):
+
+    analyze ``fn``'s optimal schedule footprint; if even the optimal order
+    exceeds the budget, return ``jax.checkpoint(fn)`` (trading recompute for
+    liveness), else return ``fn`` scheduled but unrematerialized.
+    """
+    report = analyze_fn(fn, *abstract_args, **kw)
+    decision = {
+        "optimal_peak": report.optimal_peak,
+        "budget": budget_bytes,
+        "remat": report.optimal_peak > budget_bytes,
+        "exact": report.exact,
+    }
+    if decision["remat"]:
+        return jax.checkpoint(fn), decision
+    return fn, decision

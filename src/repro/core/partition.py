@@ -1,0 +1,84 @@
+"""Divide-and-conquer over single-node separators (paper Section 3.2, Fig. 7).
+
+Irregularly wired networks from NAS stack single-input/single-output cells
+into an hourglass topology.  A node ``v`` is a *separator* iff
+
+  (a) every other node is either a strict ancestor or strict descendant of
+      ``v``            (ancestors ∪ {v} ∪ descendants == V), and
+  (b) no edge jumps across ``v`` (from a strict ancestor directly to a strict
+      descendant) — otherwise that edge's tensor stays live across the cut and
+      the sub-schedules would not compose memory-independently.
+
+With both conditions, any schedule factors as (ancestors..., v, descendants...)
+and the only tensor live at the cut is v's output, so concatenating per-part
+optimal schedules is globally optimal (Wilken et al., 2000 — the argument the
+paper invokes).
+
+``partition(g)`` returns the list of segments (each a list of node ids in the
+original graph) such that segment k+1 sees segment k's cut node as a
+*preplaced* boundary input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class Segment:
+    node_ids: list[int]          # nodes scheduled inside this segment
+    boundary_in: list[int]       # preplaced producers from earlier segments
+
+
+def find_separators(g: Graph) -> list[int]:
+    n = len(g)
+    anc = g.ancestors_masks()
+    full = (1 << n) - 1
+    desc = [0] * n
+    for u in range(n):
+        m = anc[u]  # mark u as a descendant of each of its ancestors
+        for p in range(n):
+            if m >> p & 1:
+                desc[p] |= 1 << u
+    seps = []
+    topo = g.topo_order()
+    for v in topo:
+        cover = anc[v] | desc[v] | (1 << v)
+        if cover != full:
+            continue
+        # (b) no ancestor->descendant edge bypassing v
+        ok = True
+        for b in range(n):
+            if desc[v] >> b & 1:
+                if g.pred_mask[b] & anc[v]:
+                    ok = False
+                    break
+        if ok:
+            seps.append(v)
+    return seps
+
+
+def partition(g: Graph) -> list[Segment]:
+    """Split at every separator; segments are contiguous topo slices."""
+    seps = find_separators(g)
+    if not seps:
+        return [Segment(node_ids=g.topo_order(), boundary_in=[])]
+    anc = g.ancestors_masks()
+    # order separators by ancestor-count (= topological position)
+    seps.sort(key=lambda v: bin(anc[v]).count("1"))
+    segments: list[Segment] = []
+    placed = 0          # bitmask of nodes already assigned
+    boundary: list[int] = []
+    for v in seps:
+        seg_mask = (anc[v] | (1 << v)) & ~placed
+        ids = [u for u in range(len(g)) if seg_mask >> u & 1]
+        if ids:
+            segments.append(Segment(node_ids=ids, boundary_in=list(boundary)))
+            placed |= seg_mask
+            boundary = [v]
+    rest = [u for u in range(len(g)) if not placed >> u & 1]
+    if rest:
+        segments.append(Segment(node_ids=rest, boundary_in=list(boundary)))
+    return segments

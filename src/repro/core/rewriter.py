@@ -1,0 +1,222 @@
+"""Identity graph rewriting (paper Section 3.3, Eq. 3-8, Fig. 9).
+
+Two paper patterns plus one LM-era analogue (DESIGN.md §4):
+
+* ``concat -> conv``        =>  accumulating *partial convs*  (channel-wise
+  partitioning, Eq. 3-6).  Each branch input x_i is convolved with its channel
+  slice of the kernel and accumulated in place into the output buffer, so the
+  concatenated tensor never materializes:  cost  sum(x_i) + y  ->  max(x_i) + y.
+
+* ``concat -> depthconv``   =>  *partial depthconvs* writing into their slice
+  of the output (kernel-wise partitioning, Eq. 7-8).  The final ``concat_view``
+  node aliases all partial outputs (slice-writes into one buffer, zero copy).
+
+* ``fused_proj -> split``   =>  independent projections (distributive identity
+  on the output-channel axis — the GeGLU/QKV analogue used on LM graphs).
+
+All rewrites preserve mathematical identity; numeric equivalence of the conv
+patterns is asserted against ``jax.lax`` convolutions in
+``tests/test_rewriter_numeric.py``.
+
+The rewriter is pure pattern matching over the IR: it returns a new Graph and
+a report of the applied matches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph import Graph, Node
+
+
+@dataclasses.dataclass
+class RewriteReport:
+    n_concat_conv: int = 0
+    n_concat_depthconv: int = 0
+    n_fused_proj_split: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.n_concat_conv + self.n_concat_depthconv + self.n_fused_proj_split
+
+
+def _rebuild(specs: list[dict], name: str) -> Graph:
+    return Graph.build(specs, name=name)
+
+
+def rewrite_graph(g: Graph) -> tuple[Graph, RewriteReport]:
+    """Apply all identity rewrites bottom-up until fixpoint (single pass is
+    enough for the paper's patterns: matches never create new matches)."""
+    report = RewriteReport()
+    # Mutable spec list; node ids remapped at the end.
+    specs: list[dict] = []
+    for nd in g.nodes:
+        specs.append(
+            dict(
+                name=nd.name,
+                op=nd.op,
+                size_bytes=nd.size_bytes,
+                preds=list(nd.preds),
+                alias_preds=set(nd.alias_preds),
+                weight_bytes=nd.weight_bytes,
+                meta=dict(nd.meta),
+                dead=False,
+            )
+        )
+    succs = [list(s) for s in g.succs]
+
+    def single_consumer(i: int) -> int | None:
+        alive = [s for s in succs[i] if not specs[s]["dead"]]
+        return alive[0] if len(alive) == 1 else None
+
+    next_id = len(specs)
+
+    def add_node(spec: dict) -> int:
+        nonlocal next_id
+        spec.setdefault("alias_preds", set())
+        spec.setdefault("weight_bytes", 0)
+        spec.setdefault("meta", {})
+        spec["dead"] = False
+        specs.append(spec)
+        succs.append([])
+        for p in spec["preds"]:
+            succs[p].append(next_id)
+        i = next_id
+        next_id += 1
+        return i
+
+    def redirect(old: int, new: int) -> None:
+        """Point all consumers of `old` at `new`."""
+        for s in list(succs[old]):
+            if specs[s]["dead"]:
+                continue
+            specs[s]["preds"] = [new if p == old else p for p in specs[s]["preds"]]
+            specs[s]["alias_preds"] = {
+                new if p == old else p for p in specs[s]["alias_preds"]
+            }
+            succs[new].append(s)
+        succs[old] = []
+
+    for cid in range(len(g)):
+        c = specs[cid]
+        if c["dead"] or c["op"] != "concat" or len(c["preds"]) < 2:
+            continue
+        consumer = single_consumer(cid)
+        if consumer is None:
+            continue
+        k = specs[consumer]
+        if k["dead"] or k["preds"] != [cid]:
+            continue   # conv must consume the concat alone
+        branches = list(c["preds"])
+        if k["op"] == "conv":
+            # concat+conv  =>  accumulating partial convs (in-place into y).
+            # Kernel of shape [m, sum(c_i), k, k] splits channel-wise; each
+            # partial conv reads x_i and the running accumulator, writes the
+            # accumulator in place (alias).  Weight bytes split evenly-ish by
+            # branch activation share.
+            total_in = sum(specs[b]["size_bytes"] for b in branches) or 1
+            acc = None
+            for j, b in enumerate(branches):
+                w_share = k["weight_bytes"] * specs[b]["size_bytes"] // total_in
+                preds = [b] if acc is None else [b, acc]
+                alias = set() if acc is None else {acc}
+                acc = add_node(
+                    dict(
+                        name=f"{k['name']}.partial{j}",
+                        op="partial_conv",
+                        size_bytes=k["size_bytes"],
+                        preds=preds,
+                        alias_preds=alias,
+                        weight_bytes=w_share,
+                        meta={**k["meta"], "rewritten_from": k["name"]},
+                    )
+                )
+            specs[cid]["dead"] = True
+            specs[consumer]["dead"] = True
+            redirect(consumer, acc)
+            report.n_concat_conv += 1
+        elif k["op"] == "depthconv":
+            # concat+depthconv  =>  per-branch depthconv + aliasing concat_view.
+            total_in = sum(specs[b]["size_bytes"] for b in branches) or 1
+            parts = []
+            for j, b in enumerate(branches):
+                share = k["size_bytes"] * specs[b]["size_bytes"] // total_in
+                w_share = k["weight_bytes"] * specs[b]["size_bytes"] // total_in
+                parts.append(
+                    add_node(
+                        dict(
+                            name=f"{k['name']}.dw{j}",
+                            op="partial_depthconv",
+                            size_bytes=share,
+                            preds=[b],
+                            weight_bytes=w_share,
+                            meta={**k["meta"], "rewritten_from": k["name"]},
+                        )
+                    )
+                )
+            view = add_node(
+                dict(
+                    name=f"{k['name']}.view",
+                    op="concat_view",
+                    size_bytes=k["size_bytes"],
+                    preds=list(parts),
+                    alias_preds=set(parts),
+                    meta={"rewritten_from": k["name"]},
+                )
+            )
+            specs[cid]["dead"] = True
+            specs[consumer]["dead"] = True
+            redirect(consumer, view)
+            report.n_concat_depthconv += 1
+
+    # fused_proj -> split : replace with independent per-output projections.
+    for fid in range(len(g)):
+        f = specs[fid]
+        if f["dead"] or f["op"] != "fused_proj":
+            continue
+        consumer = single_consumer(fid)
+        if consumer is None or specs[consumer]["op"] != "split":
+            continue
+        sp = specs[consumer]
+        outs = [s for s in succs[consumer] if not specs[s]["dead"]]
+        if not outs:
+            continue
+        total = sp["size_bytes"] or 1
+        # one projection per downstream consumer of the split
+        for j, o in enumerate(outs):
+            share = f["size_bytes"] // len(outs)
+            w_share = f["weight_bytes"] // len(outs)
+            pj = add_node(
+                dict(
+                    name=f"{f['name']}.proj{j}",
+                    op="proj",
+                    size_bytes=share,
+                    preds=list(f["preds"]),
+                    weight_bytes=w_share,
+                    meta={"rewritten_from": f["name"]},
+                )
+            )
+            specs[o]["preds"] = [pj if p == consumer else p for p in specs[o]["preds"]]
+            succs[pj].append(o)
+        specs[fid]["dead"] = True
+        specs[consumer]["dead"] = True
+        report.n_fused_proj_split += 1
+
+    # ---- compact: drop dead nodes, remap ids ---------------------------------
+    alive = [i for i, s in enumerate(specs) if not s["dead"]]
+    idmap = {old: new for new, old in enumerate(alive)}
+    out_specs = []
+    for old in alive:
+        s = specs[old]
+        out_specs.append(
+            dict(
+                name=s["name"],
+                op=s["op"],
+                size_bytes=s["size_bytes"],
+                preds=[idmap[p] for p in s["preds"]],
+                alias_preds={idmap[p] for p in s["alias_preds"]},
+                weight_bytes=s["weight_bytes"],
+                meta=s["meta"],
+            )
+        )
+    return _rebuild(out_specs, name=f"{g.name}+rw"), report

@@ -1,0 +1,252 @@
+"""Dynamic-programming memory-aware scheduler (paper Algorithm 1).
+
+The paper keys the memoization table on the *zero-indegree set* ``z`` of each
+partial schedule.  ``z`` is a pure function of the set of already-scheduled
+nodes, so we key on the canonical bitmask of the scheduled set — the classic
+Held–Karp signature — which identifies exactly the same subproblems while
+being O(1) to update.  For each signature we keep only the partial schedule
+with the smallest ``mu_peak`` (ties broken on smaller ``mu``), which Theorem 1
+of the paper proves sufficient for optimality.
+
+Two pruning hooks implement the paper's speed machinery:
+
+  * ``budget`` (tau)     — drop any transition whose ``mu_peak`` exceeds tau
+                           (Section 3.2, Figure 8a).
+  * ``state_quota``      — the per-search-step "timeout" T of Algorithm 2,
+                           made deterministic: if a search step's memo grows
+                           beyond the quota we raise :class:`SearchTimeout`
+                           instead of measuring wall-clock.
+
+``wall_clock_limit_s`` offers the paper's literal wall-clock T as well.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.core.graph import Graph, simulate_schedule
+
+
+class NoSolutionError(RuntimeError):
+    """Budget tau is below the optimal peak: every path was pruned."""
+
+
+class SearchTimeout(RuntimeError):
+    """A search step exceeded its state quota / wall-clock limit."""
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    order: list[int]
+    peak_bytes: int
+    final_bytes: int
+    n_states_expanded: int
+    n_signatures: int
+    wall_time_s: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def dp_schedule(
+    g: Graph,
+    *,
+    budget: int | None = None,
+    state_quota: int | None = None,
+    wall_clock_limit_s: float | None = None,
+    preplaced: Sequence[int] = (),
+    on_quota: str = "raise",
+) -> ScheduleResult:
+    """Optimal-peak topological schedule of ``g`` via signature DP.
+
+    ``on_quota='raise'`` is the paper's behaviour (Algorithm 2 reacts to the
+    timeout).  ``on_quota='beam'`` instead keeps only the ``state_quota`` best
+    signatures per step (lowest peak, then footprint) — no longer provably
+    optimal, but bounded; the production fallback for very wide graphs
+    (DESIGN.md §3).
+
+    Raises
+    ------
+    NoSolutionError   if ``budget`` prunes every path (tau < mu*).
+    SearchTimeout     if a search step exceeds ``state_quota`` signatures or
+                      the wall clock limit (with ``on_quota='raise'``).
+    """
+    t0 = time.perf_counter()
+    n = len(g)
+    pre = frozenset(preplaced)
+    to_schedule = [i for i in range(n) if i not in pre]
+    if not to_schedule:
+        return ScheduleResult([], 0, 0, 0, 0, 0.0)
+
+    sizes = g.sizes
+    pred_mask = g.pred_mask
+    succ_mask = g.succ_mask
+    succs = g.succs
+    # flat per-node transition tables (hot loop works on ints/tuples only)
+    net_alloc = [0] * n          # size - aliased bytes
+    dealloc_preds: list[tuple[tuple[int, int], ...]] = [()] * n
+    for u in range(n):
+        nd = g.nodes[u]
+        net_alloc[u] = sizes[u] - sum(sizes[p] for p in nd.alias_preds)
+        dealloc_preds[u] = tuple(
+            (p, sizes[p]) for p in nd.preds if p not in nd.alias_preds
+        )
+
+    pre_mask = 0
+    mu0 = 0
+    for p in pre:
+        pre_mask |= 1 << p
+        mu0 += sizes[p]
+
+    full_mask = pre_mask
+    for u in to_schedule:
+        full_mask |= 1 << u
+
+    frontier0 = 0
+    for u in to_schedule:
+        if pred_mask[u] & pre_mask == pred_mask[u]:
+            frontier0 |= 1 << u
+
+    # level: mask -> (mu, peak, frontier); parents: mask -> (prev_mask, node)
+    level: dict[int, tuple[int, int, int]] = {pre_mask: (mu0, mu0, frontier0)}
+    parents: dict[int, tuple[int, int]] = {}
+    expanded = 0
+    n_signatures = 1
+
+    for _step in range(len(to_schedule)):
+        nxt: dict[int, tuple[int, int, int]] = {}
+        timed_out = False
+        for mask, (mu, peak, frontier) in level.items():
+            f = frontier
+            while f:
+                ubit = f & -f
+                f ^= ubit
+                u = ubit.bit_length() - 1
+                expanded += 1
+                new_mu = mu + net_alloc[u]
+                new_peak = peak if peak >= new_mu else new_mu
+                if budget is not None and new_peak > budget:
+                    continue  # pruned (soft budget)
+                new_mask = mask | ubit
+                for p, psz in dealloc_preds[u]:
+                    if succ_mask[p] & new_mask == succ_mask[p]:
+                        new_mu -= psz
+                cur = nxt.get(new_mask)
+                if cur is None:
+                    new_frontier = frontier ^ ubit
+                    for s in succs[u]:
+                        pm = pred_mask[s]
+                        if pm & new_mask == pm:
+                            new_frontier |= 1 << s
+                    nxt[new_mask] = (new_mu, new_peak, new_frontier)
+                    parents[new_mask] = (mask, u)
+                    if (
+                        state_quota is not None
+                        and on_quota == "raise"
+                        and len(nxt) > state_quota
+                    ):
+                        timed_out = True
+                        break
+                elif (new_peak, new_mu) < (cur[1], cur[0]):
+                    nxt[new_mask] = (new_mu, new_peak, cur[2])
+                    parents[new_mask] = (mask, u)
+            if timed_out:
+                break
+        if timed_out:
+            raise SearchTimeout(
+                f"step {_step}: memo > quota {state_quota}"
+            )
+        if (
+            state_quota is not None
+            and on_quota == "beam"
+            and len(nxt) > state_quota
+        ):
+            keep = sorted(nxt.items(), key=lambda kv: (kv[1][1], kv[1][0]))
+            nxt = dict(keep[:state_quota])
+        if not nxt:
+            raise NoSolutionError(
+                f"budget {budget} prunes all paths at step {_step} "
+                f"(graph {g.name!r})"
+            )
+        if (
+            wall_clock_limit_s is not None
+            and time.perf_counter() - t0 > wall_clock_limit_s
+        ):
+            raise SearchTimeout(f"wall clock limit {wall_clock_limit_s}s hit")
+        n_signatures += len(nxt)
+        level = nxt
+
+    (final_mask, (final_mu, final_peak, _)), = level.items()
+    assert final_mask == full_mask
+    order: list[int] = []
+    mask = final_mask
+    while mask != pre_mask:
+        mask, u = parents[mask]
+        order.append(u)
+    order.reverse()
+    return ScheduleResult(
+        order=order,
+        peak_bytes=final_peak,
+        final_bytes=final_mu,
+        n_states_expanded=expanded,
+        n_signatures=n_signatures,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+def brute_force_schedule(
+    g: Graph, preplaced: Sequence[int] = ()
+) -> ScheduleResult:
+    """Exhaustive search over all topological orderings (tests only)."""
+    t0 = time.perf_counter()
+    n = len(g)
+    pre = set(preplaced)
+    best_order: list[int] | None = None
+    best = (1 << 62, 1 << 62)
+    order: list[int] = []
+    count = 0
+
+    indeg = [0] * n
+    for nd in g.nodes:
+        for p in nd.preds:
+            if p not in pre:
+                indeg[nd.id] += 1
+    avail = sorted(
+        i for i in range(n) if i not in pre and indeg[i] == 0
+    )
+
+    def rec(avail: list[int]) -> None:
+        nonlocal best, best_order, count
+        if len(order) == n - len(pre):
+            count += 1
+            sim = simulate_schedule(g, order, preplaced=tuple(pre))
+            key = (sim.peak_bytes, sim.final_bytes)
+            if key < best:
+                best = key
+                best_order = list(order)
+            return
+        for i, u in enumerate(list(avail)):
+            order.append(u)
+            newly = []
+            for v in g.succs[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    newly.append(v)
+            rec(avail[:i] + avail[i + 1 :] + newly)
+            for v in g.succs[u]:
+                indeg[v] += 1
+            order.pop()
+
+    rec(avail)
+    assert best_order is not None
+    sim = simulate_schedule(g, best_order, preplaced=tuple(pre))
+    return ScheduleResult(
+        order=best_order,
+        peak_bytes=sim.peak_bytes,
+        final_bytes=sim.final_bytes,
+        n_states_expanded=count,
+        n_signatures=count,
+        wall_time_s=time.perf_counter() - t0,
+    )

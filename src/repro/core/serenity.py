@@ -1,0 +1,107 @@
+"""SERENITY end-to-end scheduling pipeline (paper Fig. 4).
+
+    graph  ->  [identity graph rewriting]  ->  divide-and-conquer
+           ->  per-segment adaptive-soft-budgeted DP  ->  combine
+           ->  (peak footprint, arena plan, schedule)
+
+This is the public entry point the rest of the framework uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.core.allocator import ArenaPlan, plan_arena
+from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
+from repro.core.graph import Graph, simulate_schedule
+from repro.core.heuristics import BASELINES, kahn_schedule
+from repro.core.partition import Segment, partition
+from repro.core.rewriter import RewriteReport, rewrite_graph
+from repro.core.scheduler import ScheduleResult, dp_schedule
+
+
+@dataclasses.dataclass
+class SerenityResult:
+    graph: Graph                       # possibly rewritten graph actually scheduled
+    order: list[int]
+    peak_bytes: int                    # paper's footprint model (no allocator)
+    arena: ArenaPlan                   # footprint through the linear allocator
+    segments: list[Segment]
+    rewrite_report: RewriteReport | None
+    budget_stats: list[BudgetSearchStats]
+    wall_time_s: float
+    baseline_peaks: dict[str, int]     # heuristic peaks on the same graph
+
+    @property
+    def arena_bytes(self) -> int:
+        return self.arena.arena_bytes
+
+
+def schedule(
+    g: Graph,
+    *,
+    rewrite: bool = True,
+    divide_and_conquer: bool = True,
+    adaptive_budget: bool = True,
+    state_quota: int = 20_000,
+    exact_threshold: int = 18,
+    compute_baselines: bool = True,
+) -> SerenityResult:
+    """Run the full SERENITY pipeline on graph ``g``.
+
+    ``exact_threshold``: segments with at most this many nodes skip the budget
+    meta-search and run the exact DP directly (cheaper than a meta-search).
+    """
+    t0 = time.perf_counter()
+    report: RewriteReport | None = None
+    if rewrite:
+        g, report = rewrite_graph(g)
+
+    segments = (
+        partition(g)
+        if divide_and_conquer
+        else [Segment(node_ids=g.topo_order(), boundary_in=[])]
+    )
+
+    order: list[int] = []
+    budget_stats: list[BudgetSearchStats] = []
+    for seg in segments:
+        sub_ids = sorted(set(seg.node_ids) | set(seg.boundary_in))
+        sub, idmap = g.induced_subgraph(sub_ids)
+        inv = {v: k for k, v in idmap.items()}
+        pre = tuple(idmap[b] for b in seg.boundary_in)
+        n_free = len(sub) - len(pre)
+        if n_free <= exact_threshold or not adaptive_budget:
+            res = dp_schedule(sub, preplaced=pre)
+        else:
+            # Seed the meta-search with the tightest *feasible* budget any
+            # heuristic achieves (beyond-paper: the paper seeds with Kahn
+            # only).  Feasible taus can only shrink the search space.
+            tau0 = min(fn(sub, preplaced=pre).peak_bytes
+                       for fn in (kahn_schedule, BASELINES["greedy"],
+                                  BASELINES["dfs"]))
+            res, stats = adaptive_budget_schedule(
+                sub, state_quota=state_quota, preplaced=pre, tau_max=tau0
+            )
+            budget_stats.append(stats)
+        order.extend(inv[u] for u in res.order)
+
+    sim = simulate_schedule(g, order)
+    arena = plan_arena(g, order)
+    baselines: dict[str, int] = {}
+    if compute_baselines:
+        for name, fn in BASELINES.items():
+            baselines[name] = fn(g).peak_bytes
+    return SerenityResult(
+        graph=g,
+        order=order,
+        peak_bytes=sim.peak_bytes,
+        arena=arena,
+        segments=segments,
+        rewrite_report=report,
+        budget_stats=budget_stats,
+        wall_time_s=time.perf_counter() - t0,
+        baseline_peaks=baselines,
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, make_pipeline
+
+__all__ = ["DataPipeline", "make_pipeline"]

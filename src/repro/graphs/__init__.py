@@ -1,0 +1,26 @@
+"""Benchmark graph generators for the paper's evaluation networks.
+
+darts     -- DARTS learned normal cell (Liu et al., 2019), ImageNet config
+swiftnet  -- SwiftNet cells (Zhang et al., 2019), HPD config (reconstructed)
+randwire  -- RandWire WS random graphs (Xie et al., 2019), CIFAR configs
+"""
+
+from repro.graphs.darts import darts_normal_cell
+from repro.graphs.randwire import randwire_graph
+from repro.graphs.swiftnet import swiftnet_cell, swiftnet_network
+
+BENCHMARK_GRAPHS = {
+    "darts_imagenet_cell": lambda: darts_normal_cell(),
+    "swiftnet_cell_a": lambda: swiftnet_cell("A"),
+    "swiftnet_cell_b": lambda: swiftnet_cell("B"),
+    "swiftnet_cell_c": lambda: swiftnet_cell("C"),
+    "randwire_cifar10": lambda: randwire_graph(seed=10),
+    "randwire_cifar100": lambda: randwire_graph(seed=100),
+}
+
+__all__ = [
+    "BENCHMARK_GRAPHS",
+    "darts_normal_cell",
+    "randwire_graph",
+    "swiftnet_cell",
+]

@@ -1,0 +1,89 @@
+"""DARTS learned normal cell (Liu et al., ICLR 2019) as a SERENITY graph.
+
+Published DARTS_V2 genotype, normal cell:
+
+    normal = [(sep_conv_3x3, 0), (sep_conv_3x3, 1),
+              (sep_conv_3x3, 0), (sep_conv_3x3, 1),
+              (sep_conv_3x3, 1), (skip_connect, 0),
+              (skip_connect, 0), (dil_conv_3x3, 2)]
+    concat = [2, 3, 4, 5]
+
+Each intermediate node sums two operand branches; a sep_conv is the standard
+ReLU-Conv(dw)-Conv(1x1)-BN stack applied twice; dil_conv applies it once.  The
+paper evaluates the *first* normal cell of the ImageNet network (highest
+footprint): feature maps 28x28, C=48 channels after the stem, float32.
+"""
+
+from __future__ import annotations
+
+from repro.core.graph import Graph
+
+# (op, input_index) pairs per intermediate node; indices 0,1 are the two cell
+# inputs, 2.. are previous intermediate nodes.
+DARTS_V2_NORMAL = [
+    [("sep_conv_3x3", 0), ("sep_conv_3x3", 1)],   # node 2
+    [("sep_conv_3x3", 0), ("sep_conv_3x3", 1)],   # node 3
+    [("sep_conv_3x3", 1), ("skip_connect", 0)],   # node 4
+    [("skip_connect", 0), ("dil_conv_3x3", 2)],   # node 5
+]
+CONCAT = [2, 3, 4, 5]
+
+
+def darts_normal_cell(
+    hw: int = 28, channels: int = 48, dtype_bytes: int = 4
+) -> Graph:
+    fmap = hw * hw * channels * dtype_bytes          # one C-channel feature map
+    specs: list[dict] = []
+
+    def add(name, op, size, preds=(), weight=0):
+        specs.append(
+            dict(name=name, op=op, size_bytes=size, preds=list(preds),
+                 weight_bytes=weight)
+        )
+        return len(specs) - 1
+
+    k = 3
+    sep_w = (channels * k * k + channels * channels) * dtype_bytes  # dw + pw
+    node_out = {}
+    node_out[0] = add("c_{k-2}", "input", fmap)
+    node_out[1] = add("c_{k-1}", "input", fmap)
+
+    def sep_conv(tag: str, src: int) -> int:
+        # ReLU -> dwconv -> pwconv -> BN, twice (DARTS SepConv definition).
+        x = src
+        for rep in range(2):
+            r = add(f"{tag}.relu{rep}", "relu", fmap, [x])
+            d = add(f"{tag}.dw{rep}", "depthconv", fmap, [r], weight=sep_w // 2)
+            p = add(f"{tag}.pw{rep}", "conv", fmap, [d], weight=sep_w // 2)
+            x = add(f"{tag}.bn{rep}", "bn", fmap, [p])
+        return x
+
+    def dil_conv(tag: str, src: int) -> int:
+        r = add(f"{tag}.relu", "relu", fmap, [src])
+        d = add(f"{tag}.dw", "depthconv", fmap, [r], weight=sep_w // 2)
+        p = add(f"{tag}.pw", "conv", fmap, [d], weight=sep_w // 2)
+        return add(f"{tag}.bn", "bn", fmap, [p])
+
+    for i, edges in enumerate(DARTS_V2_NORMAL):
+        node_id = i + 2
+        branch_outs = []
+        for j, (op, src_idx) in enumerate(edges):
+            src = node_out[src_idx]
+            tag = f"n{node_id}.e{j}.{op}"
+            if op == "sep_conv_3x3":
+                branch_outs.append(sep_conv(tag, src))
+            elif op == "dil_conv_3x3":
+                branch_outs.append(dil_conv(tag, src))
+            elif op == "skip_connect":
+                branch_outs.append(src)
+            else:
+                raise ValueError(op)
+        node_out[node_id] = add(f"n{node_id}.add", "add", fmap, branch_outs)
+
+    concat_in = [node_out[i] for i in CONCAT]
+    cc = add("cell.concat", "concat", fmap * len(CONCAT), concat_in)
+    # cells are followed by a 1x1 conv when channels change; model the
+    # downstream consumer so concat liveness is realistic:
+    add("next.pw", "conv", fmap, [cc],
+        weight=4 * channels * channels * dtype_bytes)
+    return Graph.build(specs, name="darts_imagenet_cell")

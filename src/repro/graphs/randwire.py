@@ -1,0 +1,60 @@
+"""RandWire random network graphs (Xie et al., ICCV 2019) as SERENITY graphs.
+
+RandWire's published recipe: Watts–Strogatz WS(N=32, K=4, P=0.75) random
+graphs, converted to DAGs by orienting every edge from lower to higher node
+id.  Each graph node is a ReLU -> separable-conv -> BN triplet whose inputs
+are aggregated by a learned weighted sum; nodes with no in-edges read the
+stage input, nodes with no out-edges average into the stage output.
+
+CIFAR regime (the paper's RandWire rows): 32x32 images, small channel count
+(C=78 for the CIFAR10 model, C=154 for CIFAR100), first stage at 16x16.
+"""
+
+from __future__ import annotations
+
+import networkx as nx
+
+from repro.core.graph import Graph
+
+
+def randwire_graph(
+    seed: int = 10,
+    n: int = 32,
+    k: int = 4,
+    p: float = 0.75,
+    hw: int = 16,
+    channels: int | None = None,
+    dtype_bytes: int = 4,
+) -> Graph:
+    if channels is None:
+        channels = 78 if seed % 2 == 0 else 109
+    ws = nx.connected_watts_strogatz_graph(n, k, p, seed=seed)
+    dag_edges = sorted((min(u, v), max(u, v)) for u, v in ws.edges())
+    preds: dict[int, list[int]] = {i: [] for i in range(n)}
+    for u, v in dag_edges:
+        preds[v].append(u)
+
+    fmap = hw * hw * channels * dtype_bytes
+    sep_w = (channels * 9 + channels * channels) * dtype_bytes
+    specs: list[dict] = []
+
+    def add(name, op, size, pr=(), weight=0):
+        specs.append(dict(name=name, op=op, size_bytes=size, preds=list(pr),
+                          weight_bytes=weight))
+        return len(specs) - 1
+
+    # One IR node per RandWire node — the paper's scheduling granularity:
+    # weighted-sum + ReLU + sepconv + BN fuse into the node (the fused
+    # intermediates are same-sized as the output and die within the op).
+    stage_in = add("stage_in", "input", fmap)
+    out_of: dict[int, int] = {}
+    for v in range(n):
+        srcs = [out_of[u] for u in sorted(preds[v])] or [stage_in]
+        out_of[v] = add(f"n{v}.sepconv", "conv", fmap, srcs, weight=sep_w)
+    # nodes with no out-edges in the DAG feed the stage output:
+    has_out = {u for u, _ in dag_edges}
+    sinks = [out_of[v] for v in range(n) if v not in has_out]
+    mean = add("stage_out.mean", "add", fmap, sinks)
+    add("stage_out.pw", "conv", fmap, [mean],
+        weight=channels * channels * dtype_bytes)
+    return Graph.build(specs, name=f"randwire_ws{n}_{k}_{seed}")

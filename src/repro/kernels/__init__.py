@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel is a package ``kernels/<name>/`` with:
+  kernel.py  -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     -- jit'd public wrapper; dispatches impl in {auto, pallas, xla, ref}
+               ("xla" = memory-bounded chunked pure-jnp path used on CPU and
+               by the multi-pod dry-run; identical math)
+  ref.py     -- pure-jnp oracle (the allclose ground truth)
+
+Kernels: flash_attention (GQA/MQA + causal + sliding window),
+rwkv6 (WKV6 recurrence), rglru (RG-LRU gated linear recurrence).
+
+SERENITY tie-in: block sizes are chosen so each kernel's VMEM working set
+stays under the per-core budget -- the same cap-and-schedule reasoning the
+paper applies to edge SRAM (DESIGN.md section 1).
+"""

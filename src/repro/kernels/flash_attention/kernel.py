@@ -1,0 +1,179 @@
+"""Flash attention Pallas TPU kernel (GQA + causal + sliding window).
+
+Tiling (MXU/VMEM aware — DESIGN.md §1 hardware-adaptation):
+  * grid = (B*H, Sq/BQ, Skv/BK); the last axis is sequential on TPU, so the
+    online-softmax running state (m, l, acc) lives in VMEM scratch that
+    persists across the KV-block iterations of one (head, q-block).
+  * BQ = BK = 128 (MXU-aligned); head_dim D is kept whole (64..256).
+  * VMEM working set per step: q (BQ·D) + k,v (2·BK·D) + acc (BQ·D f32)
+    + scores (BQ·BK f32) ≈ 0.3 MB at D=128 — far below the ~16 MB/core VMEM
+    budget, leaving room for the compiler's double buffering.
+  * fully-masked KV blocks are skipped with @pl.when (the causal/window/
+    cache-length test is on block indices only).
+
+Validated in interpret mode against ref.attention_ref (tests/test_kernels_*).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    qs_ref,          # scalar prefetch: (1,) int32 q_start
+    kvl_ref,         # scalar prefetch: (1,) int32 kv_len
+    q_ref,           # (BQ, D)
+    k_ref,           # (BK, D)
+    v_ref,           # (BK, D)
+    o_ref,           # (BQ, D)
+    m_scr,           # VMEM scratch (BQ, 1) running max
+    l_scr,           # VMEM scratch (BQ, 1) running denom
+    acc_scr,         # VMEM scratch (BQ, D) running numerator
+    *,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bk: int,
+    n_kv_blocks: int,
+    softmax_scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    q_start = qs_ref[0]
+    kv_len = kvl_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level liveness test (skip fully-masked KV blocks)
+    blk_q_lo = q_start + qi * bq
+    blk_q_hi = blk_q_lo + bq - 1
+    blk_k_lo = ki * bk
+    blk_k_hi = blk_k_lo + bk - 1
+    alive = blk_k_lo < kv_len
+    if causal:
+        alive &= blk_k_lo <= blk_q_hi
+    if window is not None:
+        alive &= blk_k_hi > blk_q_lo - window
+
+    @pl.when(alive)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * softmax_scale
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (BQ, BK)
+        qpos = blk_q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = blk_k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...]                                # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                     # (BQ, 1)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softmax_scale", "bq", "bk", "interpret"
+    ),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,                 # (B, Sq, H, D)
+    k: jnp.ndarray,                 # (B, Skv, KV, D)
+    v: jnp.ndarray,                 # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_start: int | jnp.ndarray = 0,
+    kv_len: int | jnp.ndarray | None = None,
+    softmax_scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    scale = float(softmax_scale if softmax_scale is not None else D ** -0.5)
+
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    n_q, n_k = Sq // bq, Skv // bk
+
+    # layout: fold heads into the leading grid axis; kv head index = h // G
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+
+    qs = jnp.asarray(q_start, jnp.int32).reshape(1)
+    kvl = jnp.asarray(Skv if kv_len is None else kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        n_kv_blocks=n_k,
+        softmax_scale=scale,
+    )
+    grid = (B * H, n_q, n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (None, bq, D), lambda h, qi, ki, *_: (h, qi, 0)
+                ),
+                pl.BlockSpec(
+                    (None, bk, D), lambda h, qi, ki, *_, G=G: (h // G, ki, 0)
+                ),
+                pl.BlockSpec(
+                    (None, bk, D), lambda h, qi, ki, *_, G=G: (h // G, ki, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (None, bq, D), lambda h, qi, ki, *_: (h, qi, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qs, kvl, qt, kt, vt)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,153 @@
+"""Public attention op: impl dispatch + memory-bounded XLA path.
+
+``flash_attention(..., impl=...)``:
+
+  * ``"pallas"``  — the TPU kernel (kernel.py); interpret=True on CPU tests.
+  * ``"xla"``     — chunked online-softmax scan in pure jnp: O(S·C) memory,
+                    identical math; this is what the multi-pod dry-run lowers
+                    (Pallas cannot lower for the CPU placeholder backend).
+  * ``"ref"``     — O(S²) oracle (tests only).
+  * ``"auto"``    — pallas on TPU backends, xla elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+_NEG_INF = -1e30
+
+# Cost-probe mode: unroll the KV-chunk scan so XLA cost_analysis counts every
+# chunk (while-loop bodies are otherwise counted once).  Set by the dry-run's
+# probe pass only — never in production paths.
+_FORCE_UNROLL = False
+
+
+def set_scan_unroll(v: bool) -> None:
+    global _FORCE_UNROLL
+    _FORCE_UNROLL = bool(v)
+
+
+def _pick_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def flash_attention(
+    q: jnp.ndarray,                     # (B, Sq, H, D)
+    k: jnp.ndarray,                     # (B, Skv, KV, D)
+    v: jnp.ndarray,                     # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_start: int | jnp.ndarray = 0,
+    kv_len: int | jnp.ndarray | None = None,
+    softmax_scale: float | None = None,
+    impl: str = "auto",
+    kv_chunk: int = 1024,
+    skip_masked_blocks: bool = True,
+) -> jnp.ndarray:
+    impl = _pick_impl(impl)
+    if impl == "ref":
+        return attention_ref(
+            q, k, v, causal=causal, window=window, q_start=q_start,
+            kv_len=kv_len, softmax_scale=softmax_scale,
+        )
+    if impl == "pallas":
+        from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_start=q_start,
+            kv_len=kv_len, softmax_scale=softmax_scale,
+        )
+    assert impl == "xla", impl
+    return _flash_xla(
+        q, k, v, causal=causal, window=window, q_start=q_start,
+        kv_len=kv_len, softmax_scale=softmax_scale, kv_chunk=kv_chunk,
+        skip_masked_blocks=skip_masked_blocks,
+    )
+
+
+def _flash_xla(
+    q, k, v, *, causal, window, q_start, kv_len, softmax_scale, kv_chunk,
+    skip_masked_blocks,
+):
+    """Online-softmax scan over KV chunks (flash algorithm in XLA).
+
+    Fully-masked chunks are skipped with lax.cond when
+    ``skip_masked_blocks`` (hot for causal prefill and short decode caches:
+    only ~half / ~t/S of the chunks do work).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    Dv = v.shape[-1]                 # may differ from D (e.g. MLA: 192 vs 128)
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    C = min(kv_chunk, Skv)
+    if Skv % C:
+        pad = C - Skv % C
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = Skv if kv_len is None else kv_len
+        Skv = Skv + pad
+    n_chunks = Skv // C
+
+    qh = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+    qpos = q_start + jnp.arange(Sq)                           # (Sq,)
+    q_hi = q_start + Sq - 1
+
+    kc = k.reshape(B, n_chunks, C, KV, D)
+    vc = v.reshape(B, n_chunks, C, KV, Dv)
+
+    def chunk_update(carry, ci):
+        m, l, acc = carry
+        ks = kc[:, ci].astype(jnp.float32)                    # (B, C, KV, D)
+        vs = vc[:, ci].astype(jnp.float32)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qh, ks)           # (B,Sq,KV,G,C)
+        kpos = ci * C + jnp.arange(C)
+        mask = jnp.ones((Sq, C), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vs
+        )
+        return (m_new, l_new, acc_new), None
+
+    def chunk_step(carry, ci):
+        if not skip_masked_blocks:
+            return chunk_update(carry, ci)
+        lo = ci * C                     # first kv position in chunk
+        hi = lo + C - 1
+        alive = jnp.array(True)
+        if causal:
+            alive &= lo <= q_hi
+        if window is not None:
+            alive &= hi > q_start - window
+        if kv_len is not None:
+            alive &= lo < kv_len
+        return lax.cond(
+            alive, lambda c: chunk_update(c, ci), lambda c: (c, None), carry
+        )
+
+    m0 = jnp.full((B, Sq, KV, G), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KV, G, Dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(chunk_step, (m0, l0, a0), jnp.arange(n_chunks),
+                              unroll=_FORCE_UNROLL)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)

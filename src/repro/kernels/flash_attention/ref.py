@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for GQA flash attention (materializes full scores)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Skv, KV, D)
+    v: jnp.ndarray,          # (B, Skv, KV, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_start: int | jnp.ndarray = 0,
+    kv_len: int | jnp.ndarray | None = None,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """O(S^2)-memory reference.  ``q_start``: absolute position of q[0]
+    (decode: cache length).  ``kv_len``: #valid cache entries (rest masked).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    Dv = v.shape[-1]                 # may differ from D (e.g. MLA: 192 vs 128)
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    qh = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, kf) * scale
+
+    qpos = q_start + jnp.arange(Sq)[:, None]          # (Sq, 1)
+    kpos = jnp.arange(Skv)[None, :]                   # (1, Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+    denom = p.sum(-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)

@@ -1,0 +1,50 @@
+"""Public RG-LRU op.
+
+``impl='xla'`` uses ``lax.associative_scan`` over the affine maps
+(h -> a*h + b): combine((a1,b1),(a2,b2)) = (a1*a2, a2*b1 + b2) — O(log T)
+depth, fully parallel, the right shape for XLA:TPU without a custom kernel.
+The Pallas kernel instead streams time chunks through VMEM with the carry in
+scratch (decode/serving shape), identical math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.rglru.ref import rglru_ref
+
+
+def _pick_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def rglru(log_a, gx, h0=None, *, impl: str = "auto"):
+    """log_a, gx: (B,T,D).  Returns (h (B,T,D), h_T (B,D))."""
+    impl = _pick_impl(impl)
+    if impl == "ref":
+        return rglru_ref(log_a, gx, h0)
+    if impl == "pallas":
+        from repro.kernels.rglru.kernel import rglru_pallas
+
+        return rglru_pallas(log_a, gx, h0)
+    assert impl == "xla", impl
+    la = log_a.astype(jnp.float32)
+    a = jnp.exp(la)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * la), 0.0, 1.0)) * gx.astype(
+        jnp.float32
+    )
+    if h0 is not None:
+        # fold the initial state into step 0: b_0 <- a_0 * h0 + b_0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(gx.dtype), h[:, -1]

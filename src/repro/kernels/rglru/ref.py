@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (Griffin,
+arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+where a_t = exp(log_a_t) is the data-dependent per-channel gate computed by
+the block (log_a = -c * softplus(Lambda) * sigma(W_a x), c = 8).  The kernel
+consumes precomputed ``log_a`` and gated input ``gx = i_t * x_t``.
+Shapes: log_a, gx: (B, T, D); h0: (B, D).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_ref(log_a, gx, h0=None):
+    B, T, D = log_a.shape
+    la = log_a.astype(jnp.float32)
+    x = gx.astype(jnp.float32)
+    a = jnp.exp(la)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * la), 0.0, 1.0)) * x
+    h = jnp.zeros((B, D), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    hT, hs = lax.scan(step, h, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(gx.dtype), hT

@@ -1,0 +1,34 @@
+"""Public WKV6 op.
+
+``impl='xla'`` is the exact per-step ``lax.scan`` recurrence (one fused HLO
+while-loop; state (B,H,N,N) in registers/HBM).  A chunked linear-attention
+factorization (GLA-style) was evaluated and rejected for the default path:
+the factor tensors ``exp(±cumsum(log w))`` overflow f32 once the within-chunk
+decay mass exceeds ~88 nats, which RWKV-6's unbounded ``w = exp(-exp(ω))``
+reaches easily — the *exact* sequential update has no such failure mode.
+The Pallas kernel keeps the state in VMEM scratch and serializes time within
+a (B·H, T/C) grid — numerically identical to the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def _pick_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def wkv6(r, k, v, w, u, *, initial_state=None, impl: str = "auto"):
+    """r,k,v,w: (B,T,H,N); u: (H,N).  Returns (out (B,T,H,N), state (B,H,N,N))."""
+    impl = _pick_impl(impl)
+    if impl in ("ref", "xla"):
+        return wkv6_ref(r, k, v, w, u, initial_state)
+    assert impl == "pallas", impl
+    from repro.kernels.rwkv6.kernel import wkv6_pallas
+
+    return wkv6_pallas(r, k, v, w, u, initial_state=initial_state)

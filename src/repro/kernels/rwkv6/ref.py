@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head (key dim N, value dim N), with data-dependent per-channel decay
+w_t in (0,1)^N and bonus u in R^N (arXiv:2404.05892):
+
+    out_t = r_t @ S_{t-1}  +  ((r_t * u) . k_t) * v_t
+    S_t   = diag(w_t) @ S_{t-1} + k_t^T v_t
+
+Shapes: r,k,v,w: (B, T, H, N); u: (H, N); state: (B, H, N, N).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u, initial_state=None):
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    S0 = (
+        jnp.zeros((B, H, N, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B, H, N) each
+        inter = jnp.einsum("bhn,bhnm->bhm", rt, S)
+        bonus = jnp.einsum("bhn,hn,bhn->bh", rt, uf, kt)
+        out = inter + bonus[..., None] * vt
+        S = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, out
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    S, outs = lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), S.astype(jnp.float32)

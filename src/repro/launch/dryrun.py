@@ -1,0 +1,517 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the abstract inputs (ShapeDtypeStruct + NamedSharding — zero
+     allocation) for the right step kind (train / prefill / decode),
+  2. ``jax.jit(step, in_shardings=...).lower(...).compile()`` under the
+     production mesh (16x16 single-pod, 2x16x16 multi-pod),
+  3. records ``memory_analysis`` (fits-per-device proof), ``cost_analysis``
+     (FLOPs/bytes) and the collective-op bytes parsed from the partitioned
+     HLO, and derives the three roofline terms (DESIGN.md §6),
+  4. writes one JSON per cell into --out (EXPERIMENTS.md §Dry-run reads it).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh, rules_for_mesh
+from repro.launch.steps import (
+    batch_specs,
+    make_decode_step,
+    make_optimizer,
+    make_prefill_step,
+    make_train_step,
+    serve_input_specs,
+    train_input_specs,
+)
+from repro.models.zoo import build_model
+
+# ----------------------------------------------------------------- constants
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Per-device bytes moved by collectives, summed from the partitioned
+    HLO: for each collective op, the bytes of its *result* shapes (the
+    payload resident on one device).  ``-start`` async forms counted once;
+    ``-done`` skipped."""
+    per_op: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    count: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        for c in _COLLECTIVES:
+            tag = f" {c}(" if f" {c}(" in line else (
+                f" {c}-start(" if f" {c}-start(" in line else None)
+            if tag is None:
+                continue
+            lhs = line.split(tag)[0]
+            if "=" not in lhs:
+                continue
+            result = lhs.split("=", 1)[1]
+            b = _shape_bytes(result)
+            per_op[c] += b
+            count[c] += 1
+            break
+    return {
+        "bytes_by_type": per_op,
+        "count_by_type": count,
+        "total_bytes": sum(per_op.values()),
+    }
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = [
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes", "host_argument_size_in_bytes",
+        "host_output_size_in_bytes", "host_temp_size_in_bytes",
+        "peak_memory_in_bytes",
+    ]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def min_bytes_estimate(cfg, shape, n_chips: int) -> float:
+    """Analytic lower bound on per-chip HBM traffic for one step (documented
+    approximation; the denominator for the memory-roofline fraction):
+
+      train:   params read (fwd+bwd) + grad write + param write
+               + AdamW m/v read+write (f32) + layer-boundary activations x3
+      prefill: params read + KV-cache write + boundary activations
+      decode:  active params read + cache read/write slice
+    """
+    P = cfg.param_count() * 2.0                      # bf16 bytes
+    Pa = cfg.active_param_count() * 2.0
+    opt = cfg.param_count() * (16.0 if cfg.optimizer == "adamw" else 2.0)
+    L, D = cfg.n_layers + cfg.encoder_layers, cfg.d_model
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        acts = 3.0 * L * toks * D * 2.0
+        total = 4.0 * P + 2.0 * opt + acts
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        kv = 2.0 * L * toks * cfg.n_kv_heads * cfg.head_dim * 2.0
+        total = P + kv + L * toks * D * 2.0
+    else:
+        kv_per_tok = 2.0 * L * cfg.n_kv_heads * cfg.head_dim * 2.0
+        if cfg.mla is not None:
+            kv_per_tok = L * (cfg.mla.kv_lora_rank
+                              + cfg.mla.qk_rope_head_dim) * 2.0
+        cache = shape.global_batch * shape.seq_len * kv_per_tok
+        if cfg.attn_free:
+            cache = (shape.global_batch * cfg.n_layers * (D / cfg.head_dim)
+                     * cfg.head_dim ** 2 * 4.0)
+        total = Pa + cache
+    return total / n_chips
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train) / 2·N_active·tokens (fwd);
+    attention score FLOPs excluded by convention (standard MFU accounting)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch          # decode: 1 token / seq
+
+
+def cell_applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: O(S^2) at 500k infeasible (DESIGN.md §4)"
+    return True, ""
+
+
+# --------------------------------------------------------------- cost probes
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE (trip counts are
+# dynamic), so the scanned-layer dry-run under-reports flops / bytes /
+# collective bytes by ~L x.  The probe pass recovers artifact-derived totals:
+# lower the SAME step at 1 and 2 layers (per layer type) with every scan
+# fully unrolled, take per-type deltas, extrapolate linearly:
+#     cost(full) = base + sum_type N_type * delta_type
+# RWKV-6's WKV time-scan cannot be unrolled (T up to 524288); its per-step
+# cost is supplemented analytically (flagged in the record).
+
+import dataclasses as _dc
+
+from repro.kernels.flash_attention import ops as _fa_ops
+
+
+def _probe_variants(cfg) -> tuple[list, list[dict], dict]:
+    """Returns (type_names, probe replacement dicts, full counts)."""
+    if cfg.is_encoder_decoder:
+        return (
+            ["enc", "dec"],
+            [dict(encoder_layers=1, n_layers=1),
+             dict(encoder_layers=2, n_layers=1),
+             dict(encoder_layers=2, n_layers=2)],
+            {"enc": cfg.encoder_layers, "dec": cfg.n_layers},
+        )
+    if cfg.n_experts and cfg.n_dense_layers:
+        return (
+            ["dense", "moe"],
+            [dict(n_dense_layers=1, n_layers=2),
+             dict(n_dense_layers=2, n_layers=3),
+             dict(n_dense_layers=2, n_layers=4)],
+            {"dense": cfg.n_dense_layers,
+             "moe": cfg.n_layers - cfg.n_dense_layers},
+        )
+    if cfg.family == "hybrid":
+        period = len(cfg.block_pattern)
+        return (
+            ["group"],
+            [dict(n_layers=period), dict(n_layers=2 * period)],
+            {"group": cfg.n_layers / period},
+        )
+    return (
+        ["layer"],
+        [dict(n_layers=1), dict(n_layers=2)],
+        {"layer": cfg.n_layers},
+    )
+
+
+def _lower_cell(cfg, shape, mesh, rules, kind):
+    model = build_model(cfg)
+    with mesh:
+        if kind == "train":
+            opt = make_optimizer(cfg)
+            step = make_train_step(model, opt, rules)
+            specs = train_input_specs(model, opt, shape, mesh, rules)
+            return jax.jit(step, donate_argnums=(0,)).lower(*specs)
+        if kind == "prefill":
+            step = make_prefill_step(model, rules)
+            specs = serve_input_specs(model, shape, mesh, rules,
+                                      kind="prefill")
+            return jax.jit(step, donate_argnums=(1,)).lower(*specs)
+        step = make_decode_step(model, rules)
+        specs = serve_input_specs(model, shape, mesh, rules, kind="decode")
+        return jax.jit(step, donate_argnums=(1,)).lower(*specs)
+
+
+def _cost_triple(compiled) -> dict:
+    cost = _cost_dict(compiled)
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll_bytes": float(coll["total_bytes"]),
+    }
+
+
+def _wkv_supplement(cfg, shape, kind, n_chips) -> dict:
+    """Analytic per-token WKV cost (the un-unrollable T-scan), per chip."""
+    if not cfg.attn_free:
+        return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0}
+    H, N = cfg.d_model // cfg.head_dim, cfg.head_dim
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    steps_missing = max(tokens - shape.global_batch, 0)   # probe counted 1
+    mult = 4.0 if kind == "train" else 1.0                # fwd+recompute+bwd
+    flops = steps_missing * H * (6 * N * N) * mult * cfg.n_layers
+    bytes_ = steps_missing * H * (2 * N * N * 4) * mult * cfg.n_layers
+    return {"flops": flops / n_chips, "bytes": bytes_ / n_chips,
+            "coll_bytes": 0.0}
+
+
+def probe_corrected_costs(cfg, shape, mesh, rules, kind, n_chips) -> dict:
+    """Artifact-derived (flops, bytes, collective bytes), scan-corrected."""
+    types, variants, full_counts = _probe_variants(cfg)
+    _fa_ops.set_scan_unroll(True)
+    try:
+        costs = []
+        for repl in variants:
+            pcfg = _dc.replace(cfg, scan_unroll=True, **repl)
+            compiled = _lower_cell(pcfg, shape, mesh, rules, kind).compile()
+            costs.append(_cost_triple(compiled))
+    finally:
+        _fa_ops.set_scan_unroll(False)
+
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        vals = [c[key] for c in costs]
+        if len(types) == 1:
+            delta = {types[0]: vals[1] - vals[0]}
+            base = vals[0] - delta[types[0]]
+        else:
+            delta = {types[0]: vals[1] - vals[0],
+                     types[1]: vals[2] - vals[1]}
+            base = vals[0] - delta[types[0]] - delta[types[1]]
+        out[key] = base + sum(full_counts[t] * delta[t] for t in types)
+    supp = _wkv_supplement(cfg, shape, kind, n_chips)
+    for k in out:
+        out[k] += supp[k]
+    out["probe_raw"] = costs
+    out["wkv_supplement"] = supp
+    return out
+
+
+# --------------------------------------------------------------- variants
+# §Perf hillclimb knobs: each variant = (rules overrides, cfg overrides).
+VARIANTS: dict[str, dict] = {
+    "baseline": dict(),
+    # serving: replicate params over 'data' (no FSDP at inference), cache
+    # sharded batch x heads — kills the per-step KV/param all-gathers
+    "serve_repl": dict(rules=dict(fsdp=None, sequence=None)),
+    # MoE: pin dispatch buffers to (expert x EP, capacity x DP)
+    "moe_dispatch": dict(cfg=dict(moe_dispatch_sharding=True)),
+    # MoE: explicit expert-parallel shard_map (local dispatch, ZeRO gather,
+    # psum combine) — see models/moe_ep.py
+    "moe_ep": dict(cfg=dict(moe_impl="ep_shardmap")),
+    "moe_ep_dots": dict(cfg=dict(moe_impl="ep_shardmap", remat="dots")),
+    # selective rematerialization: save matmul outputs, recompute elementwise
+    "remat_dots": dict(cfg=dict(remat="dots")),
+    # megatron-style activation sharding over the model axis
+    "act_shard": dict(rules=dict(act_embed="model")),
+    # larger attention KV chunks: fewer online-softmax accumulator rewrites
+    "attn_chunk4k": dict(cfg=dict(attn_kv_chunk=4096)),
+    # combined training recipe (per-cell winners composed)
+    "train_opt": dict(cfg=dict(attn_kv_chunk=4096, remat="dots")),
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             rules_overrides: dict | None = None,
+             label: str = "baseline", probes: bool = True,
+             variant: str = "baseline") -> dict:
+    cfg = configs.get(arch)
+    var = VARIANTS[variant]
+    if var.get("cfg"):
+        cfg = _dc.replace(cfg, **var["cfg"])
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "label": label,
+        "kind": shape.kind, "applicable": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        _write(out_dir, rec)
+        return rec
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    overrides = dict(rules_overrides or {})
+    overrides.update(var.get("rules", {}))
+    if shape.global_batch < mesh.shape.get("data", 1) * mesh.shape.get(
+            "pod", 1):
+        # batch unshardable (long_500k B=1): replicate batch, shard the
+        # sequence axis of caches over both axes instead (SP).
+        overrides.setdefault("batch", ())
+        overrides.setdefault(
+            "sequence",
+            ("data", "model") if "model" in mesh.axis_names else ("data",),
+        )
+    rules = rules_for_mesh(mesh, **overrides)
+    model = build_model(cfg)
+
+    with mesh:
+        if shape.kind == "train":
+            opt = make_optimizer(cfg)
+            step = make_train_step(model, opt, rules)
+            specs = train_input_specs(model, opt, shape, mesh, rules)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(*specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, rules)
+            specs = serve_input_specs(model, shape, mesh, rules,
+                                      kind="prefill")
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(*specs)
+        else:
+            step = make_decode_step(model, rules)
+            specs = serve_input_specs(model, shape, mesh, rules,
+                                      kind="decode")
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(*specs)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = _cost_dict(compiled)
+    mem = _memory_dict(compiled)
+    print(mem)    # memory_analysis: proves the per-device footprint fits
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})   # cost_analysis headline
+    coll = collective_bytes_from_hlo(compiled.as_text())
+
+    if probes:
+        corrected = probe_corrected_costs(cfg, shape, mesh, rules,
+                                          shape.kind, n_chips)
+        rec["probe_corrected"] = {
+            k: corrected[k] for k in ("flops", "bytes", "coll_bytes")
+        }
+        rec["probe_detail"] = {
+            "raw": corrected["probe_raw"],
+            "wkv_supplement": corrected["wkv_supplement"],
+        }
+        flops = corrected["flops"]
+        bytes_acc = corrected["bytes"]
+        coll_bytes = corrected["coll_bytes"]
+    else:
+        flops = cost.get("flops", 0.0)
+        bytes_acc = cost.get("bytes accessed", 0.0)
+        coll_bytes = float(coll["total_bytes"])
+    # cost_analysis is per-device post-SPMD; roofline terms per DESIGN.md §6
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(cfg, shape)
+    min_b = min_bytes_estimate(cfg, shape, n_chips)
+    t_max = max(t_compute, t_memory, t_coll)
+    t_useful_compute = mf / n_chips / PEAK_FLOPS
+    t_min_memory = min_b / HBM_BW
+    # roofline fraction: useful work at the hardware ceiling of the step's
+    # *useful* bound, over the modelled step time (max of the three terms)
+    frac = (max(t_useful_compute, t_min_memory) / t_max) if t_max > 0 else None
+    rec.update(
+        n_chips=int(n_chips),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost_analysis=cost,
+        memory_analysis=mem,
+        collectives=coll,
+        roofline={
+            "t_compute_s": t_compute,
+            "t_memory_s": t_memory,
+            "t_collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "model_flops_per_chip": mf / n_chips,
+            "useful_flops_ratio": (mf / n_chips) / flops if flops else None,
+            "min_bytes_per_chip": min_b,
+            "useful_bytes_ratio": min_b / bytes_acc if bytes_acc else None,
+            "t_useful_compute_s": t_useful_compute,
+            "t_min_memory_s": t_min_memory,
+            "roofline_fraction": frac,
+        },
+    )
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['label']}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec.get("roofline", {})
+    if rec.get("applicable", True):
+        print(
+            f"[dryrun] {rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:12s}"
+            f" compile={rec.get('compile_s', 0):7.1f}s"
+            f" dominant={r.get('dominant', '-'):10s}"
+            f" frac={r.get('roofline_fraction') or 0:.3f}",
+            flush=True,
+        )
+    else:
+        print(f"[dryrun] {rec['arch']:24s} {rec['shape']:12s} "
+              f"{rec['mesh']:12s} SKIP: {rec['skip_reason']}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the scan-unrolled cost probes")
+    args = ap.parse_args()
+    if args.label is None:
+        args.label = args.variant
+
+    archs = args.arch or (list(configs.ARCH_NAMES) if args.all else [])
+    shapes = args.shape or list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+    if not archs:
+        ap.error("pass --arch or --all")
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, args.out, label=args.label,
+                             probes=not args.no_probes,
+                             variant=args.variant)
+                except Exception:
+                    failures.append((arch, shape, mp))
+                    print(f"[dryrun] FAILED {arch} {shape} multi={mp}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as functions (not module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 4, model: int = 2):
+    """Small mesh over host devices for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def rules_for_mesh(mesh, **overrides) -> ShardingRules:
+    """Default DP(+pod) x FSDP x TP rules adapted to the mesh's axis names."""
+    axes = set(mesh.axis_names)
+    kw = dict(
+        batch=tuple(a for a in ("pod", "data") if a in axes),
+        fsdp="data" if "data" in axes else None,
+        tensor="model" if "model" in axes else None,
+        expert="model" if "model" in axes else None,
+        # caches: sequence dim takes whatever the KV-head dim leaves free
+        # (two-pass resolution in param_pspecs)
+        sequence="model" if "model" in axes else None,
+        act_embed=None,
+    )
+    kw.update(overrides)
+    return ShardingRules(mesh=mesh, **kw)

@@ -1,0 +1,143 @@
+"""Step builders + abstract input specs for train / prefill / decode.
+
+This is the glue the dry-run, the trainer and the server share:
+
+  * ``make_train_step(model, opt, rules)``   (state, batch) -> (state, metrics)
+  * ``make_prefill_step / make_decode_step``  serving steps
+  * ``train_input_specs / serve_input_specs``  ShapeDtypeStruct stand-ins with
+    NamedShardings attached — weak-type-correct, shardable, zero allocation —
+    for ``jax.jit(...).lower(...)`` against the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, ShardingRules
+from repro.models.params import ParamDef, abstract_params, param_pspecs
+from repro.models.zoo import Model
+from repro.optim import OPTIMIZERS
+from repro.optim.schedule import cosine_warmup
+from repro.parallel.sharding import act_spec
+
+
+# --------------------------------------------------------------------- steps
+
+def make_train_step(model: Model, opt, rules: ShardingRules | None,
+                    *, impl: str = "xla", peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    grad_clip: float = 1.0):
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss_fn(p, batch, impl=impl, rules=rules)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        # global-norm clip
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        lr = cosine_warmup(state["opt"]["step"], peak_lr=peak_lr,
+                           warmup=warmup, total=total_steps)
+        new_params, new_opt = opt.update(
+            grads, state["opt"], state["params"], lr_scale=lr / opt.lr
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, rules, *, impl: str = "xla"):
+    def prefill_step(params, cache, batch):
+        return model.prefill_fn(params, cache, batch, impl=impl, rules=rules)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, rules, *, impl: str = "xla"):
+    def decode_step(params, cache, tokens, t):
+        return model.decode_fn(params, cache, tokens, t, impl=impl,
+                               rules=rules)
+
+    return decode_step
+
+
+def make_optimizer(cfg: ArchConfig, **kw):
+    return OPTIMIZERS[cfg.optimizer](**kw)
+
+
+# --------------------------------------------------------------------- specs
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: ShardingRules, *, seq_len: int | None = None):
+    """Abstract train/prefill batch: tokens (+ frames for enc-dec)."""
+    S = seq_len if seq_len is not None else shape.seq_len
+    Bz = shape.global_batch
+    bspec = act_spec(rules, "bn")
+    out = {}
+    if cfg.is_encoder_decoder:
+        Se = Sd = S // 2
+        out["tokens"] = _sds((Bz, Sd), jnp.int32, mesh, bspec)
+        out["frames"] = _sds((Bz, Se, cfg.d_model), jnp.float32, mesh,
+                             act_spec(rules, "bnn"))
+    else:
+        out["tokens"] = _sds((Bz, S), jnp.int32, mesh, bspec)
+    return out
+
+
+def state_specs(model: Model, opt, mesh: Mesh, rules: ShardingRules):
+    """Abstract {params, opt} train state (ShapeDtypeStruct + sharding)."""
+    return {
+        "params": abstract_params(model.defs, rules, mesh),
+        "opt": abstract_params(opt.state_defs(model.defs), rules, mesh),
+    }
+
+
+def cache_specs(model: Model, mesh: Mesh, rules: ShardingRules,
+                bsz: int, smax: int):
+    return abstract_params(model.make_cache_defs(bsz, smax), rules, mesh)
+
+
+def train_input_specs(model: Model, opt, shape: ShapeConfig, mesh: Mesh,
+                      rules: ShardingRules):
+    return (
+        state_specs(model, opt, mesh, rules),
+        batch_specs(model.cfg, shape, mesh, rules),
+    )
+
+
+def serve_input_specs(model: Model, shape: ShapeConfig, mesh: Mesh,
+                      rules: ShardingRules, *, kind: str):
+    """kind: 'prefill' (full-seq forward filling the cache) or 'decode'
+    (one token against a seq_len-deep cache)."""
+    cfg = model.cfg
+    Bz, S = shape.global_batch, shape.seq_len
+    params = abstract_params(model.defs, rules, mesh)
+    cache = cache_specs(model, mesh, rules, Bz, S)
+    bspec = act_spec(rules, "bn")
+    if kind == "prefill":
+        batch = batch_specs(cfg, shape, mesh, rules)
+        return params, cache, batch
+    tokens = _sds((Bz, 1), jnp.int32, mesh, bspec)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, cache, tokens, t
+
+
+def out_shardings_for(tree_specs):
+    """Extract the NamedShardings from a ShapeDtypeStruct tree (or None)."""
+    return jax.tree.map(lambda s: getattr(s, "sharding", None), tree_specs)

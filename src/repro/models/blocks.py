@@ -1,0 +1,305 @@
+"""Per-family residual blocks: dense/MoE transformer, RWKV-6, RG-LRU hybrid.
+
+Block contract (scan-compatible):
+    defs  = <family>_block_defs(cfg)                  # one layer's ParamDefs
+    x, cache' , aux = <family>_block_apply(p, x, ctx, cache)
+``cache`` is the layer's decode-state pytree (None during training).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rwkv6.ops import wkv6
+from repro.models.layers import (
+    Ctx,
+    attn_apply,
+    attn_defs,
+    mla_apply,
+    mla_defs,
+    mlp_apply,
+    mlp_defs,
+    moe_apply,
+    moe_defs,
+    norm_defs,
+    rms_norm,
+)
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+# ------------------------------------------------------------ dense / MoE
+
+def transformer_block_defs(cfg: ArchConfig, *, moe: bool = False) -> dict:
+    attn = mla_defs(cfg) if cfg.mla is not None else attn_defs(cfg)
+    return {
+        "ln1": norm_defs(cfg.d_model),
+        "attn": attn,
+        "ln2": norm_defs(cfg.d_model),
+        "mlp": moe_defs(cfg) if moe else mlp_defs(cfg),
+    }
+
+
+def transformer_block_apply(p, x, ctx: Ctx, cache=None, *, moe: bool = False,
+                            window: int | None = None):
+    h = rms_norm(x, p["ln1"])
+    if ctx.cfg.mla is not None:
+        a, new_cache = mla_apply(p["attn"], h, ctx, cache)
+    else:
+        a, new_cache = attn_apply(p["attn"], h, ctx, cache=cache,
+                                  window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    if moe:
+        if ctx.cfg.moe_impl == "ep_shardmap" and ctx.rules is not None \
+                and getattr(ctx.rules, "mesh", None) is not None:
+            from repro.models.moe_ep import moe_apply_ep
+
+            m, aux = moe_apply_ep(p["mlp"], h, ctx.cfg, ctx.rules)
+        else:
+            m, aux = moe_apply(p["mlp"], h, ctx.cfg, rules=ctx.rules)
+    else:
+        m, aux = mlp_apply(p["mlp"], h, ctx.cfg), jnp.zeros((), f32)
+    return x + m, new_cache, aux
+
+
+# ------------------------------------------------------------ RWKV-6
+
+_RWKV_LORA = 32
+_RWKV_DECAY_LORA = 64
+
+
+def rwkv6_block_defs(cfg: ArchConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H = D // cfg.head_dim
+    N = cfg.head_dim
+    return {
+        "ln1": norm_defs(D),
+        "tmix": {
+            "mu_x": ParamDef((D,), (None,), init="zeros"),
+            "mu": ParamDef((5, D), (None, None), init="zeros"),
+            "lora_a": ParamDef((D, 5 * _RWKV_LORA), ("fsdp", None)),
+            "lora_b": ParamDef((5, _RWKV_LORA, D), (None, None, None),
+                               init="zeros"),
+            "w0": ParamDef((D,), (None,), init="zeros"),
+            "wa": ParamDef((D, _RWKV_DECAY_LORA), ("fsdp", None)),
+            "wb": ParamDef((_RWKV_DECAY_LORA, D), (None, None), init="zeros"),
+            "wr": ParamDef((D, D), ("fsdp", "tensor")),
+            "wk": ParamDef((D, D), ("fsdp", "tensor")),
+            "wv": ParamDef((D, D), ("fsdp", "tensor")),
+            "wg": ParamDef((D, D), ("fsdp", "tensor")),
+            "wo": ParamDef((D, D), ("tensor", "fsdp")),
+            "u": ParamDef((H, N), (None, None), init="zeros"),
+            "gn": norm_defs(D),
+        },
+        "ln2": norm_defs(D),
+        "cmix": {
+            "mu_k": ParamDef((D,), (None,), init="zeros"),
+            "mu_r": ParamDef((D,), (None,), init="zeros"),
+            "wk": ParamDef((D, F), ("fsdp", "tensor")),
+            "wv": ParamDef((F, D), ("tensor", "fsdp")),
+            "wr": ParamDef((D, D), ("fsdp", None)),
+        },
+    }
+
+
+def _token_shift(x, last_x):
+    """shift right by one; first position comes from the decode state."""
+    prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv6_block_apply(p, x, ctx: Ctx, cache=None):
+    """cache = {'tm_x','cm_x': (B,D), 'wkv': (B,H,N,N)} or None."""
+    cfg = ctx.cfg
+    B, T, D = x.shape
+    H, N = D // cfg.head_dim, cfg.head_dim
+
+    # ---- time mix -----------------------------------------------------------
+    tm = p["tmix"]
+    h = rms_norm(x, p["ln1"])
+    last = cache["tm_x"] if cache is not None else jnp.zeros((B, D), h.dtype)
+    prev = _token_shift(h, last)
+    xx = prev - h
+    xxx = h + xx * tm["mu_x"]
+    lo = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, tm["lora_a"]))
+    lo = lo.reshape(B, T, 5, _RWKV_LORA)
+    mix = tm["mu"][None, None] + jnp.einsum(
+        "btfr,frd->btfd", lo, tm["lora_b"]
+    )
+    xr, xk, xv, xw, xg = [h + xx * mix[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("btd,de->bte", xr, tm["wr"]).reshape(B, T, H, N)
+    k = jnp.einsum("btd,de->bte", xk, tm["wk"]).reshape(B, T, H, N)
+    v = jnp.einsum("btd,de->bte", xv, tm["wv"]).reshape(B, T, H, N)
+    g = jnp.einsum("btd,de->bte", xg, tm["wg"])
+    logw = -jnp.exp(
+        tm["w0"].astype(f32)
+        + jnp.einsum("btd,dr->btr", xw.astype(f32), tm["wa"].astype(f32))
+        @ tm["wb"].astype(f32)
+    )
+    w = jnp.exp(logw).reshape(B, T, H, N)
+
+    s0 = cache["wkv"] if cache is not None else None
+    o, sT = wkv6(r, k, v, w.astype(r.dtype), tm["u"], initial_state=s0,
+                 impl=ctx.impl if ctx.impl != "pallas" else "pallas")
+    o = o.reshape(B, T, D)
+    o = rms_norm(o, tm["gn"]) * jax.nn.silu(g)
+    x = x + jnp.einsum("btd,de->bte", o, tm["wo"])
+
+    # ---- channel mix ---------------------------------------------------------
+    cm = p["cmix"]
+    h2 = rms_norm(x, p["ln2"])
+    last2 = cache["cm_x"] if cache is not None else jnp.zeros((B, D), h2.dtype)
+    prev2 = _token_shift(h2, last2)
+    xx2 = prev2 - h2
+    hk = h2 + xx2 * cm["mu_k"]
+    hr = h2 + xx2 * cm["mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", hk, cm["wk"])))
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", hr, cm["wr"])) * jnp.einsum(
+        "btf,fd->btd", kk, cm["wv"]
+    )
+    x = x + out
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"tm_x": h[:, -1], "cm_x": h2[:, -1], "wkv": sT}
+    return x, new_cache, jnp.zeros((), f32)
+
+
+# ------------------------------------------------------------ RG-LRU (Griffin)
+
+_CONV_W = 4
+_LRU_C = 8.0
+
+
+def griffin_rec_block_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "ln1": norm_defs(D),
+        "rec": {
+            "wx": ParamDef((D, W), ("fsdp", "tensor")),
+            "wy": ParamDef((D, W), ("fsdp", "tensor")),
+            "conv_w": ParamDef((_CONV_W, W), (None, "tensor"), init="zeros"),
+            "conv_b": ParamDef((W,), ("tensor",), init="zeros"),
+            "wa_gate": ParamDef((W, W), ("tensor", None)),
+            "wx_gate": ParamDef((W, W), ("tensor", None)),
+            "lam": ParamDef((W,), ("tensor",), init="ones"),
+            "wo": ParamDef((W, D), ("tensor", "fsdp")),
+        },
+        "ln2": norm_defs(D),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def griffin_rec_block_apply(p, x, ctx: Ctx, cache=None):
+    """cache = {'conv': (B, CONV_W-1, W), 'h': (B, W)} or None."""
+    cfg = ctx.cfg
+    B, T, D = x.shape
+    W = cfg.lru_width or D
+    rec = p["rec"]
+    h = rms_norm(x, p["ln1"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", h, rec["wy"]),
+                       approximate=True)
+    u = jnp.einsum("btd,dw->btw", h, rec["wx"])
+
+    # causal depthwise temporal conv, width 4
+    prev = (
+        cache["conv"] if cache is not None
+        else jnp.zeros((B, _CONV_W - 1, W), u.dtype)
+    )
+    upad = jnp.concatenate([prev, u], axis=1)             # (B, T+3, W)
+    conv = sum(
+        upad[:, i : i + T, :] * rec["conv_w"][i][None, None]
+        for i in range(_CONV_W)
+    ) + rec["conv_b"]
+
+    # RG-LRU gates
+    ra = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, rec["wa_gate"]))
+    ix = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, rec["wx_gate"]))
+    log_a = (-_LRU_C * jax.nn.softplus(rec["lam"].astype(f32)))[None, None] \
+        * ra.astype(f32)
+    gx = ix * conv
+    h0 = cache["h"] if cache is not None else None
+    hs, hT = rglru(log_a, gx, h0,
+                   impl=ctx.impl if ctx.impl != "pallas" else "pallas")
+
+    y = hs * gate
+    x = x + jnp.einsum("btw,wd->btd", y, rec["wo"])
+    h2 = rms_norm(x, p["ln2"])
+    x = x + mlp_apply(p["mlp"], h2, cfg)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": upad[:, -(_CONV_W - 1):, :], "h": hT}
+    return x, new_cache, jnp.zeros((), f32)
+
+
+def griffin_attn_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": norm_defs(cfg.d_model),
+        "attn": attn_defs(cfg),
+        "ln2": norm_defs(cfg.d_model),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def griffin_attn_block_apply(p, x, ctx: Ctx, cache=None):
+    h = rms_norm(x, p["ln1"])
+    a, new_cache = attn_apply(p["attn"], h, ctx, cache=cache,
+                              window=ctx.cfg.local_window)
+    x = x + a
+    x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]), ctx.cfg)
+    return x, new_cache, jnp.zeros((), f32)
+
+
+# ------------------------------------------------------------ encoder (bidi)
+
+def encoder_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": norm_defs(cfg.d_model),
+        "attn": attn_defs(cfg),
+        "ln2": norm_defs(cfg.d_model),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def encoder_block_apply(p, x, ctx: Ctx):
+    h = rms_norm(x, p["ln1"])
+    a, _ = attn_apply(p["attn"], h, ctx, causal=False)
+    x = x + a
+    x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]), ctx.cfg)
+    return x
+
+
+def decoder_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": norm_defs(cfg.d_model),
+        "self_attn": attn_defs(cfg),
+        "ln_x": norm_defs(cfg.d_model),
+        "cross_attn": attn_defs(cfg, cross=True),
+        "ln2": norm_defs(cfg.d_model),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def decoder_block_apply(p, x, ctx: Ctx, enc_out, cache=None, enc_len=None):
+    """cache = {'self': kv-cache}; enc_len masks padded enc_out buffers."""
+    h = rms_norm(x, p["ln1"])
+    a, new_self = attn_apply(
+        p["self_attn"], h, ctx,
+        cache=None if cache is None else cache["self"],
+    )
+    x = x + a
+    h = rms_norm(x, p["ln_x"])
+    c, _ = attn_apply(p["cross_attn"], h, ctx, kv_src=enc_out,
+                      kv_src_len=enc_len, causal=False, use_rope=False)
+    x = x + c
+    x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"]), ctx.cfg)
+    new_cache = None if cache is None else {"self": new_self}
+    return x, new_cache, jnp.zeros((), f32)

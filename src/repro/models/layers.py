@@ -1,0 +1,369 @@
+"""Shared model primitives: norms, RoPE, attention, MLP, MoE, MLA.
+
+Pure-functional: each sub-module exposes ``<name>_defs(cfg) -> ParamDef tree``
+and ``<name>_apply(params, ...) -> outputs``.  Sharding comes exclusively from
+the logical axis names inside the defs (resolved by ShardingRules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context threaded through blocks."""
+    cfg: ArchConfig
+    impl: str = "xla"                 # attention/kernel implementation
+    decode: bool = False
+    positions: Any = None             # (B, S) absolute positions
+    cache_len: Any = None             # traced scalar: #valid cache entries
+    rules: Any = None                 # ShardingRules for act constraints
+
+
+# ---------------------------------------------------------------- norms/rope
+
+def norm_defs(d: int) -> dict:
+    return {"scale": ParamDef((d,), (None,), init="zeros")}  # (1+s) parametrization
+
+
+def rms_norm(x, p, eps: float = 1e-6):
+    xf = x.astype(f32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(f32))).astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D) with D even; positions: (B, S)."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freq = jnp.exp(
+        -jnp.log(theta) * jnp.arange(half, dtype=f32) / half
+    )                                                    # (half,)
+    ang = positions.astype(f32)[..., None] * freq        # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attn_defs(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("fsdp", "tensor", None)),
+        "wk": ParamDef((D, KV, hd), ("fsdp", "tensor", None)),
+        "wv": ParamDef((D, KV, hd), ("fsdp", "tensor", None)),
+        "wo": ParamDef((H, hd, D), ("tensor", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        d["qnorm"] = norm_defs(hd)
+        d["knorm"] = norm_defs(hd)
+    return d
+
+
+def attn_apply(
+    p, x, ctx: Ctx, *,
+    window: int | None = None,
+    cache: dict | None = None,
+    kv_src=None,                # cross-attention: encoder output
+    kv_src_len=None,            # #valid rows of kv_src (padded buffers)
+    causal: bool = True,
+    use_rope: bool = True,
+):
+    """Returns (y, new_cache).  Cache: {'k','v'}: (B, Smax, KV, hd)."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv_src is None else kv_src
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    if use_rope and kv_src is None:
+        q = apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and not ctx.decode:
+        # prefill: write k/v into the cache buffer starting at 0
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+        }
+        q_start, kv_len, ks, vs = 0, None, k, v
+    elif cache is not None:
+        # decode: append at cache_len, attend over the whole buffer masked
+        t = ctx.cache_len
+        ks = jax.lax.dynamic_update_slice(cache["k"], k, (0, t, 0, 0))
+        vs = jax.lax.dynamic_update_slice(cache["v"], v, (0, t, 0, 0))
+        new_cache = {"k": ks, "v": vs}
+        q_start, kv_len = t, t + S
+    else:
+        q_start, kv_len, ks, vs = 0, kv_src_len, k, v
+
+    y = flash_attention(
+        q, ks, vs,
+        causal=causal and kv_src is None,
+        window=window,
+        q_start=q_start,
+        kv_len=kv_len,
+        impl=ctx.impl,
+        kv_chunk=cfg.attn_kv_chunk,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------- MLP / MoE
+
+def mlp_defs(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamDef((D, F), ("fsdp", "tensor")),
+            "wi_up": ParamDef((D, F), ("fsdp", "tensor")),
+            "wo": ParamDef((F, D), ("tensor", "fsdp")),
+        }
+    return {
+        "wi": ParamDef((D, F), ("fsdp", "tensor")),
+        "wo": ParamDef((F, D), ("tensor", "fsdp")),
+    }
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda z: jax.nn.gelu(z, approximate=True)
+        )
+        h = act(g) * jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"]),
+                        approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    d = {
+        "router": ParamDef((D, E), (None, None), dtype=f32),
+        "wi_gate": ParamDef((E, D, F), ("expert", "fsdp", None)),
+        "wi_up": ParamDef((E, D, F), ("expert", "fsdp", None)),
+        "wo": ParamDef((E, F, D), ("expert", None, "fsdp")),
+    }
+    if cfg.n_shared_experts:
+        d["shared"] = mlp_defs(cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return d
+
+
+def moe_apply(p, x, cfg: ArchConfig, capacity_factor: float | None = None,
+              rules=None):
+    """Sort-based top-k dispatch with per-expert capacity (GShard-style drop).
+
+    Returns (y, aux_loss).  Expert axis shards over the 'expert' logical axis
+    (EP); the dispatch buffer reshape induces the all-to-all under pjit.
+    ``cfg.moe_dispatch_sharding`` pins the dispatch buffers with explicit
+    constraints (EXPERIMENTS.md §Perf: without them XLA replicates the
+    (E, cap, D) buffers — 150 GB/chip on deepseek-v3).
+    """
+    from repro.parallel.sharding import shard_act
+
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    constrain = cfg.moe_dispatch_sharding and rules is not None
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_per_tok
+    N = B * S
+    xt = x.reshape(N, D)
+    if constrain:
+        xt = shard_act(xt, rules, "bn")
+
+    logits = (xt.astype(f32) @ p["router"]).astype(f32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=f32), axis=0
+    )
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(-1)                               # (N*K,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    tok_of_slot = sort_idx // K
+    gate_of_slot = gate_vals.reshape(-1)[sort_idx]
+
+    counts = jnp.bincount(flat_e, length=E)
+    group_start = jnp.cumsum(counts) - counts                     # (E,)
+    rank = jnp.arange(N * K) - group_start[sorted_e]
+
+    cap = max(8, int(round(N * K / E * capacity_factor / 8)) * 8)
+    cap = min(cap, N)
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, E * cap)        # drop slot
+
+    gathered = jnp.where(keep[:, None], xt[tok_of_slot], 0.0)
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[dest].set(gathered)
+    buf = buf[:-1].reshape(E, cap, D)
+    if constrain:
+        buf = shard_act(buf, rules, "xbn")   # experts x EP, capacity x DP
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"])
+    h = jax.nn.silu(g) * jnp.einsum("ecd,edf->ecf", buf, p["wi_up"])
+    if constrain:
+        h = shard_act(h, rules, "xbn")
+    yb = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * cap, D)
+    if constrain:
+        yb = shard_act(yb, rules, "bn")
+
+    y_slot = jnp.where(keep[:, None], yb[jnp.clip(dest, 0, E * cap - 1)], 0.0)
+    y = jnp.zeros((N, D), x.dtype).at[tok_of_slot].add(
+        y_slot * gate_of_slot[:, None].astype(x.dtype)
+    )
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg).reshape(N, D)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------- MLA
+
+def mla_defs(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": ParamDef((D, m.q_lora_rank), ("fsdp", None)),
+        "q_norm": norm_defs(m.q_lora_rank),
+        "w_uq": ParamDef((m.q_lora_rank, H, qk), (None, "tensor", None)),
+        "w_dkv": ParamDef(
+            (D, m.kv_lora_rank + m.qk_rope_head_dim), ("fsdp", None)
+        ),
+        "kv_norm": norm_defs(m.kv_lora_rank),
+        "w_uk": ParamDef(
+            (m.kv_lora_rank, H, m.qk_nope_head_dim), (None, "tensor", None)
+        ),
+        "w_uv": ParamDef(
+            (m.kv_lora_rank, H, m.v_head_dim), (None, "tensor", None)
+        ),
+        "wo": ParamDef((H, m.v_head_dim, D), ("tensor", None, "fsdp")),
+    }
+
+
+def mla_apply(p, x, ctx: Ctx, cache: dict | None = None):
+    """Multi-head latent attention.  Cache stores the *latent* c_kv + shared
+    k_rope (the paper-aligned memory win: 576 vs 2·H·hd floats per token).
+
+    Prefill/train: expanded MHA.  Decode: absorbed form (q projected into the
+    latent space; never materializes per-head K/V).
+    """
+    cfg = ctx.cfg
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(
+        q[..., m.qk_nope_head_dim:], ctx.positions, cfg.rope_theta
+    )
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(
+        dkv[..., m.kv_lora_rank:][:, :, None, :], ctx.positions,
+        cfg.rope_theta,
+    )[:, :, 0]                                            # (B,S,rope)
+
+    new_cache = None
+    if cache is not None and not ctx.decode:
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], c_kv, 0, 1
+            ),
+            "krope": jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope, 0, 1
+            ),
+        }
+    if cache is None or not ctx.decode:
+        # expanded attention (training / prefill)
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim)
+            )], -1,
+        )
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        y = flash_attention(
+            qq, k, v, causal=True, impl=ctx.impl, softmax_scale=scale
+        )
+    else:
+        # absorbed decode: score via latent space
+        t = ctx.cache_len
+        ckv_s = jax.lax.dynamic_update_slice(cache["ckv"], c_kv, (0, t, 0))
+        krope_s = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope, (0, t, 0)
+        )
+        new_cache = {"ckv": ckv_s, "krope": krope_s}
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(f32),
+                       ckv_s.astype(f32))
+            + jnp.einsum("bshk,btk->bhst", q_rope.astype(f32),
+                         krope_s.astype(f32))
+        ) * scale
+        Smax = ckv_s.shape[1]
+        kpos = jnp.arange(Smax)[None, None, None, :]
+        qpos = (t + jnp.arange(S))[None, None, :, None]
+        scores = jnp.where(kpos <= qpos, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", w, ckv_s.astype(f32))
+        y = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bshv,hvd->bsd", y, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_defs(cfg: ArchConfig) -> dict:
+    d = {"tok": ParamDef((cfg.vocab_size, cfg.d_model), ("tensor", "fsdp"),
+                         init="embed")}
+    if not cfg.tie_embeddings:
+        d["out"] = ParamDef((cfg.d_model, cfg.vocab_size), ("fsdp", "tensor"))
+    return d
+
+
+def embed_apply(p, tokens, cfg: ArchConfig):
+    x = p["tok"][tokens]
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def logits_apply(p, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, p["tok"]).astype(f32)
+    return jnp.einsum("bsd,dv->bsv", x, p["out"]).astype(f32)

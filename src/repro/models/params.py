@@ -1,0 +1,152 @@
+"""Parameter-definition mini-framework (keeps init and sharding in sync).
+
+Every module describes its parameters as a pytree of :class:`ParamDef`
+(shape + per-dimension *logical* axis names + initializer).  From one
+definition tree we derive:
+
+  * ``init_params``   — materialized arrays (real training / smoke tests)
+  * ``abstract_params`` — ShapeDtypeStructs with NamedSharding attached
+                          (the dry-run path: zero allocation)
+  * ``param_pspecs``  — PartitionSpec tree via :class:`ShardingRules`
+
+Logical axis vocabulary (resolved by ShardingRules):
+  "batch" "fsdp" "tensor" "expert" "sequence" — see configs/base.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[Any, ...]            # one logical name (or None) per dim
+    init: str = "normal"                # normal | zeros | ones | embed
+    dtype: Any = jnp.bfloat16
+    scale_axis: int = 0                 # fan-in axis for init scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _init_leaf(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.shape[d.scale_axis] if d.shape else 1
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    if d.init == "embed":
+        std = 0.02          # GPT-style: keeps tied-logit scales sane
+    x = jax.random.normal(key, d.shape, jnp.float32) * std
+    return x.astype(d.dtype)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def param_pspecs(defs, rules: ShardingRules, mesh: Mesh | None = None):
+    """Resolve logical axes -> PartitionSpecs.
+
+    When ``mesh`` is given, any mesh axis whose size does not evenly divide
+    the tensor dimension is dropped (replicated) — e.g. 8 GQA KV heads under
+    16-way TP stay replicated rather than failing to shard.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+
+    def spec(d: ParamDef) -> P:
+        axes: list = [None] * len(d.shape)
+        used: set = set()
+
+        def claim(i: int, dim: int, name) -> None:
+            mesh_axis = rules.resolve(name)
+            if mesh_axis is None:
+                return
+            flat = (mesh_axis,) if isinstance(mesh_axis, str) \
+                else tuple(mesh_axis)
+            free = []
+            rem = dim
+            for a in flat:
+                if a in used:
+                    continue
+                sz = sizes.get(a)
+                if sz is not None and rem % sz != 0:
+                    continue                      # indivisible -> replicate
+                free.append(a)
+                if sz:
+                    rem //= sz
+            if not free:
+                return
+            used.update(free)
+            axes[i] = tuple(free) if len(free) > 1 else free[0]
+
+        # two passes: 'sequence' is the fallback axis — it only takes mesh
+        # axes left over by the primary (tensor/expert/fsdp/batch) dims, so
+        # e.g. a 16-KV-head cache shards heads over 'model' while an 8-KV-head
+        # cache (indivisible by 16) shards its sequence dim instead.
+        for i, (dim, name) in enumerate(zip(d.shape, d.logical)):
+            if name != "sequence":
+                claim(i, dim, name)
+        for i, (dim, name) in enumerate(zip(d.shape, d.logical)):
+            if name == "sequence":
+                claim(i, dim, name)
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+
+    return jax.tree.map(spec, defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, rules: ShardingRules, mesh: Mesh):
+    """ShapeDtypeStruct tree with shardings — for .lower() without allocation."""
+    specs = param_pspecs(defs, rules, mesh)
+
+    def mk(d: ParamDef, s: P):
+        return jax.ShapeDtypeStruct(
+            d.shape, d.dtype, sharding=NamedSharding(mesh, s)
+        )
+
+    return jax.tree.map(mk, defs, specs, is_leaf=_is_def)
+
+
+def stack_defs(defs, n: int):
+    """Add a leading scan-layer axis of size ``n`` to every ParamDef."""
+    def st(d: ParamDef) -> ParamDef:
+        return ParamDef(
+            shape=(n, *d.shape),
+            logical=(None, *d.logical),
+            init=d.init,
+            dtype=d.dtype,
+            scale_axis=d.scale_axis + 1,
+        )
+    return jax.tree.map(st, defs, is_leaf=_is_def)
+
+
+def init_stacked(defs, key, n: int):
+    """Init ``n`` layers with independent keys, stacked on axis 0."""
+    keys = jax.random.split(key, n)
+    per_layer = [init_params(defs, k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *per_layer)
+
+
+def leaf_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return sum(math.prod(d.shape) for d in leaves)

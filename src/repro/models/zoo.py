@@ -1,0 +1,710 @@
+"""Model zoo: assemble per-family models from blocks.
+
+``build_model(cfg) -> Model`` with:
+    defs        ParamDef tree (scan-stacked layers)
+    init(key)   materialized params
+    loss_fn(params, batch, *, impl, rules)            -> (loss, metrics)
+    make_cache_defs(batch_size, max_len)              -> ParamDef tree (decode state)
+    init_cache(batch_size, max_len)                   -> zeroed decode state
+    prefill_fn(params, cache, batch, *, impl, rules)  -> (logits_last, cache)
+    decode_fn(params, cache, tokens, t, *, impl, rules) -> (logits, cache)
+
+Layers are stacked and scanned (one HLO while loop per homogeneous stack) to
+keep compile time and HLO size bounded at 61-layer/512-device scale.
+``cfg.remat == 'block'`` wraps each scanned block in jax.checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, ShardingRules
+from repro.models import blocks as B
+from repro.models.layers import (
+    Ctx, embed_apply, embed_defs, logits_apply, norm_defs, rms_norm,
+)
+from repro.models.params import ParamDef, init_params, stack_defs
+from repro.parallel.sharding import shard_act
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    defs: Any
+    init: Callable
+    loss_fn: Callable
+    make_cache_defs: Callable
+    init_cache: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+
+
+# ----------------------------------------------------------------- helpers
+
+def _stacked_init(defs_one, key, n):
+    keys = jax.random.split(key, n)
+    outs = [init_params(defs_one, k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *outs)
+
+
+def _maybe_remat(body, remat):
+    """remat policy: False/'none' -> off; True/'block' -> full recompute;
+    'dots' -> selective (save matmul outputs, recompute elementwise)."""
+    if not remat or remat == "none":
+        return body
+    if remat == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(body)
+
+
+def _scan_stack(apply_one, stacked_p, x, ctx, caches, remat, unroll=False):
+    """Scan ``apply_one(p_layer, x, ctx, cache_layer)`` over the layer axis."""
+    has_cache = caches is not None
+
+    def body(x, layer):
+        if has_cache:
+            p, c = layer
+            x2, c2, aux = apply_one(p, x, ctx, c)
+            return x2, (c2, aux)
+        (p,) = layer
+        x2, _, aux = apply_one(p, x, ctx, None)
+        return x2, aux
+
+    body = _maybe_remat(body, remat)
+    xs = (stacked_p, caches) if has_cache else (stacked_p,)
+    x, ys = lax.scan(body, x, xs, unroll=bool(unroll))
+    if has_cache:
+        new_caches, auxs = ys
+        return x, new_caches, jnp.sum(auxs)
+    return x, None, jnp.sum(ys)
+
+
+def _xent(logits, targets, mask):
+    lz = jax.nn.log_softmax(logits.astype(f32), axis=-1)
+    ll = jnp.take_along_axis(lz, targets[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(mask.sum(), 1)
+    return -(ll * mask).sum() / n
+
+
+def _lm_loss(logits, tokens):
+    """next-token CE: logits[:, :-1] predicts tokens[:, 1:]."""
+    return _xent(logits[:, :-1], tokens[:, 1:], jnp.ones_like(tokens[:, 1:]))
+
+
+def _kv_cache_defs(cfg: ArchConfig, n_layers, bsz, smax, window=None):
+    eff = min(smax, window) if window else smax
+    shape = (n_layers, bsz, eff, cfg.n_kv_heads, cfg.head_dim)
+    # NOTE (§Perf A2, refuted): sharding head_dim over 'model' when the KV
+    # heads don't divide the axis cuts cache/chip 16x, but XLA answers with
+    # per-layer K all-gathers (9.2 GB/chip/step) -- 2x slower end to end.
+    # A split-K distributed flash-decode (shard_map) is the right fix; the
+    # linear layout stays the default.
+    logical = (None, "batch", "sequence", "tensor", None)
+    return {
+        "k": ParamDef(shape, logical, init="zeros"),
+        "v": ParamDef(shape, logical, init="zeros"),
+    }
+
+
+# ----------------------------------------------------------------- decoder LM
+# (dense: gemma / llama / granite / starcoder / chameleon;
+#  moe: granite-moe / deepseek-v3 with MLA + optional MTP)
+
+def build_decoder_lm(cfg: ArchConfig) -> Model:
+    n_dense = cfg.n_dense_layers if cfg.n_experts else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+
+    block_defs_dense = B.transformer_block_defs(cfg, moe=False)
+    block_defs_moe = B.transformer_block_defs(cfg, moe=True) if n_moe else None
+
+    defs = {"embed": embed_defs(cfg), "ln_f": norm_defs(cfg.d_model)}
+    if n_dense:
+        defs["dense"] = stack_defs(block_defs_dense, n_dense)
+    if n_moe:
+        defs["moe"] = stack_defs(block_defs_moe, n_moe)
+    if cfg.mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * cfg.d_model, cfg.d_model),
+                             ("fsdp", "tensor")),
+            "block": B.transformer_block_defs(cfg, moe=False),
+            "ln": norm_defs(cfg.d_model),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {"embed": init_params(defs["embed"], ks[0]),
+             "ln_f": init_params(defs["ln_f"], ks[1])}
+        if n_dense:
+            p["dense"] = _stacked_init(block_defs_dense, ks[2], n_dense)
+        if n_moe:
+            p["moe"] = _stacked_init(block_defs_moe, ks[3], n_moe)
+        if cfg.mtp:
+            p["mtp"] = init_params(defs["mtp"], jax.random.fold_in(key, 9))
+        return p
+
+    dense_apply = functools.partial(B.transformer_block_apply, moe=False)
+    moe_apply_ = functools.partial(B.transformer_block_apply, moe=True)
+
+    def backbone(params, x, ctx, caches, rules):
+        remat = cfg.remat if not ctx.decode else "none"
+        aux = jnp.zeros((), f32)
+        nc = {}
+        x = shard_act(x, rules, "bsd")
+        if n_dense:
+            c = caches.get("dense") if caches else None
+            x, c2, a = _scan_stack(dense_apply, params["dense"], x, ctx, c,
+                                   remat, unroll=cfg.scan_unroll)
+            aux += a
+            if caches:
+                nc["dense"] = c2
+        if n_moe:
+            c = caches.get("moe") if caches else None
+            x, c2, a = _scan_stack(moe_apply_, params["moe"], x, ctx, c,
+                                   remat, unroll=cfg.scan_unroll)
+            aux += a
+            if caches:
+                nc["moe"] = c2
+        x = shard_act(x, rules, "bsd")
+        return x, (nc if caches else None), aux
+
+    def loss_fn(params, batch, *, impl="xla", rules=None):
+        tokens = batch["tokens"]
+        Bz, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x, _, aux = backbone(params, x, ctx, None, rules)
+        h = rms_norm(x, params["ln_f"])
+        logits = logits_apply(params["embed"], h, cfg)
+        loss = _lm_loss(logits, tokens)
+        metrics = {"lm_loss": loss, "aux_loss": aux}
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux
+        if cfg.mtp:
+            # DeepSeek-V3 multi-token prediction: combine h_t with emb of
+            # token t+1, run one extra block, predict token t+2.
+            emb_next = embed_apply(params["embed"], tokens, cfg)
+            cat = jnp.concatenate(
+                [rms_norm(h[:, :-1], params["mtp"]["ln"]),
+                 emb_next[:, 1:]], -1,
+            )
+            xm = jnp.einsum("bsd,de->bse", cat, params["mtp"]["proj"])
+            ctx_m = Ctx(cfg=cfg, impl=impl, positions=pos[:, :-1])
+            xm, _, _ = B.transformer_block_apply(
+                params["mtp"]["block"], xm, ctx_m, None, moe=False
+            )
+            lg = logits_apply(params["embed"],
+                              rms_norm(xm, params["ln_f"]), cfg)
+            mtp_loss = _xent(lg[:, :-1], tokens[:, 2:],
+                             jnp.ones_like(tokens[:, 2:]))
+            metrics["mtp_loss"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ---- serving ---------------------------------------------------------
+    def make_cache_defs(bsz, smax):
+        c = {}
+        if cfg.mla is not None:
+            m = cfg.mla
+            if n_dense:
+                c["dense"] = {
+                    "ckv": ParamDef((n_dense, bsz, smax, m.kv_lora_rank),
+                                    (None, "batch", "sequence", "tensor"),
+                                    init="zeros"),
+                    "krope": ParamDef((n_dense, bsz, smax, m.qk_rope_head_dim),
+                                      (None, "batch", "sequence", None),
+                                      init="zeros"),
+                }
+            if n_moe:
+                c["moe"] = {
+                    "ckv": ParamDef((n_moe, bsz, smax, m.kv_lora_rank),
+                                    (None, "batch", "sequence", "tensor"),
+                                    init="zeros"),
+                    "krope": ParamDef((n_moe, bsz, smax, m.qk_rope_head_dim),
+                                      (None, "batch", "sequence", None),
+                                      init="zeros"),
+                }
+        else:
+            if n_dense:
+                c["dense"] = _kv_cache_defs(cfg, n_dense, bsz, smax)
+            if n_moe:
+                c["moe"] = _kv_cache_defs(cfg, n_moe, bsz, smax)
+        return c
+
+    def init_cache(bsz, smax):
+        return jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype),
+            make_cache_defs(bsz, smax),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+
+    def _fwd_cached(params, cache, tokens, t, *, impl, rules, decode):
+        Bz, S = tokens.shape
+        if decode:
+            pos = jnp.broadcast_to(t + jnp.arange(S)[None], (Bz, S))
+        else:
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, decode=decode,
+                  cache_len=t, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x, nc, _ = backbone(params, x, ctx, cache, rules)
+        h = rms_norm(x[:, -1:], params["ln_f"])
+        logits = logits_apply(params["embed"], h, cfg)
+        return logits[:, 0], nc
+
+    def prefill_fn(params, cache, batch, *, impl="xla", rules=None):
+        return _fwd_cached(params, cache, batch["tokens"], 0,
+                           impl=impl, rules=rules, decode=False)
+
+    def decode_fn(params, cache, tokens, t, *, impl="xla", rules=None):
+        return _fwd_cached(params, cache, tokens, t,
+                           impl=impl, rules=rules, decode=True)
+
+    return Model(cfg, defs, init, loss_fn, make_cache_defs, init_cache,
+                 prefill_fn, decode_fn)
+
+
+# ----------------------------------------------------------------- RWKV-6 LM
+
+def build_rwkv_lm(cfg: ArchConfig) -> Model:
+    block_defs = B.rwkv6_block_defs(cfg)
+    defs = {
+        "embed": embed_defs(cfg),
+        "blocks": stack_defs(block_defs, cfg.n_layers),
+        "ln_f": norm_defs(cfg.d_model),
+    }
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": init_params(defs["embed"], ks[0]),
+            "blocks": _stacked_init(block_defs, ks[1], cfg.n_layers),
+            "ln_f": init_params(defs["ln_f"], ks[2]),
+        }
+
+    def loss_fn(params, batch, *, impl="xla", rules=None):
+        tokens = batch["tokens"]
+        ctx = Ctx(cfg=cfg, impl=impl, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x = shard_act(x, rules, "bsd")
+        x, _, _ = _scan_stack(B.rwkv6_block_apply, params["blocks"], x, ctx,
+                              None, cfg.remat, unroll=cfg.scan_unroll)
+        logits = logits_apply(params["embed"], rms_norm(x, params["ln_f"]),
+                              cfg)
+        loss = _lm_loss(logits, tokens)
+        return loss, {"loss": loss, "lm_loss": loss}
+
+    H, N = cfg.d_model // cfg.head_dim, cfg.head_dim
+
+    def make_cache_defs(bsz, smax):
+        L, D = cfg.n_layers, cfg.d_model
+        return {
+            "tm_x": ParamDef((L, bsz, D), (None, "batch", None),
+                             init="zeros"),
+            "cm_x": ParamDef((L, bsz, D), (None, "batch", None),
+                             init="zeros"),
+            "wkv": ParamDef((L, bsz, H, N, N),
+                            (None, "batch", "tensor", None, None),
+                            init="zeros", dtype=f32),
+        }
+
+    def init_cache(bsz, smax):
+        return jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype), make_cache_defs(bsz, smax),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+
+    def _fwd(params, cache, tokens, t, *, impl, rules, decode):
+        ctx = Ctx(cfg=cfg, impl=impl, decode=decode, cache_len=t, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x = shard_act(x, rules, "bsd")
+        x, nc, _ = _scan_stack(B.rwkv6_block_apply, params["blocks"], x, ctx,
+                               cache, False, unroll=cfg.scan_unroll)
+        logits = logits_apply(
+            params["embed"], rms_norm(x[:, -1:], params["ln_f"]), cfg
+        )
+        return logits[:, 0], nc
+
+    def prefill_fn(params, cache, batch, *, impl="xla", rules=None):
+        return _fwd(params, cache, batch["tokens"], 0, impl=impl,
+                    rules=rules, decode=False)
+
+    def decode_fn(params, cache, tokens, t, *, impl="xla", rules=None):
+        return _fwd(params, cache, tokens, t, impl=impl, rules=rules,
+                    decode=True)
+
+    return Model(cfg, defs, init, loss_fn, make_cache_defs, init_cache,
+                 prefill_fn, decode_fn)
+
+
+# ----------------------------------------------------------------- Griffin
+
+def build_griffin_lm(cfg: ArchConfig) -> Model:
+    """recurrentgemma: pattern (rec, rec, attn) repeating over n_layers."""
+    pattern = cfg.block_pattern            # e.g. ("rec", "rec", "attn")
+    period = len(pattern)
+    n_groups = cfg.n_layers // period
+    n_tail = cfg.n_layers - n_groups * period
+    tail_pattern = pattern[:n_tail]
+    n_rec_g = sum(1 for b in pattern if b == "rec")
+    n_attn_g = period - n_rec_g
+
+    rec_defs = B.griffin_rec_block_defs(cfg)
+    attn_defs_ = B.griffin_attn_block_defs(cfg)
+
+    group_defs = {
+        "rec": stack_defs(rec_defs, n_groups * n_rec_g),
+        "attn": stack_defs(attn_defs_, n_groups * n_attn_g),
+    }
+    defs = {
+        "embed": embed_defs(cfg),
+        "groups": group_defs,
+        "tail": [
+            (rec_defs if b == "rec" else attn_defs_) for b in tail_pattern
+        ],
+        "ln_f": norm_defs(cfg.d_model),
+    }
+
+    def init(key):
+        ks = jax.random.split(key, 4 + n_tail)
+        return {
+            "embed": init_params(defs["embed"], ks[0]),
+            "groups": {
+                "rec": _stacked_init(rec_defs, ks[1], n_groups * n_rec_g),
+                "attn": _stacked_init(attn_defs_, ks[2], n_groups * n_attn_g),
+            },
+            "tail": [
+                init_params(d, ks[4 + i]) for i, d in enumerate(defs["tail"])
+            ],
+            "ln_f": init_params(defs["ln_f"], ks[3]),
+        }
+
+    def group_view(p, caches):
+        """reshape stacks into per-group leading axis for scan."""
+        rec = jax.tree.map(
+            lambda a: a.reshape(n_groups, n_rec_g, *a.shape[1:]), p["rec"]
+        )
+        attn = jax.tree.map(
+            lambda a: a.reshape(n_groups, n_attn_g, *a.shape[1:]), p["attn"]
+        )
+        if caches is None:
+            return (rec, attn), None
+        crec = jax.tree.map(
+            lambda a: a.reshape(n_groups, n_rec_g, *a.shape[1:]),
+            caches["rec"],
+        )
+        cattn = jax.tree.map(
+            lambda a: a.reshape(n_groups, n_attn_g, *a.shape[1:]),
+            caches["attn"],
+        )
+        return (rec, attn), (crec, cattn)
+
+    def backbone(params, x, ctx, caches, rules):
+        (rec, attn), gc = group_view(params["groups"], caches)
+        remat = cfg.remat if not ctx.decode else "none"
+
+        def group_body(x, layer):
+            if gc is not None:
+                (pr, pa), (cr, ca) = layer
+            else:
+                (pr, pa) = layer
+                cr = ca = None
+            ncr, nca, ri, ai = [], [], 0, 0
+            for b in pattern:
+                if b == "rec":
+                    pl = jax.tree.map(lambda t: t[ri], pr)
+                    cl = jax.tree.map(lambda t: t[ri], cr) if cr is not None \
+                        else None
+                    x, c2, _ = B.griffin_rec_block_apply(pl, x, ctx, cl)
+                    ncr.append(c2)
+                    ri += 1
+                else:
+                    pl = jax.tree.map(lambda t: t[ai], pa)
+                    cl = jax.tree.map(lambda t: t[ai], ca) if ca is not None \
+                        else None
+                    x, c2, _ = B.griffin_attn_block_apply(pl, x, ctx, cl)
+                    nca.append(c2)
+                    ai += 1
+            if gc is None:
+                return x, 0.0
+            stk = lambda lst: jax.tree.map(lambda *ts: jnp.stack(ts), *lst)
+            return x, (stk(ncr), stk(nca))
+
+        group_body = _maybe_remat(group_body, remat)
+        xs = ((rec, attn), gc) if gc is not None else ((rec, attn),)
+        if gc is not None:
+            x, (ncr, nca) = lax.scan(
+                lambda c, l: group_body(c, (l[0], l[1])), x, xs,
+                unroll=bool(cfg.scan_unroll),
+            )
+        else:
+            x, _ = lax.scan(lambda c, l: group_body(c, l[0]), x, xs,
+                            unroll=bool(cfg.scan_unroll))
+
+        new_caches = None
+        if gc is not None:
+            new_caches = {
+                "rec": jax.tree.map(
+                    lambda a: a.reshape(n_groups * n_rec_g, *a.shape[2:]), ncr
+                ),
+                "attn": jax.tree.map(
+                    lambda a: a.reshape(n_groups * n_attn_g, *a.shape[2:]),
+                    nca,
+                ),
+            }
+        # tail layers (unrolled)
+        new_tail = []
+        for i, b in enumerate(tail_pattern):
+            pl = params["tail"][i]
+            cl = caches["tail"][i] if caches is not None else None
+            fn = (B.griffin_rec_block_apply if b == "rec"
+                  else B.griffin_attn_block_apply)
+            x, c2, _ = fn(pl, x, ctx, cl)
+            new_tail.append(c2)
+        if caches is not None:
+            new_caches["tail"] = new_tail
+        return x, new_caches
+
+    def loss_fn(params, batch, *, impl="xla", rules=None):
+        tokens = batch["tokens"]
+        Bz, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x = shard_act(x, rules, "bsd")
+        x, _ = backbone(params, x, ctx, None, rules)
+        logits = logits_apply(params["embed"], rms_norm(x, params["ln_f"]),
+                              cfg)
+        loss = _lm_loss(logits, tokens)
+        return loss, {"loss": loss, "lm_loss": loss}
+
+    W = cfg.lru_width or cfg.d_model
+
+    def make_cache_defs(bsz, smax):
+        # NOTE: local attention only reads the trailing `local_window`
+        # entries, but the buffer is linear-indexed by absolute position —
+        # a ring buffer is the production optimization (EXPERIMENTS.md §Perf
+        # evaluates it); correctness first.
+        eff = smax
+        n_rec = n_groups * n_rec_g
+        n_attn = n_groups * n_attn_g
+        c = {
+            "rec": {
+                "conv": ParamDef((n_rec, bsz, B._CONV_W - 1, W),
+                                 (None, "batch", None, "tensor"),
+                                 init="zeros"),
+                "h": ParamDef((n_rec, bsz, W), (None, "batch", "tensor"),
+                              init="zeros", dtype=f32),
+            },
+            "attn": _kv_cache_defs(cfg, n_attn, bsz, eff),
+            "tail": [
+                {
+                    "conv": ParamDef((bsz, B._CONV_W - 1, W),
+                                     ("batch", None, "tensor"), init="zeros"),
+                    "h": ParamDef((bsz, W), ("batch", "tensor"),
+                                  init="zeros", dtype=f32),
+                }
+                if b == "rec"
+                else {
+                    "k": ParamDef((bsz, eff, cfg.n_kv_heads, cfg.head_dim),
+                                  ("batch", None, "tensor", None),
+                                  init="zeros"),
+                    "v": ParamDef((bsz, eff, cfg.n_kv_heads, cfg.head_dim),
+                                  ("batch", None, "tensor", None),
+                                  init="zeros"),
+                }
+                for b in tail_pattern
+            ],
+        }
+        return c
+
+    def init_cache(bsz, smax):
+        return jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype), make_cache_defs(bsz, smax),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+
+    def _fwd(params, cache, tokens, t, *, impl, rules, decode):
+        Bz, S = tokens.shape
+        pos = jnp.broadcast_to(
+            (t + jnp.arange(S))[None] if decode else jnp.arange(S)[None],
+            (Bz, S),
+        )
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, decode=decode,
+                  cache_len=t, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x = shard_act(x, rules, "bsd")
+        x, nc = backbone(params, x, ctx, cache, rules)
+        logits = logits_apply(
+            params["embed"], rms_norm(x[:, -1:], params["ln_f"]), cfg
+        )
+        return logits[:, 0], nc
+
+    def prefill_fn(params, cache, batch, *, impl="xla", rules=None):
+        return _fwd(params, cache, batch["tokens"], 0, impl=impl,
+                    rules=rules, decode=False)
+
+    def decode_fn(params, cache, tokens, t, *, impl="xla", rules=None):
+        return _fwd(params, cache, tokens, t, impl=impl, rules=rules,
+                    decode=True)
+
+    return Model(cfg, defs, init, loss_fn, make_cache_defs, init_cache,
+                 prefill_fn, decode_fn)
+
+
+# ----------------------------------------------------------------- enc-dec
+
+def build_encdec(cfg: ArchConfig) -> Model:
+    """seamless-m4t backbone: audio-frame encoder (frontend stub supplies
+    frame embeddings) + text decoder with cross-attention."""
+    enc_defs_one = B.encoder_block_defs(cfg)
+    dec_defs_one = B.decoder_block_defs(cfg)
+    defs = {
+        "embed": embed_defs(cfg),
+        "enc": stack_defs(enc_defs_one, cfg.encoder_layers),
+        "dec": stack_defs(dec_defs_one, cfg.n_layers),
+        "ln_enc": norm_defs(cfg.d_model),
+        "ln_f": norm_defs(cfg.d_model),
+    }
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": init_params(defs["embed"], ks[0]),
+            "enc": _stacked_init(enc_defs_one, ks[1], cfg.encoder_layers),
+            "dec": _stacked_init(dec_defs_one, ks[2], cfg.n_layers),
+            "ln_enc": init_params(defs["ln_enc"], ks[3]),
+            "ln_f": init_params(defs["ln_f"], ks[4]),
+        }
+
+    def encode(params, frames, ctx, rules):
+        x = shard_act(frames.astype(jnp.bfloat16), rules, "bsd")
+
+        def body(x, p):
+            return B.encoder_block_apply(p, x, ctx), None
+
+        body = _maybe_remat(body, cfg.remat)
+        x, _ = lax.scan(body, x, params["enc"], unroll=bool(cfg.scan_unroll))
+        return rms_norm(x, params["ln_enc"])
+
+    def run_decoder(params, x, enc_out, ctx, caches, remat, enc_len=None):
+        def body(x, layer):
+            if caches is not None:
+                p, c = layer
+                x2, c2, _ = B.decoder_block_apply(p, x, ctx, enc_out, c,
+                                                  enc_len=enc_len)
+                return x2, c2
+            (p,) = layer
+            x2, _, _ = B.decoder_block_apply(p, x, ctx, enc_out, None,
+                                             enc_len=enc_len)
+            return x2, 0.0
+
+        body = _maybe_remat(body, remat)
+        xs = (params["dec"], caches) if caches is not None else (params["dec"],)
+        x, nc = lax.scan(body, x, xs, unroll=bool(cfg.scan_unroll))
+        return x, (nc if caches is not None else None)
+
+    def loss_fn(params, batch, *, impl="xla", rules=None):
+        frames, tokens = batch["frames"], batch["tokens"]
+        Bz, S = tokens.shape
+        Se = frames.shape[1]
+        enc_ctx = Ctx(cfg=cfg, impl=impl,
+                      positions=jnp.broadcast_to(jnp.arange(Se)[None],
+                                                 (Bz, Se)))
+        enc_out = encode(params, frames, enc_ctx, rules)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, rules=rules)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x, _ = run_decoder(params, x, enc_out, ctx, None, cfg.remat)
+        logits = logits_apply(params["embed"], rms_norm(x, params["ln_f"]),
+                              cfg)
+        loss = _lm_loss(logits, tokens)
+        return loss, {"loss": loss, "lm_loss": loss}
+
+    def make_cache_defs(bsz, smax):
+        return {
+            "self": {
+                "self": _kv_cache_defs(cfg, cfg.n_layers, bsz, smax)
+            }["self"],
+            "enc_out": ParamDef((bsz, smax, cfg.d_model),
+                                ("batch", None, None), init="zeros"),
+            "enc_len": ParamDef((), (), init="zeros", dtype=jnp.int32),
+        }
+
+    def init_cache(bsz, smax):
+        return jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype), make_cache_defs(bsz, smax),
+            is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+
+    def prefill_fn(params, cache, batch, *, impl="xla", rules=None):
+        frames, tokens = batch["frames"], batch["tokens"]
+        Bz, S = tokens.shape
+        Se = frames.shape[1]
+        enc_ctx = Ctx(cfg=cfg, impl=impl,
+                      positions=jnp.broadcast_to(jnp.arange(Se)[None],
+                                                 (Bz, Se)))
+        enc_out = encode(params, frames, enc_ctx, rules)
+        enc_buf = jax.lax.dynamic_update_slice_in_dim(
+            cache["enc_out"], enc_out.astype(cache["enc_out"].dtype), 0, 1
+        )
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, cache_len=0)
+        x = embed_apply(params["embed"], tokens, cfg)
+        x, nc = run_decoder(params, x, enc_out, ctx,
+                            _wrap_dec_cache(cache["self"]), False)
+        logits = logits_apply(
+            params["embed"], rms_norm(x[:, -1:], params["ln_f"]), cfg
+        )
+        return logits[:, 0], {"self": _unwrap_dec_cache(nc),
+                              "enc_out": enc_buf,
+                              "enc_len": jnp.int32(Se)}
+
+    def _wrap_dec_cache(kv):
+        return {"self": kv}
+
+    def _unwrap_dec_cache(nc):
+        return nc["self"]
+
+    def decode_fn(params, cache, tokens, t, *, impl="xla", rules=None):
+        Bz, S = tokens.shape
+        pos = jnp.broadcast_to(t + jnp.arange(S)[None], (Bz, S))
+        ctx = Ctx(cfg=cfg, impl=impl, positions=pos, decode=True, cache_len=t)
+        x = embed_apply(params["embed"], tokens, cfg)
+        enc_out = cache["enc_out"]
+        x, nc = run_decoder(params, x, enc_out, ctx,
+                            _wrap_dec_cache(cache["self"]), False,
+                            enc_len=cache["enc_len"])
+        logits = logits_apply(
+            params["embed"], rms_norm(x[:, -1:], params["ln_f"]), cfg
+        )
+        return logits[:, 0], {"self": _unwrap_dec_cache(nc),
+                              "enc_out": enc_out,
+                              "enc_len": cache["enc_len"]}
+
+    return Model(cfg, defs, init, loss_fn, make_cache_defs, init_cache,
+                 prefill_fn, decode_fn)
+
+
+# ----------------------------------------------------------------- registry
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.attn_free:
+        return build_rwkv_lm(cfg)
+    if cfg.family == "hybrid":
+        return build_griffin_lm(cfg)
+    if cfg.is_encoder_decoder:
+        return build_encdec(cfg)
+    return build_decoder_lm(cfg)

@@ -1,0 +1,7 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import cosine_warmup
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}
+
+__all__ = ["OPTIMIZERS", "adamw", "adafactor", "cosine_warmup"]

@@ -1,0 +1,101 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+Memory per parameter: O(rows + cols) instead of O(rows*cols) for >=2-D
+tensors; the reason deepseek-v3-671b fits its optimizer state on a 512-chip
+v5e mesh (see configs/deepseek_v3_671b.py).  No first moment by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def _is_vstate(x) -> bool:
+    return isinstance(x, dict) and ("v" in x or "vr" in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class adafactor:
+    lr: Any = 1e-3
+    decay: float = 0.8          # \hat{beta2}_t = 1 - t^{-decay}
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def st(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], f32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], f32),
+                }
+            return {"v": jnp.zeros(p.shape, f32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(st, params)}
+
+    def state_defs(self, param_defs):
+        is_def = lambda x: isinstance(x, ParamDef)
+
+        def st(d: ParamDef):
+            if _factored(d.shape):
+                return {
+                    "vr": ParamDef(d.shape[:-1], d.logical[:-1],
+                                   init="zeros", dtype=f32),
+                    "vc": ParamDef(d.shape[:-2] + d.shape[-1:],
+                                   d.logical[:-2] + d.logical[-1:],
+                                   init="zeros", dtype=f32),
+                }
+            return {"v": ParamDef(d.shape, d.logical, init="zeros",
+                                  dtype=f32)}
+
+        return {"step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+                "v": jax.tree.map(st, param_defs, is_leaf=is_def)}
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        t = step.astype(f32)
+        beta2 = 1.0 - t ** (-self.decay)
+        lr = jnp.asarray(self.lr, f32) * lr_scale
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_v = jax.tree.flatten(state["v"], is_leaf=_is_vstate)[0]
+
+        new_p, new_v = [], []
+        for g, v, p in zip(flat_g, flat_v, flat_p):
+            g = g.astype(f32)
+            g2 = g * g + self.eps
+            if _factored(p.shape):
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), self.eps)
+                u = (g * jax.lax.rsqrt(vr / denom)[..., None]
+                     * jax.lax.rsqrt(vc)[..., None, :])
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta2 * v["v"] + (1 - beta2) * g2}
+                u = g * jax.lax.rsqrt(nv["v"])
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            p2 = p.astype(f32) - lr * (u + self.weight_decay * p.astype(f32))
+            new_p.append(p2.astype(p.dtype))
+            new_v.append(nv)
+
+        vdef = jax.tree.structure(state["v"], is_leaf=_is_vstate)
+        return (
+            jax.tree.unflatten(treedef, new_p),
+            {"step": step, "v": jax.tree.unflatten(vdef, new_v)},
+        )

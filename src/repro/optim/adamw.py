@@ -1,0 +1,70 @@
+"""AdamW with ZeRO-3-style state sharding.
+
+State tensors inherit the parameter's sharding (same logical axes), so with
+FSDP rules the optimizer state is fully sharded over the 'data' axis — the
+distributed-optimizer requirement at 512+ chips.  ``state_defs`` produces the
+ParamDef tree the dry-run lowers without allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    lr: Any = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, f32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def state_defs(self, param_defs):
+        as_f32 = lambda d: ParamDef(d.shape, d.logical, init="zeros",
+                                    dtype=f32)
+        is_def = lambda x: isinstance(x, ParamDef)
+        return {
+            "step": ParamDef((), (), init="zeros", dtype=jnp.int32),
+            "m": jax.tree.map(as_f32, param_defs, is_leaf=is_def),
+            "v": jax.tree.map(as_f32, param_defs, is_leaf=is_def),
+        }
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        step = state["step"] + 1
+        b1, b2 = self.b1, self.b2
+        lr = jnp.asarray(self.lr, f32) * lr_scale
+        bc1 = 1.0 - b1 ** step.astype(f32)
+        bc2 = 1.0 - b2 ** step.astype(f32)
+
+        def upd(g, m, v, p):
+            g = g.astype(f32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            upd = upd + self.weight_decay * p.astype(f32)
+            return (p.astype(f32) - lr * upd).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}

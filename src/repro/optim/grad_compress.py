@@ -1,0 +1,67 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+At 512+ chips the cross-pod (DCI) gradient reduction is the slowest
+collective; int8 with error feedback cuts those bytes 4x vs bf16 (8x vs f32)
+at negligible quality cost (1-bit/`EF-SGD` lineage: Seide'14, Karimireddy'19).
+
+Two entry points:
+
+  * ``compress/decompress + error feedback``: pure functions usable inside a
+    pjit step (quantization noise is carried to the next step via ``err``).
+  * ``compressed_psum``: the explicit shard_map collective — quantizes, sums
+    int32, rescales.  Used when the pod axis is reduced manually (see
+    launch/train.py's hierarchical-reduction mode and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+f32 = jnp.float32
+
+
+def quantize(x, *, bits: int = 8):
+    """symmetric per-tensor int quantization; returns (q, scale)."""
+    lim = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x.astype(f32)))
+    scale = jnp.maximum(amax, 1e-12) / lim
+    q = jnp.clip(jnp.round(x.astype(f32) / scale), -lim, lim).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(f32) * scale
+
+
+def ef_compress(grads, err):
+    """error-feedback: g' = Q(g + err); err' = (g + err) - g'."""
+    def one(g, e):
+        ge = g.astype(f32) + e
+        q, s = quantize(ge)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), ge - deq
+
+    out = jax.tree.map(one, grads, err)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2
+    g2 = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    e2 = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return g2, e2
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-payload psum for use inside shard_map.
+
+    Scales are exchanged first (max over the axis) so all devices quantize
+    onto a shared grid; int32 accumulation avoids overflow for up to 2^23
+    participants."""
+    amax = lax.pmax(jnp.max(jnp.abs(x.astype(f32))), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(f32) / scale), -127, 127).astype(jnp.int8)
+    total = lax.psum(q.astype(jnp.int32), axis_name)
+    return (total.astype(f32) * scale).astype(x.dtype)

@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step, usable inside jit)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, s / max(warmup, 1))
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,55 @@
+"""Activation sharding constraints + batch/cache specs.
+
+Parameters get their shardings from ParamDef logical axes; *activations* get
+theirs from the helpers here.  All are no-ops when ``rules is None`` (single-
+device smoke tests).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShardingRules
+
+
+def _flatten(axis):
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis
+    if len(axis) == 0:
+        return None
+    return tuple(axis) if len(axis) > 1 else axis[0]
+
+
+def act_spec(rules: ShardingRules, kind: str) -> P:
+    """kind: per-dim letters — b(atch) s(equence) d/e(mbed) h(eads) v(ocab)
+    n(one).  A mesh axis is used at most once (first dim wins)."""
+    table = {
+        "b": rules.batch,
+        "s": rules.sequence,
+        "d": rules.act_embed,
+        "e": rules.act_embed,
+        "h": rules.tensor,
+        "v": rules.tensor,
+        "x": rules.expert,
+        "n": None,
+    }
+    used: set = set()
+    axes = []
+    for c in kind:
+        ax = _flatten(table[c])
+        flat = () if ax is None else ((ax,) if isinstance(ax, str)
+                                      else tuple(ax))
+        free = tuple(a for a in flat if a not in used)
+        used.update(free)
+        axes.append(free[0] if len(free) == 1
+                    else (free if free else None))
+    return P(*axes)
+
+
+def shard_act(x, rules: ShardingRules | None, kind: str):
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, act_spec(rules, kind))

@@ -1,0 +1,3 @@
+from repro.runtime.fault import FaultTolerantLoop, StepTimer
+
+__all__ = ["FaultTolerantLoop", "StepTimer"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the single real CPU device (the dry-run sets its own device
+# count in a separate process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

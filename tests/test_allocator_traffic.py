@@ -1,0 +1,92 @@
+"""Arena allocator invariants + Belady traffic model."""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Graph, kahn_schedule, plan_arena, simulate_traffic
+from tests.test_property_scheduler import random_dags
+
+
+def _overlaps(a, b):
+    time = not (a.t_free <= b.t_alloc or b.t_free <= a.t_alloc)
+    space = not (a.offset + a.size <= b.offset or
+                 b.offset + b.size <= a.offset)
+    return time and space
+
+
+@given(random_dags(max_nodes=12))
+@settings(max_examples=60, deadline=None)
+def test_arena_no_overlap_and_bounds(g):
+    order = kahn_schedule(g).order
+    plan = plan_arena(g, order)
+    allocs = plan.allocations
+    for i, a in enumerate(allocs):
+        assert a.offset >= 0
+        assert a.offset + a.size <= plan.arena_bytes
+        for b in allocs[i + 1:]:
+            assert not _overlaps(a, b), (a, b)
+
+
+@given(random_dags(max_nodes=12))
+@settings(max_examples=40, deadline=None)
+def test_arena_at_least_peak(g):
+    from repro.core import simulate_schedule
+
+    order = kahn_schedule(g).order
+    plan = plan_arena(g, order)
+    sim = simulate_schedule(g, order)
+    # the arena can fragment but never beats the liveness lower bound
+    assert plan.arena_bytes >= sim.peak_bytes - max(g.sizes)
+
+
+def chain(n=6, size=100):
+    specs = [dict(name="n0", op="input", size_bytes=size)]
+    for i in range(1, n):
+        specs.append(dict(name=f"n{i}", op="op", size_bytes=size,
+                          preds=[i - 1], weight_bytes=10))
+    return Graph.build(specs)
+
+
+def test_traffic_zero_when_fits():
+    g = chain()
+    order = kahn_schedule(g).order
+    r = simulate_traffic(g, order, capacity_bytes=10_000,
+                         include_weights=False)
+    assert r.read_bytes == 0 and r.write_bytes == 0
+    assert r.fits_entirely
+
+
+def test_traffic_positive_when_tight():
+    # diamond with long-lived branch output forces spills at tiny capacity
+    specs = [
+        dict(name="in", op="input", size_bytes=100),
+        dict(name="a", op="op", size_bytes=100, preds=[0]),
+        dict(name="b", op="op", size_bytes=100, preds=[0]),
+        dict(name="c", op="op", size_bytes=100, preds=[1, 2]),
+    ]
+    g = Graph.build(specs)
+    order = kahn_schedule(g).order
+    r = simulate_traffic(g, order, capacity_bytes=250,
+                         include_weights=False)
+    assert r.total_bytes > 0
+    assert not r.fits_entirely
+
+
+def test_traffic_monotone_in_capacity():
+    g = chain(8, 100)
+    order = kahn_schedule(g).order
+    prev = None
+    for cap in (150, 250, 450, 900):
+        t = simulate_traffic(g, order, cap, include_weights=False).total_bytes
+        if prev is not None:
+            assert t <= prev
+        prev = t
+
+
+def test_weight_traffic_constant_across_schedules():
+    g = chain(6, 10)
+    a = simulate_traffic(g, kahn_schedule(g).order, 10**9).weight_read_bytes
+    from repro.core import dp_schedule
+
+    b = simulate_traffic(g, dp_schedule(g).order, 10**9).weight_read_bytes
+    assert a == b == 50

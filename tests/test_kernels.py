@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.kernel import rglru_pallas
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_ref
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+TOL = dict(rtol=2e-2, atol=2e-2)      # bf16 sweeps
+TOL32 = dict(rtol=2e-5, atol=2e-5)
+
+
+def _qkv(key, B, Sq, Skv, H, KV, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,KV,D", [
+    (1, 128, 4, 4, 64),        # MHA
+    (2, 256, 8, 2, 64),        # GQA 4:1
+    (1, 128, 4, 1, 128),       # MQA
+    (1, 256, 2, 2, 256),       # gemma-style head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_shapes_dtypes(B, S, H, KV, D, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, S, H, KV, D, dtype)
+    ref = attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                 bq=64, bk=64)
+    tol = TOL32 if dtype == jnp.float32 else TOL
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_pallas_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 256, 256, 4, 4, 64,
+                   jnp.float32)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 interpret=True, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
+def test_flash_pallas_decode_against_cache():
+    # decode: 1 new token at position 200 over a 256-buffer w/ 201 valid
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 128, 256, 4, 4, 64,
+                   jnp.float32)
+    q1 = q[:, :128]
+    ref = attention_ref(q1, k, v, causal=True, q_start=73, kv_len=201)
+    out = flash_attention_pallas(q1, k, v, causal=True, q_start=73,
+                                 kv_len=201, interpret=True, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
+def test_flash_xla_matches_ref_chunked():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 192, 192, 6, 2, 64,
+                   jnp.float32)
+    ref = attention_ref(q, k, v, causal=True)
+    for chunk in (48, 64, 192):
+        out = flash_attention(q, k, v, causal=True, impl="xla",
+                              kv_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   **TOL32)
+
+
+def test_flash_xla_mixed_value_dim():
+    # MLA-style: qk dim 48, v dim 32
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 48))
+    k = jax.random.normal(ks[1], (2, 64, 4, 48))
+    v = jax.random.normal(ks[2], (2, 64, 4, 32))
+    ref = attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, impl="xla", kv_chunk=32)
+    assert out.shape == (2, 64, 4, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
+# ------------------------------------------------------------------ rwkv6
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (1, 32, 2, 8, 8), (2, 64, 3, 16, 16), (1, 48, 1, 32, 48),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_pallas_sweep(B, T, H, N, chunk, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, N), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, N), dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N)))).astype(
+        dtype)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.5).astype(dtype)
+    o_ref, s_ref = wkv6_ref(r, k, v, w, u)
+    o, s = wkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=True)
+    tol = TOL32 if dtype == jnp.float32 else dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_wkv6_initial_state_threading():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    B, T, H, N = 1, 32, 2, 8
+    mk = lambda i: jax.random.normal(ks[i], (B, T, H, N))
+    r, k, v = mk(0), mk(1), mk(2)
+    w = jnp.exp(-jnp.exp(mk(3)))
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    # full pass == two half passes with threaded state
+    o_full, s_full = wkv6_ref(r, k, v, w, u)
+    o1, s1 = wkv6_ref(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u)
+    o2, s2 = wkv6_ref(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u,
+                      initial_state=s1)
+    np.testing.assert_allclose(np.asarray(o_full[:, 16:]), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ rglru
+
+@pytest.mark.parametrize("B,T,D,chunk", [(1, 32, 16, 8), (2, 64, 32, 32)])
+def test_rglru_pallas_sweep(B, T, D, chunk):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    la = -jnp.exp(jax.random.normal(ks[0], (B, T, D))) * 0.5
+    gx = jax.random.normal(ks[1], (B, T, D))
+    h0 = jax.random.normal(ks[2], (B, D))
+    h_ref, hT_ref = rglru_ref(la, gx, h0)
+    h, hT = rglru_pallas(la, gx, h0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), **TOL32)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref), **TOL32)
+
+
+def test_rglru_associative_scan_equals_ref():
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    la = -jnp.exp(jax.random.normal(ks[0], (2, 128, 24))) * 0.3
+    gx = jax.random.normal(ks[1], (2, 128, 24))
+    h0 = jax.random.normal(ks[2], (2, 24))
+    h_ref, hT_ref = rglru_ref(la, gx, h0)
+    h, hT = rglru(la, gx, h0, impl="xla")
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               rtol=1e-4, atol=1e-4)

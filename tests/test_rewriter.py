@@ -1,0 +1,147 @@
+"""Identity graph rewriting: IR behaviour + numerical identity (Eq. 3-8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    dp_schedule,
+    kahn_schedule,
+    rewrite_graph,
+    simulate_schedule,
+)
+
+
+def concat_conv_graph(n_branches=4, branch_kb=100, out_kb=120):
+    specs = [dict(name="in", op="input", size_bytes=10_000)]
+    outs = []
+    for i in range(n_branches):
+        specs.append(dict(name=f"b{i}", op="conv",
+                          size_bytes=branch_kb * 1024, preds=[0]))
+        outs.append(len(specs) - 1)
+    specs.append(dict(name="cc", op="concat",
+                      size_bytes=n_branches * branch_kb * 1024, preds=outs))
+    specs.append(dict(name="conv", op="conv", size_bytes=out_kb * 1024,
+                      preds=[len(specs) - 1], weight_bytes=4096))
+    return Graph.build(specs)
+
+
+def test_concat_conv_rewrite_reduces_peak():
+    g = concat_conv_graph()
+    g2, rep = rewrite_graph(g)
+    assert rep.n_concat_conv == 1
+    # concat + conv nodes replaced by accumulating partial convs
+    assert not any(n.op == "concat" for n in g2.nodes)
+    before = dp_schedule(g).peak_bytes
+    after = dp_schedule(g2).peak_bytes
+    # paper Fig. 9: sum(x_i) + y  ->  max(x_i) + y
+    assert after < before
+
+
+def test_concat_depthconv_rewrite():
+    specs = [dict(name="in", op="input", size_bytes=1024)]
+    outs = []
+    for i in range(3):
+        specs.append(dict(name=f"b{i}", op="conv", size_bytes=1024,
+                          preds=[0]))
+        outs.append(len(specs) - 1)
+    specs.append(dict(name="cc", op="concat", size_bytes=3 * 1024,
+                      preds=outs))
+    specs.append(dict(name="dw", op="depthconv", size_bytes=3 * 1024,
+                      preds=[len(specs) - 1]))
+    g = Graph.build(specs)
+    g2, rep = rewrite_graph(g)
+    assert rep.n_concat_depthconv == 1
+    assert any(n.op == "concat_view" for n in g2.nodes)
+    assert dp_schedule(g2).peak_bytes <= dp_schedule(g).peak_bytes
+
+
+def test_rewrite_skips_concat_with_multiple_consumers():
+    specs = [dict(name="in", op="input", size_bytes=8)]
+    specs.append(dict(name="b0", op="conv", size_bytes=8, preds=[0]))
+    specs.append(dict(name="b1", op="conv", size_bytes=8, preds=[0]))
+    specs.append(dict(name="cc", op="concat", size_bytes=16, preds=[1, 2]))
+    specs.append(dict(name="conv", op="conv", size_bytes=8, preds=[3]))
+    specs.append(dict(name="other", op="relu", size_bytes=16, preds=[3]))
+    g = Graph.build(specs)
+    g2, rep = rewrite_graph(g)
+    assert rep.total == 0      # concat has 2 consumers -> must materialize
+
+
+# ---------------------------------------------------------------- numerics
+
+def test_channelwise_partition_numeric_identity():
+    """Eq. 3-6: conv(concat(x1..xk)) == sum_i partial_conv(x_i)."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    xs = [jax.random.normal(ks[i], (1, 8, 8, 3)) for i in range(3)]
+    w = jax.random.normal(ks[3], (3, 3, 9, 4))    # HWIO, I = 3 branches x 3
+
+    dn = jax.lax.conv_dimension_numbers(
+        (1, 8, 8, 9), w.shape, ("NHWC", "HWIO", "NHWC")
+    )
+    full = jax.lax.conv_general_dilated(
+        jnp.concatenate(xs, -1), w, (1, 1), "SAME", dimension_numbers=dn
+    )
+    dn_p = jax.lax.conv_dimension_numbers(
+        (1, 8, 8, 3), (3, 3, 3, 4), ("NHWC", "HWIO", "NHWC")
+    )
+    parts = [
+        jax.lax.conv_general_dilated(
+            x, w[:, :, 3 * i : 3 * (i + 1), :], (1, 1), "SAME",
+            dimension_numbers=dn_p,
+        )
+        for i, x in enumerate(xs)
+    ]
+    np.testing.assert_allclose(np.asarray(full), np.asarray(sum(parts)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kernelwise_partition_numeric_identity():
+    """Eq. 7-8: depthconv(concat(x_i)) == concat(depthconv_i(x_i))."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    xs = [jax.random.normal(ks[i], (1, 8, 8, 2)) for i in range(3)]
+    w = jax.random.normal(ks[3], (3, 3, 1, 6))    # depthwise: 6 channels
+
+    dn = jax.lax.conv_dimension_numbers(
+        (1, 8, 8, 6), w.shape, ("NHWC", "HWIO", "NHWC")
+    )
+    full = jax.lax.conv_general_dilated(
+        jnp.concatenate(xs, -1), w, (1, 1), "SAME",
+        dimension_numbers=dn, feature_group_count=6,
+    )
+    parts = []
+    for i, x in enumerate(xs):
+        wi = w[:, :, :, 2 * i : 2 * (i + 1)]
+        dn_i = jax.lax.conv_dimension_numbers(
+            (1, 8, 8, 2), wi.shape, ("NHWC", "HWIO", "NHWC")
+        )
+        parts.append(jax.lax.conv_general_dilated(
+            x, wi, (1, 1), "SAME", dimension_numbers=dn_i,
+            feature_group_count=2,
+        ))
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(jnp.concatenate(parts, -1)),
+        rtol=2e-5, atol=2e-5,
+    )
+
+
+def test_fused_proj_split_rewrite():
+    specs = [
+        dict(name="x", op="input", size_bytes=64),
+        dict(name="qkv", op="fused_proj", size_bytes=192, preds=[0],
+             weight_bytes=1024),
+        dict(name="split", op="split", size_bytes=192, preds=[1]),
+        dict(name="q_use", op="op", size_bytes=64, preds=[2]),
+        dict(name="k_use", op="op", size_bytes=64, preds=[2]),
+    ]
+    g = Graph.build(specs)
+    g2, rep = rewrite_graph(g)
+    assert rep.n_fused_proj_split == 1
+    assert not any(n.op == "split" for n in g2.nodes)
+    assert simulate_schedule(
+        g2, g2.topo_order()
+    ).peak_bytes <= simulate_schedule(g, g.topo_order()).peak_bytes

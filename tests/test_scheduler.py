@@ -1,0 +1,106 @@
+"""DP scheduler: optimality vs brute force, budget & quota semantics."""
+
+import pytest
+
+from repro.core import (
+    Graph,
+    NoSolutionError,
+    SearchTimeout,
+    brute_force_schedule,
+    dp_schedule,
+    kahn_schedule,
+    simulate_schedule,
+)
+
+
+def diamond():
+    return Graph.build([
+        dict(name="a", op="input", size_bytes=10),
+        dict(name="b", op="op", size_bytes=100, preds=[0]),
+        dict(name="c", op="op", size_bytes=1, preds=[0]),
+        dict(name="d", op="op", size_bytes=5, preds=[1, 2]),
+    ])
+
+
+def test_dp_matches_bruteforce_diamond():
+    g = diamond()
+    dp = dp_schedule(g)
+    bf = brute_force_schedule(g)
+    assert dp.peak_bytes == bf.peak_bytes
+    assert g.is_topological(dp.order)
+
+
+def test_simulate_agrees_with_result():
+    g = diamond()
+    dp = dp_schedule(g)
+    sim = simulate_schedule(g, dp.order)
+    assert sim.peak_bytes == dp.peak_bytes
+
+
+def test_wide_fanout_prefers_small_branches_interleaved():
+    # one input feeding k independent expand->project chains; optimal keeps
+    # only one expanded tensor live at a time
+    specs = [dict(name="in", op="input", size_bytes=10)]
+    for i in range(4):
+        specs.append(dict(name=f"e{i}", op="op", size_bytes=1000,
+                          preds=[0]))
+        specs.append(dict(name=f"p{i}", op="op", size_bytes=10,
+                          preds=[len(specs) - 1]))
+    g = Graph.build(specs)
+    dp = dp_schedule(g)
+    bf = brute_force_schedule(g)
+    assert dp.peak_bytes == bf.peak_bytes
+    # peak ~ one expanded (1000) + input + done projections
+    assert dp.peak_bytes <= 10 + 1000 + 4 * 10
+    # BFS (kahn) keeps all four expanded tensors live
+    assert kahn_schedule(g).peak_bytes >= 4 * 1000
+
+
+def test_budget_below_optimal_raises():
+    g = diamond()
+    opt = dp_schedule(g).peak_bytes
+    with pytest.raises(NoSolutionError):
+        dp_schedule(g, budget=opt - 1)
+    # at the optimum the schedule is found
+    assert dp_schedule(g, budget=opt).peak_bytes == opt
+
+
+def test_quota_raises_timeout():
+    specs = [dict(name="in", op="input", size_bytes=1)]
+    for i in range(12):
+        specs.append(dict(name=f"n{i}", op="op", size_bytes=1, preds=[0]))
+    g = Graph.build(specs)
+    with pytest.raises(SearchTimeout):
+        dp_schedule(g, state_quota=3)
+
+
+def test_beam_mode_completes_under_quota():
+    specs = [dict(name="in", op="input", size_bytes=1)]
+    for i in range(12):
+        specs.append(dict(name=f"n{i}", op="op", size_bytes=i + 1,
+                          preds=[0]))
+    g = Graph.build(specs)
+    res = dp_schedule(g, state_quota=3, on_quota="beam")
+    assert g.is_topological(res.order)
+
+
+def test_preplaced_boundary():
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=7),
+        dict(name="y", op="op", size_bytes=3, preds=[0]),
+        dict(name="z", op="op", size_bytes=2, preds=[1]),
+    ])
+    res = dp_schedule(g, preplaced=(0,))
+    assert res.order == [1, 2]
+    # x(7) resident, +y(3)=10 peak, x freed after y -> z: 3+2
+    assert res.peak_bytes == 10
+
+
+def test_alias_nodes_do_not_double_count():
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=100),
+        dict(name="acc", op="partial_conv", size_bytes=100, preds=[0],
+             alias_preds=[0]),
+    ])
+    res = dp_schedule(g)
+    assert res.peak_bytes == 100   # in-place: storage subsumed
