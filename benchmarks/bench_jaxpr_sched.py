@@ -45,10 +45,13 @@ CASES = {
 }
 
 
-def run(csv_rows: list) -> dict:
-    x = jnp.ones((64, 128), jnp.float32)
+def run(csv_rows: list, smoke: bool = False) -> dict:
+    x = jnp.ones((8, 32) if smoke else (64, 128), jnp.float32)
     out = {}
-    for name, fn in CASES.items():
+    cases = CASES
+    if smoke:
+        cases = dict(list(CASES.items())[:1])
+    for name, fn in cases.items():
         t0 = time.perf_counter()
         rep = analyze_fn(fn, x)
         dt = (time.perf_counter() - t0) * 1e6

@@ -16,16 +16,21 @@ from repro.graphs import BENCHMARK_GRAPHS
 CAPS_KB = (64, 128, 192, 256, 320, 448, 640, 1024, 2048, 4096)
 
 
-def run(csv_rows: list) -> dict:
+def run(csv_rows: list, smoke: bool = False) -> dict:
     best_reduction = {}
-    for name, fn in BENCHMARK_GRAPHS.items():
+    graphs = list(BENCHMARK_GRAPHS.items())
+    caps = CAPS_KB
+    if smoke:
+        graphs = graphs[:2]
+        caps = CAPS_KB[:4]
+    for name, fn in graphs:
         g = fn()
         kahn = kahn_schedule(g)
         ser = schedule(g, rewrite=True, state_quota=4000,
                        compute_baselines=False)
         t0 = time.perf_counter()
         rows = []
-        for cap in CAPS_KB:
+        for cap in caps:
             tb = simulate_traffic(g, kahn.order, cap * 1024,
                                   include_weights=False)
             ts = simulate_traffic(ser.graph, ser.order, cap * 1024,

@@ -14,13 +14,17 @@ from repro.core import plan_arena, schedule
 from repro.graphs import BENCHMARK_GRAPHS
 
 
-def run(csv_rows: list) -> dict:
+def run(csv_rows: list, smoke: bool = False) -> dict:
     ratios_sched, ratios_rw = [], []
-    for name, fn in BENCHMARK_GRAPHS.items():
+    graphs = list(BENCHMARK_GRAPHS.items())
+    if smoke:
+        graphs = graphs[:2]
+    for name, fn in graphs:
         g = fn()
         t0 = time.perf_counter()
-        base = schedule(g, rewrite=False, state_quota=4000)
-        rew = schedule(g, rewrite=True, state_quota=4000)
+        # cache=False: the row's us_per_call times cold scheduling
+        base = schedule(g, rewrite=False, state_quota=4000, cache=False)
+        rew = schedule(g, rewrite=True, state_quota=4000, cache=False)
         dt = (time.perf_counter() - t0) * 1e6
         kahn_peak = base.baseline_peaks["kahn"]
         kahn_arena = plan_arena(

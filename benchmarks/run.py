@@ -5,19 +5,46 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_peak_memory      Fig. 10/15  peak footprint vs TFLite order
   bench_offchip_traffic  Fig. 11     Belady off-chip traffic sweep
   bench_footprint_trace  Fig. 12     SwiftNet-A running footprint
-  bench_scheduling_time  Fig. 13/T2  D&C + soft-budget ablation
+  bench_scheduling_time  Fig. 13/T2  D&C + soft-budget ablation + engine/cache
   bench_roofline         (ours)      dry-run roofline table (§Roofline)
   bench_jaxpr_sched      (ours)      SERENITY-on-jaxpr liveness gains
+
+``--smoke`` runs every module on tiny graph sizes with a single repetition
+(seconds, not minutes) so CI can exercise each entry point; ``--json PATH``
+additionally writes the rows as a machine-readable artifact.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph sizes, single repetition (for CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON to PATH")
+    ap.add_argument("--only", default=None,
+                    help="run a single module (e.g. bench_scheduling_time)")
+    args = ap.parse_args()
+
+    if args.json:
+        # fail fast on an unwritable artifact path, not after minutes of work
+        with open(args.json, "w"):
+            pass
+
+    # importable both as `python benchmarks/run.py` and `python -m benchmarks.run`
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    if _ROOT not in sys.path:
+        sys.path.insert(0, _ROOT)
     from benchmarks import (
         bench_footprint_trace,
         bench_jaxpr_sched,
@@ -35,20 +62,38 @@ def main() -> None:
         bench_roofline,
         bench_jaxpr_sched,
     ]
+    if args.only:
+        modules = [m for m in modules if m.__name__.endswith(args.only)]
+        if not modules:
+            raise SystemExit(f"unknown module {args.only!r}")
     rows: list[tuple] = []
-    failed = 0
+    failures: list[str] = []
     for mod in modules:
+        t0 = time.perf_counter()
         try:
-            mod.run(rows)
+            mod.run(rows, smoke=args.smoke)
         except Exception:
-            failed += 1
+            failures.append(mod.__name__)
             print(f"# BENCH FAILED: {mod.__name__}", file=sys.stderr)
             traceback.print_exc()
+        else:
+            print(f"# {mod.__name__}: {time.perf_counter() - t0:.1f}s",
+                  file=sys.stderr)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    if failed:
-        raise SystemExit(f"{failed} bench modules failed")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "smoke": args.smoke,
+                "rows": [
+                    {"name": n, "us_per_call": us, "derived": d}
+                    for n, us, d in rows
+                ],
+                "failed_modules": failures,
+            }, f, indent=2)
+    if failures:
+        raise SystemExit(f"{len(failures)} bench modules failed")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ from repro.core.heuristics import (
     kahn_schedule,
 )
 from repro.core.partition import Segment, find_separators, partition
+from repro.core.plancache import (
+    PlanCache,
+    canonical_hash,
+    default_cache,
+    labeled_fingerprint,
+)
 from repro.core.rewriter import RewriteReport, rewrite_graph
 from repro.core.scheduler import (
     NoSolutionError,
@@ -40,6 +46,7 @@ __all__ = [
     "GraphError",
     "Node",
     "NoSolutionError",
+    "PlanCache",
     "RewriteReport",
     "ScheduleResult",
     "SearchTimeout",
@@ -49,9 +56,12 @@ __all__ = [
     "TrafficResult",
     "adaptive_budget_schedule",
     "brute_force_schedule",
+    "canonical_hash",
+    "default_cache",
     "dfs_schedule",
     "dp_schedule",
     "find_separators",
+    "labeled_fingerprint",
     "greedy_schedule",
     "kahn_schedule",
     "partition",

@@ -54,6 +54,7 @@ def adaptive_budget_schedule(
     max_rounds: int = 64,
     wall_clock_limit_s: float | None = None,
     tau_max: int | None = None,
+    engine: str = "auto",
 ) -> tuple[ScheduleResult, BudgetSearchStats]:
     """Algorithm 2: binary meta-search for tau wrapping the DP scheduler.
 
@@ -61,6 +62,11 @@ def adaptive_budget_schedule(
     may pass a tighter *known-feasible* peak (e.g. the best heuristic's) —
     since the DP prunes strictly-greater peaks only, a feasible tau never
     yields 'no solution', it just shrinks the search space further.
+
+    ``engine`` selects the DP implementation per round (see
+    :func:`repro.core.scheduler.dp_schedule`); every round of the meta-search
+    shares the graph's precomputed bitmask tables, so retries with a new tau
+    re-run only the frontier sweep, not the setup.
     """
     t0 = time.perf_counter()
     kahn = kahn_schedule(g, preplaced=preplaced)
@@ -82,6 +88,7 @@ def adaptive_budget_schedule(
                     state_quota=quota,
                     preplaced=preplaced,
                     wall_clock_limit_s=wall_clock_limit_s,
+                    engine=engine,
                 )
                 trajectory.append((tau_new, "solution"))
                 break

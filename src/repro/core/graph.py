@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Iterable, Mapping, Sequence
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class Node:
@@ -196,6 +198,25 @@ class Graph:
                         f"{len(self.succs[p])} consumers (must be 1)"
                     )
 
+    # -- vectorized scheduling tables ------------------------------------------
+
+    def masks(self) -> "BitmaskTables":
+        """Numpy bitmask/byte tables for the vectorized DP (built once, cached)."""
+        bt = self.__dict__.get("_masks")
+        if bt is None:
+            bt = BitmaskTables(self)
+            self._masks = bt
+        return bt
+
+    def __getstate__(self) -> dict:
+        # the numpy tables are a pure cache — rebuild on demand after unpickle
+        state = dict(self.__dict__)
+        state.pop("_masks", None)
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+
     def __repr__(self) -> str:
         return (
             f"Graph({self.name!r}, nodes={len(self)}, edges={self.n_edges}, "
@@ -208,6 +229,80 @@ def _mask(ids: Iterable[int]) -> int:
     for i in ids:
         m |= 1 << i
     return m
+
+
+class BitmaskTables:
+    """Per-graph numpy tables backing the vectorized bitmask DP.
+
+    Masks over the ``n`` nodes are packed into ``words = ceil(n/64)`` little-
+    endian uint64 words, so a level of ``S`` DP states is an ``(S, words)``
+    array and every transition rule (alloc, dealloc, frontier update) becomes
+    a batched integer operation instead of a per-state Python loop.
+
+    For single-word graphs (``n <= 64`` — every paper cell) the scheduler uses
+    the dense ``(n, n)`` helper matrices to evaluate *all* transitions of a
+    level in a handful of numpy ops.
+    """
+
+    def __init__(self, g: "Graph"):
+        n = len(g)
+        self.n = n
+        self.words = W = max(1, (n + 63) // 64)
+        self.sizes = np.array(g.sizes, dtype=np.int64)
+        self.pred_mask = _pack_masks(g.pred_mask, W)          # (n, W) uint64
+        self.succ_mask = _pack_masks(g.succ_mask, W)          # (n, W) uint64
+        self.node_bit = _pack_masks([1 << i for i in range(n)], W)
+        # net bytes allocated when scheduling u (aliased storage subsumed)
+        self.net_alloc = np.array(
+            [g.sizes[u] - sum(g.sizes[p] for p in g.nodes[u].alias_preds)
+             for u in range(n)],
+            dtype=np.int64,
+        )
+        # Merged CSR edge table: scheduling u touches two kinds of edges —
+        # its non-alias preds (freed iff the pred's successor mask is now a
+        # subset of the signature; contributes `size` bytes) and its succs
+        # (enter the frontier iff their pred mask is a subset; contribute a
+        # frontier `bit`).  Both share the subset test, so they live in one
+        # flat table and the DP expands a whole level's transitions against
+        # it with a single repeat/gather/reduceat pass per level.
+        me_tgt: list[int] = []       # mask that must be covered for a hit
+        me_size: list[int] = []      # bytes freed on hit (0 for succ edges)
+        me_bit: list[int] = []       # frontier bit set on hit (0 for preds)
+        me_len = np.zeros(n, dtype=np.int64)
+        for u in range(n):
+            nd = g.nodes[u]
+            k = 0
+            for p in nd.preds:
+                if p not in nd.alias_preds:
+                    me_tgt.append(g.succ_mask[p])
+                    me_size.append(g.sizes[p])
+                    me_bit.append(0)
+                    k += 1
+            for s in g.succs[u]:
+                me_tgt.append(g.pred_mask[s])
+                me_size.append(0)
+                me_bit.append(1 << s)
+                k += 1
+            me_len[u] = k
+        self.me_tgt = _pack_masks(me_tgt, W)
+        self.me_bit = _pack_masks(me_bit, W)
+        self.me_size = np.array(me_size, dtype=np.int64)
+        self.me_len = me_len
+        self.me_off = np.concatenate(([0], np.cumsum(me_len)))[:-1]
+        if W == 1:
+            self.pred_mask1 = self.pred_mask[:, 0]
+            self.succ_mask1 = self.succ_mask[:, 0]
+            self.node_bit1 = self.node_bit[:, 0]
+            self.me_tgt1 = self.me_tgt[:, 0]
+            self.me_bit1 = self.me_bit[:, 0]
+
+
+def _pack_masks(masks: Sequence[int], words: int) -> np.ndarray:
+    out = np.zeros((len(masks), words), dtype=np.uint64)
+    for i, m in enumerate(masks):
+        for w in range(words):
+            out[i, w] = (m >> (64 * w)) & 0xFFFFFFFFFFFFFFFF
+    return out
 
 
 # ---------------------------------------------------------------------------

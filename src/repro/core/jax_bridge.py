@@ -30,6 +30,7 @@ from jax._src.core import eval_jaxpr as _eval_jaxpr
 
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import kahn_schedule
+from repro.core.plancache import PlanCache, resolve as _resolve_cache
 from repro.core.scheduler import dp_schedule
 from repro.core.budget import adaptive_budget_schedule
 from repro.core.scheduler import SearchTimeout
@@ -96,36 +97,53 @@ class JaxprScheduleReport:
 
 
 def schedule_jaxpr(closed, *, state_quota: int = 4000,
-                   beam_fallback: bool = True):
-    """Reorder the equations of ``closed`` into a memory-optimal order."""
+                   beam_fallback: bool = True,
+                   cache: "PlanCache | bool | None" = True):
+    """Reorder the equations of ``closed`` into a memory-optimal order.
+
+    Equation orders are memoized in the content-addressed plan cache keyed
+    on the lifted graph, so re-tracing the same function (every ``jit``
+    refresh, every serving replica warm-up) schedules in O(graph hash).
+    """
     g, eqn_nodes = jaxpr_to_graph(closed)
     node_to_eqn = {n: i for i, n in enumerate(eqn_nodes)}
 
-    # footprint of the original (trace) order — itself a feasible schedule,
-    # so it seeds the soft budget (tighter than Kahn on traced programs)
-    orig_order = list(range(len(g)))
-    orig = simulate_schedule(g, orig_order)
-    kahn = kahn_schedule(g)
-    tau = min(orig.peak_bytes, kahn.peak_bytes)
+    pc = _resolve_cache(cache)
+    cache_opts = ("jax_bridge.schedule_jaxpr", state_quota, beam_fallback)
+    cached = pc.get(g, cache_opts) if pc is not None else None
+    if cached is not None:
+        best_peak, best_order, exact, orig_peak, kahn_peak = cached
+    else:
+        # footprint of the original (trace) order — itself a feasible
+        # schedule, so it seeds the soft budget (tighter than Kahn on
+        # traced programs)
+        orig_order = list(range(len(g)))
+        orig = simulate_schedule(g, orig_order)
+        kahn = kahn_schedule(g)
+        tau = min(orig.peak_bytes, kahn.peak_bytes)
 
-    exact = True
-    try:
-        res = dp_schedule(g, budget=tau, state_quota=state_quota)
-    except SearchTimeout:
-        if not beam_fallback:
-            raise
-        # beam runs UNBUDGETED: beam width alone bounds the search — a
-        # budget would dead-end it (low-peak states it keeps can all hit
-        # the budget wall while the feasible path got evicted)
-        exact = False
-        res = dp_schedule(g, state_quota=state_quota, on_quota="beam")
+        exact = True
+        try:
+            res = dp_schedule(g, budget=tau, state_quota=state_quota)
+        except SearchTimeout:
+            if not beam_fallback:
+                raise
+            # beam runs UNBUDGETED: beam width alone bounds the search — a
+            # budget would dead-end it (low-peak states it keeps can all hit
+            # the budget wall while the feasible path got evicted)
+            exact = False
+            res = dp_schedule(g, state_quota=state_quota, on_quota="beam")
 
-    candidates = [
-        (orig.peak_bytes, orig_order),
-        (kahn.peak_bytes, kahn.order),
-        (res.peak_bytes, res.order),
-    ]
-    best_peak, best_order = min(candidates, key=lambda c: c[0])
+        candidates = [
+            (orig.peak_bytes, orig_order),
+            (kahn.peak_bytes, kahn.order),
+            (res.peak_bytes, res.order),
+        ]
+        best_peak, best_order = min(candidates, key=lambda c: c[0])
+        orig_peak, kahn_peak = orig.peak_bytes, kahn.peak_bytes
+        if pc is not None:
+            pc.put(g, cache_opts,
+                   (best_peak, list(best_order), exact, orig_peak, kahn_peak))
     new_eqns = [closed.jaxpr.eqns[node_to_eqn[n]] for n in best_order
                 if n in node_to_eqn]
     assert len(new_eqns) == len(closed.jaxpr.eqns)
@@ -133,8 +151,8 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
     new_closed = core.ClosedJaxpr(new_jaxpr, closed.consts)
     report = JaxprScheduleReport(
         n_eqns=len(new_eqns),
-        original_peak=orig.peak_bytes,
-        kahn_peak=kahn.peak_bytes,
+        original_peak=orig_peak,
+        kahn_peak=kahn_peak,
         optimal_peak=best_peak,
         exact=exact,
         order=list(best_order),

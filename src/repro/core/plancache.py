@@ -1,0 +1,300 @@
+"""Content-addressed plan cache for SERENITY scheduling results.
+
+Scheduling is a pure function of the graph *structure* — node shapes/sizes,
+ops and wiring — never of the node labels an importer happened to assign.
+This module therefore addresses cached plans by a canonical graph hash:
+
+``canonical_hash(g)``
+    Weisfeiler–Lehman-style color refinement over the scheduling-relevant
+    node payload (op, output bytes, weight bytes, meta/shape entries, alias
+    structure) and the edge wiring.  Two graphs that differ only by a node
+    relabeling hash identically; changing any shape, size or edge changes
+    the hash.
+
+``labeled_fingerprint(g)``
+    Exact hash of the concrete labeled graph.  Used as the second key tier
+    so a cache hit hands back a plan whose node ids are valid verbatim for
+    the requesting graph.  Note the consequence: a *relabeled* isomorphic
+    graph shares the canonical address but does not hit — translating a
+    cached plan across labelings is future work; today the canonical tier
+    buys address stability (same bucket, dedup-friendly disk names), not
+    cross-labeling reuse.
+
+``PlanCache``
+    Two-tier memo: an in-process LRU (a hit on a live graph is O(1) — the
+    content hashes are memoized on the instance and the stored plan is
+    returned zero-copy) and an optional on-disk pickle store shared across
+    processes.  Cached plans are shared objects: treat them as immutable.
+
+The default process-wide cache is wired through
+:func:`repro.core.serenity.schedule`, :mod:`repro.core.jax_bridge` and
+``repro.launch.serve``; set the ``REPRO_PLANCACHE_DIR`` environment variable
+to also persist plans across processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import threading
+from collections import OrderedDict
+from typing import Any
+
+from repro.core.graph import Graph
+
+_ENV_DIR = "REPRO_PLANCACHE_DIR"
+
+
+# ---------------------------------------------------------------------------
+# Canonical graph hashing
+# ---------------------------------------------------------------------------
+
+
+def _node_payload(g: Graph, u: int) -> tuple:
+    nd = g.nodes[u]
+    return (nd.op, nd.size_bytes, nd.weight_bytes, nd.meta)
+
+
+_M64 = (1 << 64) - 1
+_FNV = 1099511628211
+
+
+def _fold(salt: int, values) -> int:
+    """Order-sensitive 64-bit fold (callers sort first for multisets)."""
+    h = salt
+    for x in values:
+        h = ((h * _FNV) ^ x) & _M64
+        h = (h ^ (h >> 29)) * 0xBF58476D1CE4E5B9 & _M64   # splitmix64 finalize
+    return h
+
+
+def canonical_hash(g: Graph) -> str:
+    """Label-invariant content hash of the scheduling-relevant structure.
+
+    WL color refinement with process-stable colors: initial colors come from
+    sha256 of the node payload, refinement mixes the sorted neighbor color
+    multisets with 64-bit integer arithmetic (no per-node hashing in the
+    loop — the refinement is the hot path for cache lookups), and the final
+    digest is sha256 over the sorted color multiset plus edge color pairs.
+    Isomorphic relabelings hash equal; any shape/size/op/edge change does not.
+    """
+    n = len(g)
+    payload_color: dict[bytes, int] = {}
+    colors = []
+    for u in range(n):
+        key = repr(_node_payload(g, u)).encode()
+        c = payload_color.get(key)
+        if c is None:
+            c = int.from_bytes(hashlib.sha256(key).digest()[:8], "big")
+            payload_color[key] = c
+        colors.append(c)
+    succs = g.succs
+    for _ in range(max(1, n.bit_length())):
+        nxt = [
+            _fold(0xA5, (
+                colors[u],
+                _fold(0xB7, sorted(colors[p] for p in g.nodes[u].preds)),
+                _fold(0xC9, sorted(colors[s] for s in succs[u])),
+                _fold(0xD1, sorted(colors[p] for p in g.nodes[u].alias_preds)),
+            ))
+            for u in range(n)
+        ]
+        if nxt == colors:
+            break
+        colors = nxt
+    acc = hashlib.sha256()
+    acc.update(f"n={n}".encode())
+    for c in sorted(colors):
+        acc.update(c.to_bytes(8, "big"))
+    for cu, cv in sorted(
+        (colors[p], colors[nd.id]) for nd in g.nodes for p in nd.preds
+    ):
+        acc.update(cu.to_bytes(8, "big") + cv.to_bytes(8, "big"))
+    return acc.hexdigest()
+
+
+def labeled_fingerprint(g: Graph) -> str:
+    """Exact content hash of the labeled graph (ids, names, wiring, sizes)."""
+    acc = hashlib.sha256()
+    acc.update(repr(len(g)).encode())
+    for nd in g.nodes:
+        acc.update(repr((
+            nd.id, nd.name, nd.op, nd.size_bytes, nd.weight_bytes,
+            nd.preds, tuple(sorted(nd.alias_preds)), nd.meta,
+        )).encode())
+    return acc.hexdigest()
+
+
+def _options_key(options: Any) -> str:
+    return hashlib.sha256(repr(options).encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    disk_hits: int = 0
+    puts: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PlanCache:
+    """Two-tier (memory LRU + optional disk) content-addressed plan store.
+
+    Keys are ``(canonical_hash(g), options, labeled_fingerprint(g))`` — the
+    canonical tier makes isomorphic graphs share an address, the labeled
+    tier guarantees a returned plan's node ids are valid for the caller's
+    graph verbatim.  Payloads may be any picklable object (a
+    ``SerenityResult``, a bare order, an arena plan...).
+    """
+
+    def __init__(self, capacity: int = 256, disk_dir: str | None = None):
+        self.capacity = capacity
+        self.disk_dir = disk_dir
+        self.stats = CacheStats()
+        self._mem: OrderedDict[tuple[str, str, str], Any] = OrderedDict()
+        self._lock = threading.Lock()
+
+    # -- keys ---------------------------------------------------------------
+
+    def key_for(self, g: Graph, options: Any = ()) -> tuple[str, str, str]:
+        # graphs are immutable, so the content hashes are memoized on the
+        # instance — repeat lookups for a live graph are O(1)
+        gk = g.__dict__.get("_plancache_key")
+        if gk is None:
+            gk = (canonical_hash(g), labeled_fingerprint(g))
+            g._plancache_key = gk
+        return (gk[0], _options_key(options), gk[1])
+
+    # -- lookup / insert ----------------------------------------------------
+
+    def get(self, g: Graph, options: Any = ()) -> Any | None:
+        key = self.key_for(g, options)
+        with self._lock:
+            if key in self._mem:
+                self._mem.move_to_end(key)
+                self.stats.hits += 1
+                return self._mem[key]
+        blob = self._disk_read(key)
+        if blob is not None:
+            try:
+                payload = pickle.loads(blob)
+            except Exception:
+                # corrupt/stale entry (truncated write, older code version):
+                # drop it and recompute rather than poisoning every lookup
+                self._disk_evict(key)
+            else:
+                with self._lock:
+                    self._mem_put(key, payload)
+                    self.stats.hits += 1
+                    self.stats.disk_hits += 1
+                return payload
+        with self._lock:
+            self.stats.misses += 1
+        return None
+
+    def put(self, g: Graph, options: Any, payload: Any) -> None:
+        key = self.key_for(g, options)
+        with self._lock:
+            self._mem_put(key, payload)
+            self.stats.puts += 1
+        if self.disk_dir:
+            self._disk_write(key, pickle.dumps(payload))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem.clear()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    # -- internals ----------------------------------------------------------
+
+    def _mem_put(self, key: tuple[str, str, str], payload: Any) -> None:
+        self._mem[key] = payload
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.capacity:
+            self._mem.popitem(last=False)
+
+    def _disk_path(self, key: tuple[str, str, str]) -> str | None:
+        if not self.disk_dir:
+            return None
+        return os.path.join(
+            self.disk_dir, f"{key[0][:24]}-{key[1]}-{key[2][:24]}.plan.pkl"
+        )
+
+    def _disk_read(self, key: tuple[str, str, str]) -> bytes | None:
+        path = self._disk_path(key)
+        if path is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                return f.read()
+        except OSError:
+            return None
+
+    def _disk_evict(self, key: tuple[str, str, str]) -> None:
+        path = self._disk_path(key)
+        if path is not None:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+
+    def _disk_write(self, key: tuple[str, str, str], blob: bytes) -> None:
+        path = self._disk_path(key)
+        if path is None:
+            return
+        try:
+            os.makedirs(self.disk_dir, exist_ok=True)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, path)   # atomic publish, safe across processes
+        except OSError:
+            pass                    # disk tier is best-effort
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default cache
+# ---------------------------------------------------------------------------
+
+_default_cache: PlanCache | None = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> PlanCache:
+    """The process-wide plan cache (disk tier from ``$REPRO_PLANCACHE_DIR``)."""
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = PlanCache(
+                disk_dir=os.environ.get(_ENV_DIR) or None
+            )
+        return _default_cache
+
+
+def configure_default(cache: PlanCache | None) -> None:
+    """Replace the process-wide cache (``None`` resets to a fresh one)."""
+    global _default_cache
+    with _default_lock:
+        _default_cache = cache
+
+
+def resolve(cache: "PlanCache | bool | None") -> PlanCache | None:
+    """Map a user-facing cache argument to a PlanCache (or None = disabled)."""
+    if cache is True:
+        return default_cache()
+    if cache is False or cache is None:
+        return None
+    return cache

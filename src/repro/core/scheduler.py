@@ -23,10 +23,17 @@ Two pruning hooks implement the paper's speed machinery:
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.graph import Graph, simulate_schedule
+
+# Below this node count the per-level numpy dispatch overhead outweighs the
+# vectorization win; the scalar reference loop is faster on tiny segments.
+_NUMPY_MIN_NODES = 24
 
 
 class NoSolutionError(RuntimeError):
@@ -58,6 +65,7 @@ def dp_schedule(
     wall_clock_limit_s: float | None = None,
     preplaced: Sequence[int] = (),
     on_quota: str = "raise",
+    engine: str = "auto",
 ) -> ScheduleResult:
     """Optimal-peak topological schedule of ``g`` via signature DP.
 
@@ -67,12 +75,63 @@ def dp_schedule(
     optimal, but bounded; the production fallback for very wide graphs
     (DESIGN.md §3).
 
+    ``engine`` selects the DP implementation:
+
+      * ``'python'`` — the scalar reference loop (one Python iteration per
+        state transition).  Semantically the source of truth.
+      * ``'numpy'``  — the vectorized bitmask engine: each DP level is a
+        batch of packed-uint64 signature rows and every transition rule
+        (alloc, budget prune, dealloc, frontier update, dedup) is evaluated
+        for the whole level at once.  Identical results (same ``peak_bytes``
+        and ``final_bytes``; ties may pick a different but equally-optimal
+        order only when the two engines enumerate states differently —
+        both are deterministic).
+      * ``'auto'``   — ``'numpy'`` for graphs above ``_NUMPY_MIN_NODES``
+        nodes, ``'python'`` for tiny ones where dispatch overhead dominates.
+
     Raises
     ------
     NoSolutionError   if ``budget`` prunes every path (tau < mu*).
     SearchTimeout     if a search step exceeds ``state_quota`` signatures or
                       the wall clock limit (with ``on_quota='raise'``).
     """
+    if engine == "auto":
+        engine = (
+            "numpy"
+            if len(g) > _NUMPY_MIN_NODES and sys.byteorder == "little"
+            else "python"
+        )
+    if engine == "numpy":
+        return _dp_schedule_numpy(
+            g,
+            budget=budget,
+            state_quota=state_quota,
+            wall_clock_limit_s=wall_clock_limit_s,
+            preplaced=preplaced,
+            on_quota=on_quota,
+        )
+    if engine != "python":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _dp_schedule_python(
+        g,
+        budget=budget,
+        state_quota=state_quota,
+        wall_clock_limit_s=wall_clock_limit_s,
+        preplaced=preplaced,
+        on_quota=on_quota,
+    )
+
+
+def _dp_schedule_python(
+    g: Graph,
+    *,
+    budget: int | None = None,
+    state_quota: int | None = None,
+    wall_clock_limit_s: float | None = None,
+    preplaced: Sequence[int] = (),
+    on_quota: str = "raise",
+) -> ScheduleResult:
+    """Scalar reference DP (the seed implementation, kept verbatim)."""
     t0 = time.perf_counter()
     n = len(g)
     pre = frozenset(preplaced)
@@ -190,6 +249,236 @@ def dp_schedule(
         order=order,
         peak_bytes=final_peak,
         final_bytes=final_mu,
+        n_states_expanded=expanded,
+        n_signatures=n_signatures,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+def _dp_schedule_numpy(
+    g: Graph,
+    *,
+    budget: int | None = None,
+    state_quota: int | None = None,
+    wall_clock_limit_s: float | None = None,
+    preplaced: Sequence[int] = (),
+    on_quota: str = "raise",
+) -> ScheduleResult:
+    """Vectorized bitmask DP over whole levels at once.
+
+    A level is the set of DP states with the same number of scheduled nodes.
+    State signatures are rows of packed uint64 words (``Graph.masks()``), so
+    one level is an ``(S, words)`` array and the per-transition work of the
+    reference loop becomes ~a dozen batched numpy ops:
+
+      1. unpack every state's ready-set into (state, node) transition pairs,
+      2. batched alloc (``mu + net_alloc``), peak update, budget prune,
+      3. signature dedup via one stable lexsort over (mask words, peak),
+         keeping exactly the reference loop's winner per signature (the
+         footprint is a pure function of the mask, so only peak can differ
+         within a group),
+      4. batched dealloc on the survivors: a predecessor is freed iff its
+         successor mask is a subset of the new signature (single-word graphs
+         test *all* node pairs with one ``(S, n)`` broadcast),
+      5. batched frontier refill the same way.
+    """
+    if sys.byteorder != "little":
+        # unpackbits(view(uint8), bitorder='little') relies on little-endian
+        # uint64 layout; on big-endian hosts bits would map to wrong nodes
+        raise RuntimeError(
+            "engine='numpy' requires a little-endian host; use engine='python'"
+        )
+    t0 = time.perf_counter()
+    n = len(g)
+    pre = frozenset(preplaced)
+    n_free = n - len(pre)
+    if n_free == 0:
+        return ScheduleResult([], 0, 0, 0, 0, 0.0)
+
+    bt = g.masks()
+    W = bt.words
+    u64 = np.uint64
+
+    pre_mask = np.zeros(W, dtype=u64)
+    mu0 = 0
+    for p in pre:
+        pre_mask[p // 64] |= u64(1) << u64(p % 64)
+        mu0 += g.sizes[p]
+    full_mask = pre_mask.copy()
+    for u in range(n):
+        if u not in pre:
+            full_mask[u // 64] |= u64(1) << u64(u % 64)
+    frontier0 = np.zeros(W, dtype=u64)
+    for u in range(n):
+        if u not in pre and (bt.pred_mask[u] & ~pre_mask).max(initial=0) == 0:
+            frontier0[u // 64] |= u64(1) << u64(u % 64)
+
+    # current level (all states at the same depth); single-word graphs keep
+    # signatures/frontiers as 1-D uint64 arrays, wider ones as (S, W) rows
+    word1 = W == 1
+    if word1:
+        masks = pre_mask.copy()                          # (S,)
+        frontier = frontier0.copy()
+    else:
+        masks = np.ascontiguousarray(pre_mask[None, :])  # (S, W)
+        frontier = np.ascontiguousarray(frontier0[None, :])
+    mu = np.array([mu0], dtype=np.int64)
+    peak = np.array([mu0], dtype=np.int64)
+
+    # per-level winner arrays for schedule reconstruction: at level L,
+    # state i was reached by scheduling node_hist[L][i] in state
+    # from_hist[L][i] of level L-1
+    node_hist: list[np.ndarray] = []
+    from_hist: list[np.ndarray] = []
+    expanded = 0
+    n_signatures = 1
+
+    row_bits = 64 * W            # unpacked row width (a power of two iff
+    row_shift = row_bits.bit_length() - 1     # W is one: the hot path)
+    row_pow2 = row_bits & (row_bits - 1) == 0
+    for _step in range(n_free):
+        # 1. all (state, node) transitions of this level: unpack the packed
+        # frontiers to one flat bit array; flat position p encodes
+        # (state, node) = divmod(p, 64W).  Bits past n are always zero, so
+        # no trimming is needed.
+        bits = np.unpackbits(
+            np.ascontiguousarray(frontier).view(np.uint8),
+            bitorder="little",
+        )
+        tpos = np.flatnonzero(bits)
+        if row_pow2:
+            state_idx = tpos >> row_shift
+            u_arr = tpos & (row_bits - 1)
+        else:
+            state_idx = tpos // row_bits
+            u_arr = tpos - state_idx * row_bits
+        expanded += len(u_arr)
+
+        # 2. batched alloc + budget prune (O(transitions) scalar arrays)
+        pre_mu = mu[state_idx] + bt.net_alloc[u_arr]
+        new_peak = np.maximum(peak[state_idx], pre_mu)
+        if budget is not None:
+            keep = new_peak <= budget
+            u_arr, state_idx = u_arr[keep], state_idx[keep]
+            pre_mu, new_peak = pre_mu[keep], new_peak[keep]
+        if len(u_arr) == 0:
+            raise NoSolutionError(
+                f"budget {budget} prunes all paths at step {_step} "
+                f"(graph {g.name!r})"
+            )
+
+        # 3. dedup signatures first: the footprint mu is a pure function of
+        # the signature mask, so transitions reaching the same mask differ
+        # only in peak.  One sort groups equal masks; the winner per group
+        # is a transition with the group-minimal peak — the reference
+        # loop's strictly-better-replaces rule (among equal-peak ties any
+        # representative is equivalent: same mask, same mu, same peak).
+        firsts = np.empty(len(u_arr), dtype=bool)
+        firsts[0] = True
+        if word1:
+            new_mask = masks[state_idx] | bt.node_bit1[u_arr]
+            order = np.argsort(new_mask)
+            sorted_mask = new_mask[order]
+            np.not_equal(sorted_mask[1:], sorted_mask[:-1], out=firsts[1:])
+        else:
+            new_mask = masks[state_idx] | bt.node_bit[u_arr]
+            order = np.lexsort(tuple(new_mask.T))
+            sorted_mask = new_mask[order]
+            np.any(sorted_mask[1:] != sorted_mask[:-1], axis=1, out=firsts[1:])
+        starts = np.flatnonzero(firsts)
+        n_uniq = len(starts)
+        if (
+            state_quota is not None
+            and on_quota == "raise"
+            and n_uniq > state_quota
+        ):
+            raise SearchTimeout(f"step {_step}: memo > quota {state_quota}")
+        pk_sorted = new_peak[order]
+        group_min = np.minimum.reduceat(pk_sorted, starts)
+        group_of = np.cumsum(firsts) - 1
+        match = np.flatnonzero(pk_sorted == group_min[group_of])
+        first_match = match[
+            np.searchsorted(group_of[match], np.arange(n_uniq))
+        ]
+        winners = order[first_match]
+
+        state_w = state_idx[winners]
+        u_w = u_arr[winners]
+        mask_w = new_mask[winners]
+        peak_w = new_peak[winners]
+        mu_w = pre_mu[winners]
+        if word1:
+            frontier_w = frontier[state_w] ^ bt.node_bit1[u_w]
+        else:
+            frontier_w = frontier[state_w] ^ bt.node_bit[u_w]
+
+        # 4. batched dealloc + frontier refill on the deduped level: expand
+        # each survivor against its node's merged CSR edge table
+        # (repeat/gather), test subset-of-signature per edge once, and fold
+        # back per row with reduceat — bytes freed for pred edges, frontier
+        # bits for successor edges.  A pred is freed iff all its consumers
+        # are scheduled; a successor enters the frontier iff all its preds
+        # are.
+        cnt = bt.me_len[u_w]
+        rows = np.flatnonzero(cnt)
+        if len(rows):
+            cnt_nz = cnt[rows]
+            ends = np.cumsum(cnt_nz)
+            offs = ends - cnt_nz
+            # flat[i] = csr_off[u] + (position of i within its row)
+            pos = np.arange(int(ends[-1])) - np.repeat(offs, cnt_nz)
+            flat = np.repeat(bt.me_off[u_w[rows]], cnt_nz) + pos
+            row_rep = np.repeat(rows, cnt_nz)
+            if word1:
+                tgt = bt.me_tgt1[flat]
+                hit = (mask_w[row_rep] & tgt) == tgt
+                mu_w[rows] -= np.add.reduceat(
+                    np.where(hit, bt.me_size[flat], 0), offs)
+                frontier_w[rows] |= np.bitwise_or.reduceat(
+                    np.where(hit, bt.me_bit1[flat], u64(0)), offs)
+            else:
+                tgt = bt.me_tgt[flat]
+                hit = ((mask_w[row_rep] & tgt) == tgt).all(axis=1)
+                mu_w[rows] -= np.add.reduceat(
+                    np.where(hit, bt.me_size[flat], 0), offs)
+                frontier_w[rows] |= np.bitwise_or.reduceat(
+                    np.where(hit[:, None], bt.me_bit[flat], u64(0)),
+                    offs, axis=0)
+
+        # 5. beam trim (needs the post-dealloc footprint for its tie-break)
+        if (
+            state_quota is not None
+            and on_quota == "beam"
+            and len(winners) > state_quota
+        ):
+            best = np.lexsort((mu_w, peak_w))[: state_quota]
+            state_w, u_w = state_w[best], u_w[best]
+            mask_w = mask_w[best]
+            peak_w, mu_w = peak_w[best], mu_w[best]
+            frontier_w = frontier_w[best]
+        if (
+            wall_clock_limit_s is not None
+            and time.perf_counter() - t0 > wall_clock_limit_s
+        ):
+            raise SearchTimeout(f"wall clock limit {wall_clock_limit_s}s hit")
+        n_signatures += len(u_w)
+
+        node_hist.append(u_w)
+        from_hist.append(state_w)
+        masks, mu, peak, frontier = mask_w, mu_w, peak_w, frontier_w
+
+    assert len(mu) == 1 and (masks if word1 else masks[0]).reshape(-1).tolist() \
+        == full_mask.tolist()
+    order_out: list[int] = []
+    idx = 0
+    for lvl in range(n_free - 1, -1, -1):
+        order_out.append(int(node_hist[lvl][idx]))
+        idx = int(from_hist[lvl][idx])
+    order_out.reverse()
+    return ScheduleResult(
+        order=order_out,
+        peak_bytes=int(peak[0]),
+        final_bytes=int(mu[0]),
         n_states_expanded=expanded,
         n_signatures=n_signatures,
         wall_time_s=time.perf_counter() - t0,

@@ -18,6 +18,7 @@ from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import BASELINES, kahn_schedule
 from repro.core.partition import Segment, partition
+from repro.core.plancache import PlanCache, resolve as _resolve_cache
 from repro.core.rewriter import RewriteReport, rewrite_graph
 from repro.core.scheduler import ScheduleResult, dp_schedule
 
@@ -48,13 +49,36 @@ def schedule(
     state_quota: int = 20_000,
     exact_threshold: int = 18,
     compute_baselines: bool = True,
+    engine: str = "auto",
+    cache: "PlanCache | bool | None" = True,
 ) -> SerenityResult:
     """Run the full SERENITY pipeline on graph ``g``.
 
     ``exact_threshold``: segments with at most this many nodes skip the budget
     meta-search and run the exact DP directly (cheaper than a meta-search).
+
+    ``engine`` picks the DP implementation (see
+    :func:`repro.core.scheduler.dp_schedule`).
+
+    ``cache``: content-addressed plan memoization.  ``True`` (default) uses
+    the process-wide :class:`~repro.core.plancache.PlanCache`; pass a
+    :class:`PlanCache` to control capacity/disk placement, or ``False`` to
+    always recompute.  A hit returns the cold run's ``SerenityResult``
+    zero-copy (same order, same peaks, same arena plan) in O(graph hash)
+    time — treat cached results as immutable.
     """
+    pc = _resolve_cache(cache)
+    cache_opts = (
+        "serenity.schedule", rewrite, divide_and_conquer, adaptive_budget,
+        state_quota, exact_threshold, compute_baselines, engine,
+    )
+    if pc is not None:
+        hit = pc.get(g, cache_opts)
+        if hit is not None:
+            return hit
+
     t0 = time.perf_counter()
+    g_in = g                      # cache key addresses the pre-rewrite graph
     report: RewriteReport | None = None
     if rewrite:
         g, report = rewrite_graph(g)
@@ -74,7 +98,7 @@ def schedule(
         pre = tuple(idmap[b] for b in seg.boundary_in)
         n_free = len(sub) - len(pre)
         if n_free <= exact_threshold or not adaptive_budget:
-            res = dp_schedule(sub, preplaced=pre)
+            res = dp_schedule(sub, preplaced=pre, engine=engine)
         else:
             # Seed the meta-search with the tightest *feasible* budget any
             # heuristic achieves (beyond-paper: the paper seeds with Kahn
@@ -83,7 +107,8 @@ def schedule(
                        for fn in (kahn_schedule, BASELINES["greedy"],
                                   BASELINES["dfs"]))
             res, stats = adaptive_budget_schedule(
-                sub, state_quota=state_quota, preplaced=pre, tau_max=tau0
+                sub, state_quota=state_quota, preplaced=pre, tau_max=tau0,
+                engine=engine,
             )
             budget_stats.append(stats)
         order.extend(inv[u] for u in res.order)
@@ -94,7 +119,7 @@ def schedule(
     if compute_baselines:
         for name, fn in BASELINES.items():
             baselines[name] = fn(g).peak_bytes
-    return SerenityResult(
+    result = SerenityResult(
         graph=g,
         order=order,
         peak_bytes=sim.peak_bytes,
@@ -105,3 +130,6 @@ def schedule(
         wall_time_s=time.perf_counter() - t0,
         baseline_peaks=baselines,
     )
+    if pc is not None:
+        pc.put(g_in, cache_opts, result)
+    return result

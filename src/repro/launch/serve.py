@@ -22,6 +22,7 @@ import numpy as np
 
 import repro.configs as configs
 from repro.core import Graph, kahn_schedule, plan_arena
+from repro.core.plancache import default_cache
 from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
@@ -29,7 +30,12 @@ from repro.models.zoo import build_model
 
 
 def plan_decode_arena(model, bsz: int, smax: int) -> dict:
-    """Arena-plan the decode state buffers with the SERENITY allocator."""
+    """Arena-plan the decode state buffers with the SERENITY allocator.
+
+    The plan is memoized in the content-addressed plan cache: every replica
+    serving the same (arch, batch, seq) shape — and every later request for
+    it in this process — reuses the first plan in O(graph hash).
+    """
     defs = model.make_cache_defs(bsz, smax)
     leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     specs = []
@@ -45,11 +51,17 @@ def plan_decode_arena(model, bsz: int, smax: int) -> dict:
     specs.append(dict(name="logits", op="act", size_bytes=bsz * V * 4,
                       preds=[len(specs) - 1]))
     g = Graph.build(specs, name="decode_state")
-    order = kahn_schedule(g).order
-    plan = plan_arena(g, order)
-    naive = sum(s["size_bytes"] for s in specs)
-    return {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
-            "n_buffers": len(specs), "plan": plan}
+    pc = default_cache()
+    cache_opts = ("serve.plan_decode_arena",)
+    out = pc.get(g, cache_opts)
+    if out is None:
+        order = kahn_schedule(g).order
+        plan = plan_arena(g, order)
+        naive = sum(s["size_bytes"] for s in specs)
+        out = {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
+               "n_buffers": len(specs), "plan": plan}
+        pc.put(g, cache_opts, out)
+    return out
 
 
 def main() -> None:
@@ -70,9 +82,11 @@ def main() -> None:
 
     # ---- SERENITY arena plan for the decode state -------------------------
     plan = plan_decode_arena(model, args.batch, smax)
+    pc_stats = default_cache().stats
     print(f"[serve] decode-state arena: {plan['arena_bytes']/1e6:.2f} MB "
           f"across {plan['n_buffers']} buffers "
-          f"(naive sum {plan['naive_bytes']/1e6:.2f} MB)")
+          f"(naive sum {plan['naive_bytes']/1e6:.2f} MB; plan cache "
+          f"hits={pc_stats.hits} misses={pc_stats.misses})")
 
     mesh = rules = None
     if args.mesh != "none":

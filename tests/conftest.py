@@ -1,6 +1,25 @@
 import os
 import sys
 
+import pytest
+
 # tests see the single real CPU device (the dry-run sets its own device
-# count in a separate process)
+# count in a separate process); the path insert keeps `repro` importable
+# even without `pip install -e .`
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (long model/kernel/distribution runs)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow/bench test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords or "bench" in item.keywords:
+            item.add_marker(skip)

@@ -1,7 +1,9 @@
 """Arena allocator invariants + Belady traffic model."""
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Graph, kahn_schedule, plan_arena, simulate_traffic
 from tests.test_property_scheduler import random_dags

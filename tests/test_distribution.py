@@ -115,6 +115,7 @@ def test_mini_multipod_dryrun_subprocess():
         )
 
 
+@pytest.mark.slow
 def test_train_step_sharded_matches_unsharded():
     """Numerical parity: the same train step on 1 device vs a 2x2 host mesh
     must produce the same loss (pure data/tensor parallel reformulation)."""

@@ -36,6 +36,7 @@ def test_smoke_forward_no_nans(name, key):
     assert loss.shape == ()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", C.ARCH_NAMES)
 def test_smoke_train_step_improves_nothing_nan(name, key):
     cfg = C.smoke(name)
@@ -59,6 +60,7 @@ def test_smoke_train_step_improves_nothing_nan(name, key):
     assert moved
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", C.ARCH_NAMES)
 def test_prefill_decode_consistency(name, key):
     """prefill(t0..tn) then decode(t_{n+1}) must equal prefill(t0..t_{n+1})."""

@@ -1,0 +1,188 @@
+"""Content-addressed plan cache: canonical hashing + memoization contract."""
+
+import pickle
+
+import pytest
+
+from repro.core import (
+    Graph,
+    Node,
+    PlanCache,
+    canonical_hash,
+    labeled_fingerprint,
+    schedule,
+)
+from repro.graphs import randwire_graph
+
+
+def _relabel(g: Graph, perm: dict[int, int]) -> Graph:
+    nodes = [
+        Node(
+            id=perm[nd.id],
+            name=nd.name,
+            op=nd.op,
+            size_bytes=nd.size_bytes,
+            preds=tuple(sorted(perm[p] for p in nd.preds)),
+            alias_preds=frozenset(perm[p] for p in nd.alias_preds),
+            weight_bytes=nd.weight_bytes,
+            meta=nd.meta,
+        )
+        for nd in g.nodes
+    ]
+    return Graph(nodes, name=g.name)
+
+
+def _chain3(last_pred: int = 1) -> Graph:
+    return Graph.build([
+        dict(name="a", op="input", size_bytes=8),
+        dict(name="b", op="op", size_bytes=16, preds=[0]),
+        dict(name="c", op="op", size_bytes=4, preds=[last_pred]),
+    ])
+
+
+# -- canonical hashing -------------------------------------------------------
+
+
+def test_relabeled_isomorphic_graphs_hash_equal():
+    g = randwire_graph(seed=10, n=16)
+    n = len(g)
+    # id reversal keeps edge directions, only relabels nodes
+    rev = _relabel(g, {i: n - 1 - i for i in range(n)})
+    assert canonical_hash(g) == canonical_hash(rev)
+    # labeled fingerprints must still distinguish the two labelings
+    assert labeled_fingerprint(g) != labeled_fingerprint(rev)
+
+
+def test_hash_is_deterministic_across_rebuilds():
+    a = randwire_graph(seed=10, n=16)
+    b = randwire_graph(seed=10, n=16)
+    assert a is not b
+    assert canonical_hash(a) == canonical_hash(b)
+    assert labeled_fingerprint(a) == labeled_fingerprint(b)
+
+
+def test_shape_change_busts_hash():
+    g = randwire_graph(seed=10, n=16)
+    nodes = list(g.nodes)
+    nodes[3] = nodes[3].replace(size_bytes=nodes[3].size_bytes + 4)
+    g2 = Graph(nodes, name=g.name)
+    assert canonical_hash(g) != canonical_hash(g2)
+    assert labeled_fingerprint(g) != labeled_fingerprint(g2)
+
+
+def test_edge_change_busts_hash():
+    assert canonical_hash(_chain3(1)) != canonical_hash(_chain3(0))
+
+
+def test_op_change_busts_hash():
+    g = _chain3()
+    nodes = list(g.nodes)
+    nodes[1] = nodes[1].replace(op="conv")
+    assert canonical_hash(g) != canonical_hash(Graph(nodes, name=g.name))
+
+
+# -- cache behaviour ---------------------------------------------------------
+
+
+def test_hit_returns_identical_schedule():
+    g = randwire_graph(seed=10, n=16)
+    pc = PlanCache()
+    cold = schedule(g, cache=pc)
+    warm = schedule(g, cache=pc)
+    assert pc.stats.misses == 1 and pc.stats.hits == 1
+    # the memory tier returns the cold run's plan itself: byte-identical
+    assert warm is cold
+    assert pickle.dumps(warm) == pickle.dumps(cold)
+
+
+def test_hit_on_rebuilt_identical_graph():
+    pc = PlanCache()
+    cold = schedule(randwire_graph(seed=10, n=16), cache=pc)
+    warm = schedule(randwire_graph(seed=10, n=16), cache=pc)
+    assert pc.stats.hits == 1
+    assert warm.order == cold.order
+    assert warm.peak_bytes == cold.peak_bytes
+
+
+def test_option_change_misses():
+    g = randwire_graph(seed=10, n=16)
+    pc = PlanCache()
+    schedule(g, cache=pc)
+    schedule(g, cache=pc, rewrite=False)
+    assert pc.stats.misses == 2 and pc.stats.hits == 0
+
+
+def test_graph_change_misses():
+    g = randwire_graph(seed=10, n=16)
+    pc = PlanCache()
+    r1 = schedule(g, cache=pc)
+    nodes = list(g.nodes)
+    nodes[0] = nodes[0].replace(size_bytes=nodes[0].size_bytes * 2)
+    g2 = Graph(nodes, name=g.name)
+    r2 = schedule(g2, cache=pc)
+    assert pc.stats.misses == 2 and pc.stats.hits == 0
+    assert r2 is not r1
+
+
+def test_disk_tier_round_trip(tmp_path):
+    g = randwire_graph(seed=10, n=16)
+    pc1 = PlanCache(disk_dir=str(tmp_path))
+    cold = schedule(g, cache=pc1)
+    # fresh process-level cache, same directory: must hit the disk tier
+    pc2 = PlanCache(disk_dir=str(tmp_path))
+    warm = schedule(randwire_graph(seed=10, n=16), cache=pc2)
+    assert pc2.stats.disk_hits == 1
+    assert warm.order == cold.order
+    assert warm.peak_bytes == cold.peak_bytes
+    assert [a for a in warm.arena.allocations] == \
+        [a for a in cold.arena.allocations]
+
+
+def test_lru_eviction():
+    pc = PlanCache(capacity=2)
+    graphs = [_chain3(), randwire_graph(seed=10, n=8),
+              randwire_graph(seed=100, n=8)]
+    for g in graphs:
+        schedule(g, cache=pc)
+    assert len(pc) == 2
+    # oldest entry evicted -> re-scheduling it is a miss
+    schedule(graphs[0], cache=pc)
+    assert pc.stats.misses == 4
+
+
+def test_cache_false_disables():
+    g = _chain3()
+    r1 = schedule(g, cache=False)
+    r2 = schedule(g, cache=False)
+    assert r1 is not r2
+    assert r1.order == r2.order
+
+
+def test_cache_survives_pickle_of_graph():
+    # Graph pickling drops the lazily-built numpy tables and keeps hashes valid
+    g = randwire_graph(seed=10, n=16)
+    g.masks()
+    g2 = pickle.loads(pickle.dumps(g))
+    assert canonical_hash(g2) == canonical_hash(g)
+    assert labeled_fingerprint(g2) == labeled_fingerprint(g)
+
+
+@pytest.mark.parametrize("seed", [10, 100])
+def test_jax_bridge_uses_cache(seed):
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    from repro.core.plancache import configure_default, default_cache
+
+    def fn(x):
+        return (jnp.tanh(x) @ jnp.ones((x.shape[-1], 8))).sum() * seed
+
+    configure_default(None)
+    closed = jax.make_jaxpr(fn)(jnp.ones((4, 16)))
+    from repro.core.jax_bridge import schedule_jaxpr
+    _, rep1 = schedule_jaxpr(closed)
+    misses = default_cache().stats.misses
+    _, rep2 = schedule_jaxpr(closed)
+    assert default_cache().stats.misses == misses      # second call: pure hit
+    assert default_cache().stats.hits >= 1
+    assert rep2.order == rep1.order
+    configure_default(None)

@@ -1,7 +1,13 @@
-"""Property-based invariants of the scheduler stack (hypothesis)."""
+"""Property-based invariants of the scheduler stack (hypothesis).
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+Skipped cleanly when hypothesis isn't installed (it is pinned in the
+``test`` extra, so CI always runs these).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Graph,

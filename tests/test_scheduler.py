@@ -104,3 +104,102 @@ def test_alias_nodes_do_not_double_count():
     ])
     res = dp_schedule(g)
     assert res.peak_bytes == 100   # in-place: storage subsumed
+
+
+# -- vectorized engine parity -------------------------------------------------
+
+
+def _random_dag(rng, n):
+    specs = []
+    for i in range(n):
+        k = rng.randint(0, min(i, 3))
+        preds = sorted(rng.sample(range(i), k)) if k else []
+        specs.append(dict(name=f"n{i}", op="op",
+                          size_bytes=rng.randint(1, 64), preds=preds))
+    return Graph.build(specs)
+
+
+def test_numpy_engine_matches_python_on_random_dags():
+    import random
+
+    rng = random.Random(42)
+    for _ in range(60):
+        g = _random_dag(rng, rng.randint(2, 11))
+        a = dp_schedule(g, engine="python")
+        b = dp_schedule(g, engine="numpy")
+        assert (a.peak_bytes, a.final_bytes) == (b.peak_bytes, b.final_bytes)
+        assert g.is_topological(b.order)
+        assert simulate_schedule(g, b.order).peak_bytes == b.peak_bytes
+
+
+def test_numpy_engine_matches_python_on_benchmark_graphs():
+    """Acceptance gate: identical peaks on every tier-1 benchmark graph."""
+    from repro.graphs import BENCHMARK_GRAPHS
+
+    for name, fn in BENCHMARK_GRAPHS.items():
+        g = fn()
+        a = dp_schedule(g, engine="python", state_quota=200_000)
+        b = dp_schedule(g, engine="numpy", state_quota=200_000)
+        assert (a.peak_bytes, a.final_bytes) == \
+            (b.peak_bytes, b.final_bytes), name
+        assert g.is_topological(b.order), name
+
+
+@pytest.mark.parametrize("n_nodes,words", [(80, 2), (150, 3)])
+def test_numpy_engine_multiword_masks(n_nodes, words):
+    """Graphs past 64 nodes exercise the multi-word packed-mask path.
+
+    150 nodes gives a 3-word mask — a *non*-power-of-two row width, which
+    the flat bit-position decode must handle with true division.
+    """
+    import random
+
+    rng = random.Random(7)
+    # mostly-chain wiring keeps the exact-DP state space small at n=150
+    specs = [dict(name="n0", op="op", size_bytes=8)]
+    for i in range(1, n_nodes):
+        preds = {i - 1} if rng.random() < 0.95 else \
+            {rng.randint(max(0, i - 3), i - 1)}
+        if rng.random() < 0.06:
+            preds.add(rng.randint(max(0, i - 4), i - 1))
+        specs.append(dict(name=f"n{i}", op="op",
+                          size_bytes=rng.randint(1, 64),
+                          preds=sorted(preds)))
+    g = Graph.build(specs)
+    assert g.masks().words == words
+    a = dp_schedule(g, engine="python", state_quota=200_000)
+    b = dp_schedule(g, engine="numpy", state_quota=200_000)
+    assert (a.peak_bytes, a.final_bytes) == (b.peak_bytes, b.final_bytes)
+    assert simulate_schedule(g, b.order).peak_bytes == b.peak_bytes
+
+
+def test_numpy_engine_budget_and_quota_semantics():
+    g = diamond()
+    opt = dp_schedule(g, engine="numpy").peak_bytes
+    with pytest.raises(NoSolutionError):
+        dp_schedule(g, engine="numpy", budget=opt - 1)
+    assert dp_schedule(g, engine="numpy", budget=opt).peak_bytes == opt
+    specs = [dict(name="in", op="input", size_bytes=1)]
+    for i in range(12):
+        specs.append(dict(name=f"n{i}", op="op", size_bytes=1, preds=[0]))
+    wide = Graph.build(specs)
+    with pytest.raises(SearchTimeout):
+        dp_schedule(wide, engine="numpy", state_quota=3)
+    beam = dp_schedule(wide, engine="numpy", state_quota=3, on_quota="beam")
+    assert wide.is_topological(beam.order)
+
+
+def test_numpy_engine_preplaced_and_alias():
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=7),
+        dict(name="y", op="op", size_bytes=3, preds=[0]),
+        dict(name="z", op="op", size_bytes=2, preds=[1]),
+    ])
+    res = dp_schedule(g, engine="numpy", preplaced=(0,))
+    assert res.order == [1, 2] and res.peak_bytes == 10
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=100),
+        dict(name="acc", op="partial_conv", size_bytes=100, preds=[0],
+             alias_preds=[0]),
+    ])
+    assert dp_schedule(g, engine="numpy").peak_bytes == 100
