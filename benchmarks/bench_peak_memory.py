@@ -2,20 +2,26 @@
 
 Per benchmark graph: baseline (Kahn/TFLite order) peak, SERENITY scheduler
 peak, scheduler+rewriting peak — through both the footprint model and the
-linear arena allocator — plus the reduction ratios the paper reports
+offset allocator — plus the reduction ratios the paper reports
 (1.68x scheduler-only, 1.86x with rewriting, on its original cells).
+
+PR 2 additions: every row carries the allocator-visible plan —
+``arena_bytes`` (selected-policy watermark), ``peak_bytes`` (interval lower
+bound), their ratio ``arena_peak_ratio`` (1.0 == fragmentation-free), the
+winning ``policy``, and ``first_fit_arena`` (the pre-PR single-policy
+watermark, which the selected policy must never exceed).
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import plan_arena, schedule
+from repro.core import kahn_schedule, plan_arena, plan_arena_best, schedule
 from repro.graphs import BENCHMARK_GRAPHS
 
 
 def run(csv_rows: list, smoke: bool = False) -> dict:
-    ratios_sched, ratios_rw = [], []
+    ratios_sched, ratios_rw, frag_ratios = [], [], []
     graphs = list(BENCHMARK_GRAPHS.items())
     if smoke:
         graphs = graphs[:2]
@@ -27,10 +33,17 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         rew = schedule(g, rewrite=True, state_quota=4000, cache=False)
         dt = (time.perf_counter() - t0) * 1e6
         kahn_peak = base.baseline_peaks["kahn"]
-        kahn_arena = plan_arena(
-            g, __import__("repro.core", fromlist=["kahn_schedule"])
-            .kahn_schedule(g).order
+        kahn_arena = plan_arena_best(g, kahn_schedule(g).order).arena_bytes
+        # the pre-PR allocator ran first_fit only, on the same schedule
+        first_fit_arena = plan_arena(
+            rew.graph, rew.order, policy="first_fit"
         ).arena_bytes
+        arena = rew.arena
+        assert arena.arena_bytes <= first_fit_arena, (
+            f"{name}: selected policy ({arena.policy}) lost to first_fit"
+        )
+        frag = arena.frag_ratio
+        frag_ratios.append(frag)
         r_s = kahn_peak / base.peak_bytes
         r_w = kahn_peak / rew.peak_bytes
         ratios_sched.append(r_s)
@@ -41,7 +54,12 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             f"{base.peak_bytes/1024:.1f};rewrite_kb={rew.peak_bytes/1024:.1f};"
             f"kahn_arena_kb={kahn_arena/1024:.1f};"
             f"sched_arena_kb={base.arena_bytes/1024:.1f};"
-            f"ratio_sched={r_s:.2f};ratio_rw={r_w:.2f}",
+            f"ratio_sched={r_s:.2f};ratio_rw={r_w:.2f};"
+            f"arena_bytes={arena.arena_bytes};"
+            f"peak_bytes={arena.peak_bytes};"
+            f"arena_peak_ratio={frag:.4f};"
+            f"policy={arena.policy};"
+            f"first_fit_arena={first_fit_arena}",
         ))
     gmean = lambda xs: (
         __import__("math").exp(sum(__import__("math").log(x) for x in xs)
@@ -50,6 +68,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     summary = {
         "gmean_scheduler_only": gmean(ratios_sched),
         "gmean_with_rewriting": gmean(ratios_rw),
+        "gmean_arena_peak_ratio": gmean(frag_ratios),
         "paper_scheduler_only": 1.68,
         "paper_with_rewriting": 1.86,
     }

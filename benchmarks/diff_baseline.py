@@ -1,0 +1,91 @@
+"""Warn-only diff of a benchmark-smoke JSON against the committed baseline.
+
+    python benchmarks/diff_baseline.py BENCH_baseline.json bench-smoke.json
+
+Compares the *deterministic* derived metrics of rows present in both files
+(byte counts, peaks, ratios, node/buffer counts, policies) and prints a
+warning for every drift; timing-like keys (seconds, speedups, microseconds)
+are machine-dependent and skipped.  Always exits 0 — this is a tripwire for
+unintended memory-plan regressions, not a hard gate: update the baseline
+(``python benchmarks/run.py --smoke --json BENCH_baseline.json``) when a
+change to the planned arenas/peaks is intentional.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+# timing/noise keys: skipped entirely
+_NOISY = re.compile(
+    r"(_s|_ms|_us|_sec|seconds|speedup|cold|warm|time|gflops|tok)s?$"
+)
+# duration-shaped values ("0.01s", "12.3ms"): timing smuggled into an
+# otherwise-deterministic key (e.g. the Table 2 ablation row)
+_DURATION = re.compile(r"^\d+(\.\d+)?(s|ms|us)$")
+_REL_TOL = 1e-6
+
+
+def _parse_derived(derived: str) -> dict[str, str]:
+    out: dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _deterministic(key: str) -> bool:
+    return not _NOISY.search(key)
+
+
+def _differs(a: str, b: str) -> bool:
+    try:
+        fa, fb = float(a), float(b)
+    except ValueError:
+        return a != b
+    if fa == fb:
+        return False
+    return abs(fa - fb) > _REL_TOL * max(abs(fa), abs(fb))
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__)
+    base_path, new_path = sys.argv[1], sys.argv[2]
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    base_rows = {r["name"]: _parse_derived(r["derived"])
+                 for r in base.get("rows", [])}
+    new_rows = {r["name"]: _parse_derived(r["derived"])
+                for r in new.get("rows", [])}
+
+    warnings = 0
+    for name in sorted(base_rows.keys() & new_rows.keys()):
+        b, n = base_rows[name], new_rows[name]
+        for key in sorted(b.keys() & n.keys()):
+            if not _deterministic(key):
+                continue
+            if _DURATION.match(b[key]) or _DURATION.match(n[key]):
+                continue
+            if _differs(b[key], n[key]):
+                warnings += 1
+                print(f"::warning::{name}: {key} drifted "
+                      f"{b[key]} -> {n[key]}")
+    for name in sorted(base_rows.keys() - new_rows.keys()):
+        warnings += 1
+        print(f"::warning::row disappeared from smoke run: {name}")
+    for name in sorted(new_rows.keys() - base_rows.keys()):
+        print(f"note: new row (not in baseline): {name}")
+
+    checked = len(base_rows.keys() & new_rows.keys())
+    print(f"diff_baseline: {checked} shared rows checked, "
+          f"{warnings} warning(s)")
+    # warn-only: never fail the build
+
+
+if __name__ == "__main__":
+    main()

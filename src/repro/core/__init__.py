@@ -6,13 +6,13 @@ Public API:
     dp_schedule, brute_force_schedule       -- Algorithm 1 (+ oracle for tests)
     adaptive_budget_schedule                -- Algorithm 2
     partition, find_separators              -- divide & conquer
-    rewrite_graph                           -- identity graph rewriting
-    plan_arena                              -- TFLite-style linear arena
+    rewrite_graph, annotate_inplace         -- identity rewriting + in-place
+    plan_arena, plan_arena_best             -- offset allocation policies
     simulate_traffic                        -- Belady off-chip traffic model
     schedule                                -- end-to-end pipeline (Fig. 4)
 """
 
-from repro.core.allocator import ArenaPlan, plan_arena
+from repro.core.allocator import ArenaPlan, plan_arena, plan_arena_best
 from repro.core.budget import adaptive_budget_schedule
 from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
 from repro.core.heuristics import (
@@ -28,7 +28,7 @@ from repro.core.plancache import (
     default_cache,
     labeled_fingerprint,
 )
-from repro.core.rewriter import RewriteReport, rewrite_graph
+from repro.core.rewriter import RewriteReport, annotate_inplace, rewrite_graph
 from repro.core.scheduler import (
     NoSolutionError,
     ScheduleResult,
@@ -55,6 +55,7 @@ __all__ = [
     "SimResult",
     "TrafficResult",
     "adaptive_budget_schedule",
+    "annotate_inplace",
     "brute_force_schedule",
     "canonical_hash",
     "default_cache",
@@ -66,6 +67,7 @@ __all__ = [
     "kahn_schedule",
     "partition",
     "plan_arena",
+    "plan_arena_best",
     "rewrite_graph",
     "schedule",
     "simulate_schedule",

@@ -1,22 +1,57 @@
-"""TFLite-style linear memory arena (simple_memory_arena reimplementation).
+"""Offset allocation: packing tensor lifetimes into one linear arena.
 
 The paper's evaluation (Fig. 12a) measures footprint *through the allocator*:
 tensors get byte offsets in one linear arena; the arena's high watermark is
-the reported peak.  TFLite's ``SimpleMemoryArena`` allocates in execution
-order with first-fit-by-offset against the currently live allocations; we
-reproduce that policy (plus an optional best-fit variant) on the live
-intervals implied by a schedule.
+the reported peak.  The DP scheduler optimizes the liveness-sum peak
+(``peak_bytes``), but the bytes an edge device actually reserves are the
+allocator watermark (``arena_bytes``) — fragmentation can push the latter
+above the former, so the planner here runs several placement policies per
+graph and keeps the tightest plan (DESIGN.md §5):
 
-Alias chains (in-place rewiring from the graph rewriter) share one buffer:
-the union of the members' live intervals, sized by the largest member.
+``first_fit``
+    TFLite's ``SimpleMemoryArena``: allocate in schedule order at the lowest
+    offset that fits between currently live allocations.
+``best_fit`` / ``best_fit_coalesce``
+    Allocate in schedule order into the tightest free gap (free gaps
+    coalesce as neighbours die); falls back to the arena top when no gap
+    fits.
+``greedy_by_size``
+    TFLite's ``GreedyBySizeMemoryPlanner``: place buffers in decreasing size
+    order, each at the lowest offset that overlaps no temporally-conflicting
+    already-placed buffer.  Usually the tightest heuristic; O(n^2), so
+    ``plan_arena_best`` skips it above ``_GREEDY_BY_SIZE_MAX`` buffers.
+``best``
+    All of the above (plus exhaustive search on tiny plans) — keep the
+    smallest arena.
+
+The schedule-order policies run as an event-driven sweep over lifetime
+intervals: a heap of expiry times retires dead allocations into a sorted,
+coalescing free-gap list, so each placement costs O(log n + live gaps)
+instead of the former rebuild-and-sort over the whole live set.  That is
+what makes planning a 10k-buffer serving arena a milliseconds affair (see
+``bench_scheduling_time``'s arena rows).
+
+Alias chains (in-place rewiring from the graph rewriter and the elementwise
+in-place pass) share one buffer: the union of the members' live intervals,
+sized by the largest member.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
+import itertools
 from typing import Literal, Sequence
 
 from repro.core.graph import Graph
+
+_GREEDY_BY_SIZE_MAX = 4096     # above this, greedy_by_size's O(n^2) is skipped
+_EXHAUSTIVE_MAX = 6            # permutation search bound for tiny plans
+
+Policy = Literal[
+    "first_fit", "best_fit", "best_fit_coalesce", "greedy_by_size", "best"
+]
 
 
 @dataclasses.dataclass
@@ -32,26 +67,44 @@ class Allocation:
 class ArenaPlan:
     allocations: list[Allocation]
     arena_bytes: int          # high watermark == required arena size
+    policy: str = "first_fit"
+    peak_bytes: int = 0       # max overlapped live bytes: packing lower bound
 
     def offset_of(self, node_id: int) -> int:
-        for a in self.allocations:
-            if node_id in a.node_ids:
-                return a.offset
-        raise KeyError(node_id)
+        index = self.__dict__.get("_index")
+        if index is None:
+            index = {}
+            for a in self.allocations:
+                for nid in a.node_ids:
+                    index[nid] = a
+            self._index = index
+        return index[node_id].offset
+
+    def allocation_of(self, node_id: int) -> Allocation:
+        self.offset_of(node_id)     # ensure the index exists
+        return self._index[node_id]
+
+    @property
+    def frag_ratio(self) -> float:
+        """arena_bytes / peak_bytes — 1.0 means a fragmentation-free packing."""
+        return self.arena_bytes / max(self.peak_bytes, 1)
 
 
-def plan_arena(
-    g: Graph,
-    order: Sequence[int],
-    preplaced: Sequence[int] = (),
-    policy: Literal["first_fit", "best_fit"] = "first_fit",
-) -> ArenaPlan:
+# ---------------------------------------------------------------------------
+# Lifetime intervals
+# ---------------------------------------------------------------------------
+
+
+def _build_items(
+    g: Graph, order: Sequence[int], preplaced: Sequence[int]
+) -> list[Allocation]:
+    """Alias-chain-merged lifetime intervals, in schedule-allocation order."""
     n = len(g)
     pos = {u: i for i, u in enumerate(order)}
     for p in preplaced:
         pos[p] = -1
 
-    # --- union alias chains into storage roots --------------------------------
+    # union alias chains into storage roots
     root = list(range(n))
 
     def find(x: int) -> int:
@@ -68,10 +121,9 @@ def plan_arena(
     for u in list(preplaced) + list(order):
         members.setdefault(find(u), []).append(u)
 
-    # --- live interval per storage root ---------------------------------------
     horizon = len(order)
     items: list[Allocation] = []
-    for r, mem in members.items():
+    for mem in members.values():
         t_alloc = min(pos[m] for m in mem)
         last_use = t_alloc
         is_output = False
@@ -84,9 +136,286 @@ def plan_arena(
         t_free = horizon + 1 if is_output else last_use + 1
         size = max(g.sizes[m] for m in mem)
         items.append(Allocation([*sorted(mem)], -1, size, t_alloc, t_free))
+    items.sort(key=lambda a: (a.t_alloc, -a.size, a.node_ids))
+    return items
 
-    # --- allocate in schedule order against live set ---------------------------
-    items.sort(key=lambda a: (a.t_alloc, -a.size))
+
+def _interval_peak(items: Sequence[Allocation]) -> int:
+    """Max overlapped live bytes — the lower bound any packing must respect.
+
+    Frees at time t happen before allocations at t (matching the placement
+    policies, which retire ``t_free <= t_alloc`` before placing).
+    """
+    events: list[tuple[int, int, int]] = []
+    for it in items:
+        events.append((it.t_alloc, 1, it.size))    # frees (kind 0) sort first
+        events.append((it.t_free, 0, -it.size))
+    events.sort()
+    live = peak = 0
+    for _, _, delta in events:
+        live += delta
+        peak = max(peak, live)
+    return peak
+
+
+# ---------------------------------------------------------------------------
+# Schedule-order policies: event-driven sweep over a coalescing free list
+# ---------------------------------------------------------------------------
+
+
+class _GapList:
+    """Sorted, coalescing free-gap list below a movable arena top.
+
+    Bytes in ``[0, top)`` are either inside a gap or occupied; everything at
+    and above ``top`` is free.  Freeing the block just below ``top`` lowers
+    ``top`` (after coalescing with an adjacent gap).
+    """
+
+    def __init__(self) -> None:
+        self.off: list[int] = []      # gap start offsets, sorted
+        self.len: list[int] = []      # parallel gap lengths
+        self.top = 0
+
+    def free(self, offset: int, size: int) -> None:
+        i = bisect.bisect_left(self.off, offset)
+        # coalesce with left neighbour
+        if i > 0 and self.off[i - 1] + self.len[i - 1] == offset:
+            i -= 1
+            self.len[i] += size
+        else:
+            self.off.insert(i, offset)
+            self.len.insert(i, size)
+        # coalesce with right neighbour
+        if i + 1 < len(self.off) and \
+                self.off[i] + self.len[i] == self.off[i + 1]:
+            self.len[i] += self.len[i + 1]
+            del self.off[i + 1], self.len[i + 1]
+        # retire into the open top region
+        if self.off[i] + self.len[i] == self.top:
+            self.top = self.off[i]
+            del self.off[i], self.len[i]
+
+    def place(self, size: int, tight: bool) -> int:
+        """Claim ``size`` bytes: first fitting gap (or tightest, if asked)."""
+        pick = -1
+        if tight:
+            best_len = -1
+            for i, ln in enumerate(self.len):
+                if ln >= size and (best_len < 0 or ln < best_len):
+                    pick, best_len = i, ln
+        else:
+            for i, ln in enumerate(self.len):
+                if ln >= size:
+                    pick = i
+                    break
+        if pick < 0:
+            offset = self.top
+            self.top += size
+            return offset
+        offset = self.off[pick]
+        if self.len[pick] == size:
+            del self.off[pick], self.len[pick]
+        else:
+            self.off[pick] += size
+            self.len[pick] -= size
+        return offset
+
+
+def _sweep_pack(items: Sequence[Allocation], tight: bool) -> int:
+    """Place ``items`` (schedule order) via the event-driven gap sweep."""
+    gaps = _GapList()
+    expiry: list[tuple[int, int, int]] = []      # (t_free, offset, size)
+    watermark = 0
+    for it in items:
+        while expiry and expiry[0][0] <= it.t_alloc:
+            _, off, sz = heapq.heappop(expiry)
+            gaps.free(off, sz)
+        it.offset = gaps.place(it.size, tight)
+        heapq.heappush(expiry, (it.t_free, it.offset, it.size))
+        watermark = max(watermark, it.offset + it.size)
+    return watermark
+
+
+def _greedy_by_size_pack(items: Sequence[Allocation]) -> int:
+    """TFLite greedy-by-size: biggest buffers first, first fit by offset
+    against temporally-conflicting placed buffers."""
+    by_size = sorted(
+        range(len(items)),
+        key=lambda i: (-items[i].size, items[i].t_alloc, items[i].node_ids),
+    )
+    placed_off: list[int] = []          # offsets of placed items, sorted
+    placed: list[Allocation] = []       # parallel to placed_off
+    watermark = 0
+    for i in by_size:
+        it = items[i]
+        cursor = 0
+        offset = None
+        for a in placed:
+            if a.t_free <= it.t_alloc or it.t_free <= a.t_alloc:
+                continue                 # no lifetime overlap
+            if a.offset - cursor >= it.size:
+                offset = cursor
+                break
+            cursor = max(cursor, a.offset + a.size)
+        it.offset = cursor if offset is None else offset
+        j = bisect.bisect_left(placed_off, it.offset)
+        placed_off.insert(j, it.offset)
+        placed.insert(j, it)
+        watermark = max(watermark, it.offset + it.size)
+    return watermark
+
+
+def _exhaustive_pack(items: Sequence[Allocation], stop_at: int) -> int:
+    """Best watermark over all placement orders (tiny plans only).
+
+    Each permutation is packed conflict-first-fit (the greedy_by_size
+    placement rule under an arbitrary order).  Early-exits when ``stop_at``
+    (the interval peak — unbeatable) is reached.  Offsets of ``items`` hold
+    the best packing found on return.
+    """
+    k = len(items)
+    best = None
+    best_offsets = [0] * k
+    for perm in itertools.permutations(range(k)):
+        placed: list[Allocation] = []
+        watermark = 0
+        for i in perm:
+            it = items[i]
+            cursor = 0
+            offset = None
+            for a in sorted(placed, key=lambda a: a.offset):
+                if a.t_free <= it.t_alloc or it.t_free <= a.t_alloc:
+                    continue
+                if a.offset - cursor >= it.size:
+                    offset = cursor
+                    break
+                cursor = max(cursor, a.offset + a.size)
+            it.offset = cursor if offset is None else offset
+            placed.append(it)
+            watermark = max(watermark, it.offset + it.size)
+            if best is not None and watermark >= best:
+                break
+        else:
+            if best is None or watermark < best:
+                best = watermark
+                best_offsets = [it.offset for it in items]
+                if best <= stop_at:
+                    break
+    for it, off in zip(items, best_offsets):
+        it.offset = off
+    return best if best is not None else 0
+
+
+_PACKERS = {
+    "first_fit": lambda items: _sweep_pack(items, tight=False),
+    "best_fit": lambda items: _sweep_pack(items, tight=True),
+    "greedy_by_size": _greedy_by_size_pack,
+}
+# documented synonym: the sweep's free gaps always coalesce, so best_fit
+# *is* best_fit_coalesce
+_ALIASES = {"best_fit_coalesce": "best_fit"}
+
+
+def _packer_for(policy: str):
+    try:
+        return _PACKERS[_ALIASES.get(policy, policy)]
+    except KeyError:
+        raise ValueError(f"unknown arena policy {policy!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def plan_arena(
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int] = (),
+    policy: Policy = "first_fit",
+) -> ArenaPlan:
+    """Pack the tensors of schedule ``order`` into one linear arena.
+
+    ``policy='best'`` delegates to :func:`plan_arena_best` (all policies,
+    keep the tightest arena).
+    """
+    if policy == "best":
+        return plan_arena_best(g, order, preplaced=preplaced)
+    packer = _packer_for(policy)
+    items = _build_items(g, order, preplaced)
+    watermark = packer(items)
+    return ArenaPlan(
+        allocations=items,
+        arena_bytes=watermark,
+        policy=policy,
+        peak_bytes=_interval_peak(items),
+    )
+
+
+def plan_arena_best(
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int] = (),
+    policies: Sequence[str] = ("first_fit", "best_fit", "greedy_by_size"),
+) -> ArenaPlan:
+    """Run every candidate policy and keep the smallest arena.
+
+    Ties go to the earlier policy in ``policies``; the cheap O(n log n)
+    sweep policies run first, and the loop stops as soon as a plan matches
+    the interval-peak lower bound (nothing can beat it), so the O(n^2)
+    ``greedy_by_size`` pass only runs when fragmentation is actually on the
+    table.  Plans with at most ``_EXHAUSTIVE_MAX`` buffers additionally
+    search all placement orders, so tiny graphs always get a
+    fragmentation-free packing when one exists.  ``greedy_by_size`` is
+    skipped above ``_GREEDY_BY_SIZE_MAX`` buffers (its O(n^2) placement
+    would dominate planning time on serving arenas).
+    """
+    packers = [(pol, _packer_for(pol)) for pol in policies]
+    items = _build_items(g, order, preplaced)
+    peak = _interval_peak(items)
+    best_policy: str | None = None
+    best_water = 0
+    best_offsets: list[int] = []
+    for pol, packer in packers:
+        if pol == "greedy_by_size" and len(items) > _GREEDY_BY_SIZE_MAX:
+            continue
+        water = packer(items)
+        if best_policy is None or water < best_water:
+            best_policy, best_water = pol, water
+            best_offsets = [it.offset for it in items]
+        if best_water <= peak:
+            break                      # unbeatable: matches the lower bound
+    if best_water > peak and len(items) <= _EXHAUSTIVE_MAX:
+        water = _exhaustive_pack(items, stop_at=peak)
+        if water < best_water:
+            best_policy, best_water = "exhaustive", water
+            best_offsets = [it.offset for it in items]
+    for it, off in zip(items, best_offsets):
+        it.offset = off
+    return ArenaPlan(
+        allocations=items,
+        arena_bytes=best_water,
+        policy=best_policy or "first_fit",
+        peak_bytes=peak,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pre-rewrite reference (differential-testing + benchmarking oracle)
+# ---------------------------------------------------------------------------
+
+
+def _plan_arena_reference(
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int] = (),
+    policy: str = "first_fit",
+) -> ArenaPlan:
+    """The seed allocator, kept verbatim: rebuilds and sorts the live set per
+    allocation (O(n^2 log n)).  Tests assert the sweep packers reproduce its
+    watermarks; ``bench_scheduling_time`` uses it as the pre-rewrite timing
+    baseline."""
+    items = _build_items(g, order, preplaced)
     live: list[Allocation] = []
     watermark = 0
     for it in items:
@@ -108,4 +437,5 @@ def plan_arena(
             it.offset = min(candidates, key=gap_len)
         live.append(it)
         watermark = max(watermark, it.offset + it.size)
-    return ArenaPlan(allocations=items, arena_bytes=watermark)
+    return ArenaPlan(allocations=items, arena_bytes=watermark, policy=policy,
+                     peak_bytes=_interval_peak(items))

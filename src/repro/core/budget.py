@@ -20,6 +20,12 @@ but a too-small quota can make *every* tau in the interval time out.  In that
 case (interval collapsed without a solution) we escalate the quota (x4) and
 restart — with quota -> infinity the search degenerates to the exact DP, so
 termination is guaranteed.  This fallback is our addition (DESIGN.md §3).
+
+Every DP round inherits the scheduler's fragmentation-aware tie-break:
+among equal-peak signatures the winner is the partial schedule with the
+smaller estimated arena watermark, so the tau meta-search converges on
+orders the offset allocator can realize without fragmentation (rule and
+rationale in DESIGN.md §5).
 """
 
 from __future__ import annotations

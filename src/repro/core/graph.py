@@ -258,6 +258,9 @@ class BitmaskTables:
              for u in range(n)],
             dtype=np.int64,
         )
+        # bytes the arena must find room for (aliases reuse their pred's
+        # storage, so never less than zero) — the DP's watermark estimate
+        self.alloc_pos = np.maximum(self.net_alloc, 0)
         # Merged CSR edge table: scheduling u touches two kinds of edges —
         # its non-alias preds (freed iff the pred's successor mask is now a
         # subset of the signature; contributes `size` bytes) and its succs

@@ -28,6 +28,7 @@ import numpy as np
 from jax.extend import core
 from jax._src.core import eval_jaxpr as _eval_jaxpr
 
+from repro.core.allocator import plan_arena_best
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import kahn_schedule
 from repro.core.plancache import PlanCache, resolve as _resolve_cache
@@ -90,10 +91,17 @@ class JaxprScheduleReport:
     optimal_peak: int
     exact: bool                    # False if the beam fallback was used
     order: list[int]
+    arena_bytes: int = 0           # offset-allocator watermark of the order
+    arena_policy: str = ""         # winning placement policy
 
     @property
     def reduction_vs_original(self) -> float:
         return self.original_peak / max(self.optimal_peak, 1)
+
+    @property
+    def arena_over_peak(self) -> float:
+        """Fragmentation ratio: 1.0 == the arena realizes the liveness peak."""
+        return self.arena_bytes / max(self.optimal_peak, 1)
 
 
 def schedule_jaxpr(closed, *, state_quota: int = 4000,
@@ -112,7 +120,8 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
     cache_opts = ("jax_bridge.schedule_jaxpr", state_quota, beam_fallback)
     cached = pc.get(g, cache_opts) if pc is not None else None
     if cached is not None:
-        best_peak, best_order, exact, orig_peak, kahn_peak = cached
+        (best_peak, best_order, exact, orig_peak, kahn_peak, arena_bytes,
+         arena_policy) = cached
     else:
         # footprint of the original (trace) order — itself a feasible
         # schedule, so it seeds the soft budget (tighter than Kahn on
@@ -141,9 +150,14 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
         ]
         best_peak, best_order = min(candidates, key=lambda c: c[0])
         orig_peak, kahn_peak = orig.peak_bytes, kahn.peak_bytes
+        # realized memory plan for the chosen order: XLA's buffer assigner
+        # honours program order, so this is the arena the runtime reserves
+        arena = plan_arena_best(g, best_order)
+        arena_bytes, arena_policy = arena.arena_bytes, arena.policy
         if pc is not None:
             pc.put(g, cache_opts,
-                   (best_peak, list(best_order), exact, orig_peak, kahn_peak))
+                   (best_peak, list(best_order), exact, orig_peak, kahn_peak,
+                    arena_bytes, arena_policy))
     new_eqns = [closed.jaxpr.eqns[node_to_eqn[n]] for n in best_order
                 if n in node_to_eqn]
     assert len(new_eqns) == len(closed.jaxpr.eqns)
@@ -156,6 +170,8 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
         optimal_peak=best_peak,
         exact=exact,
         order=list(best_order),
+        arena_bytes=arena_bytes,
+        arena_policy=arena_policy,
     )
     return new_closed, report
 

@@ -127,8 +127,16 @@ def labeled_fingerprint(g: Graph) -> str:
     return acc.hexdigest()
 
 
+# Bump whenever the *shape* of cached payloads changes (new plan fields,
+# different tuple layouts...): folded into every options key, so stale disk
+# entries from older code become clean misses instead of poison.
+SCHEMA_VERSION = 2
+
+
 def _options_key(options: Any) -> str:
-    return hashlib.sha256(repr(options).encode()).hexdigest()[:16]
+    return hashlib.sha256(
+        repr((SCHEMA_VERSION, options)).encode()
+    ).hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------

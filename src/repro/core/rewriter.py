@@ -34,10 +34,12 @@ class RewriteReport:
     n_concat_conv: int = 0
     n_concat_depthconv: int = 0
     n_fused_proj_split: int = 0
+    n_inplace: int = 0            # set by annotate_inplace (separate pass)
 
     @property
     def total(self) -> int:
-        return self.n_concat_conv + self.n_concat_depthconv + self.n_fused_proj_split
+        return (self.n_concat_conv + self.n_concat_depthconv
+                + self.n_fused_proj_split + self.n_inplace)
 
 
 def _rebuild(specs: list[dict], name: str) -> Graph:
@@ -220,3 +222,82 @@ def rewrite_graph(g: Graph) -> tuple[Graph, RewriteReport]:
             )
         )
     return _rebuild(out_specs, name=f"{g.name}+rw"), report
+
+
+# ---------------------------------------------------------------------------
+# In-place elementwise annotation (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+# Unary elementwise ops that can overwrite their input buffer: same element
+# count in and out, each output element depends only on the matching input
+# element.
+INPLACE_UNARY_OPS = frozenset({
+    "relu", "relu6", "bn", "batchnorm", "sigmoid", "tanh", "gelu", "silu",
+    "bias_add", "scale", "dropout", "identity", "cast_inplace",
+})
+# N-ary accumulating ops: the output can be accumulated into one (dying)
+# input buffer, like the rewriter's partial-conv accumulators.
+INPLACE_ACCUM_OPS = frozenset({"add"})
+
+
+def annotate_inplace(
+    g: Graph,
+    unary_ops: frozenset[str] = INPLACE_UNARY_OPS,
+    accum_ops: frozenset[str] = INPLACE_ACCUM_OPS,
+) -> tuple[Graph, int]:
+    """Mark in-place-eligible elementwise ops as aliasing a predecessor.
+
+    A predecessor ``p`` of node ``u`` is in-place-eligible when overwriting
+    its buffer is safe and free:
+
+      * ``u`` is its only consumer (nobody else reads ``p`` afterwards),
+      * sizes match exactly (the output reuses the buffer verbatim),
+      * ``p`` is not a graph input (caller-owned storage stays intact),
+      * ``u`` does not already alias (rewriter chains take precedence).
+
+    Unary ops alias their single predecessor; accumulating ops (``add``)
+    alias one eligible operand.  The aliases flow through the existing
+    alias-chain machinery: the DP charges zero net allocation for the node
+    and the arena planner fuses the chain into one buffer, so unary chains
+    (relu -> bn -> ...) share storage end-to-end.  Returns the annotated
+    graph and the number of nodes marked.
+    """
+    def eligible(u: Node, p: int) -> bool:
+        return (
+            len(g.succs[p]) == 1
+            and g.sizes[p] == u.size_bytes
+            and g.nodes[p].op != "input"
+        )
+
+    n_marked = 0
+    specs: list[dict] = []
+    for nd in g.nodes:
+        alias = set(nd.alias_preds)
+        if not alias:
+            if nd.op in unary_ops and len(nd.preds) == 1:
+                if eligible(nd, nd.preds[0]):
+                    alias = {nd.preds[0]}
+                    n_marked += 1
+            elif nd.op in accum_ops and len(nd.preds) >= 2:
+                # alias at most one operand; preds may repeat, and a
+                # duplicated operand has >= 2 uses here, so require a
+                # uniquely-consumed single occurrence
+                for p in nd.preds:
+                    if nd.preds.count(p) == 1 and eligible(nd, p):
+                        alias = {p}
+                        n_marked += 1
+                        break
+        specs.append(
+            dict(
+                name=nd.name,
+                op=nd.op,
+                size_bytes=nd.size_bytes,
+                preds=list(nd.preds),
+                alias_preds=alias,
+                weight_bytes=nd.weight_bytes,
+                meta=dict(nd.meta),
+            )
+        )
+    if n_marked == 0:
+        return g, 0
+    return _rebuild(specs, name=g.name), n_marked

@@ -18,6 +18,17 @@ Two pruning hooks implement the paper's speed machinery:
                            instead of measuring wall-clock.
 
 ``wall_clock_limit_s`` offers the paper's literal wall-clock T as well.
+
+Beyond the paper (DESIGN.md §5): among signatures with equal ``mu_peak``
+(and equal ``mu`` — the footprint is a pure function of the signature), the
+DP prefers the partial schedule with the smaller *estimated arena watermark*
+``water``: a per-state scalar modelling a first-fit allocator whose free
+holes never coalesce — scheduling ``u`` reuses hole bytes when
+``water - mu >= net_alloc(u)`` and otherwise grows the arena top.  Ties are
+thereby broken toward fragmentation-free orders instead of arbitrary node
+ids, which is what the offset allocator (``plan_arena``) realizes later.
+The peak-optimality proof is untouched: ``water`` only orders equal-peak
+winners.
 """
 
 from __future__ import annotations
@@ -52,6 +63,8 @@ class ScheduleResult:
     n_states_expanded: int
     n_signatures: int
     wall_time_s: float
+    arena_est_bytes: int = 0   # DP's incremental arena-watermark estimate
+                               # (0 when the producing path doesn't track it)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -145,10 +158,12 @@ def _dp_schedule_python(
     succs = g.succs
     # flat per-node transition tables (hot loop works on ints/tuples only)
     net_alloc = [0] * n          # size - aliased bytes
+    alloc_pos = [0] * n          # max(net_alloc, 0): bytes the arena must find
     dealloc_preds: list[tuple[tuple[int, int], ...]] = [()] * n
     for u in range(n):
         nd = g.nodes[u]
         net_alloc[u] = sizes[u] - sum(sizes[p] for p in nd.alias_preds)
+        alloc_pos[u] = max(net_alloc[u], 0)
         dealloc_preds[u] = tuple(
             (p, sizes[p]) for p in nd.preds if p not in nd.alias_preds
         )
@@ -168,16 +183,19 @@ def _dp_schedule_python(
         if pred_mask[u] & pre_mask == pred_mask[u]:
             frontier0 |= 1 << u
 
-    # level: mask -> (mu, peak, frontier); parents: mask -> (prev_mask, node)
-    level: dict[int, tuple[int, int, int]] = {pre_mask: (mu0, mu0, frontier0)}
+    # level: mask -> (mu, peak, water, frontier)
+    # parents: mask -> (prev_mask, node)
+    level: dict[int, tuple[int, int, int, int]] = {
+        pre_mask: (mu0, mu0, mu0, frontier0)
+    }
     parents: dict[int, tuple[int, int]] = {}
     expanded = 0
     n_signatures = 1
 
     for _step in range(len(to_schedule)):
-        nxt: dict[int, tuple[int, int, int]] = {}
+        nxt: dict[int, tuple[int, int, int, int]] = {}
         timed_out = False
-        for mask, (mu, peak, frontier) in level.items():
+        for mask, (mu, peak, water, frontier) in level.items():
             f = frontier
             while f:
                 ubit = f & -f
@@ -188,6 +206,10 @@ def _dp_schedule_python(
                 new_peak = peak if peak >= new_mu else new_mu
                 if budget is not None and new_peak > budget:
                     continue  # pruned (soft budget)
+                # arena-watermark estimate: reuse hole bytes (water - mu) if
+                # they cover the allocation, else grow the arena top
+                s = alloc_pos[u]
+                new_water = water if water - mu >= s else water + s
                 new_mask = mask | ubit
                 for p, psz in dealloc_preds[u]:
                     if succ_mask[p] & new_mask == succ_mask[p]:
@@ -195,11 +217,11 @@ def _dp_schedule_python(
                 cur = nxt.get(new_mask)
                 if cur is None:
                     new_frontier = frontier ^ ubit
-                    for s in succs[u]:
-                        pm = pred_mask[s]
+                    for s2 in succs[u]:
+                        pm = pred_mask[s2]
                         if pm & new_mask == pm:
-                            new_frontier |= 1 << s
-                    nxt[new_mask] = (new_mu, new_peak, new_frontier)
+                            new_frontier |= 1 << s2
+                    nxt[new_mask] = (new_mu, new_peak, new_water, new_frontier)
                     parents[new_mask] = (mask, u)
                     if (
                         state_quota is not None
@@ -208,8 +230,8 @@ def _dp_schedule_python(
                     ):
                         timed_out = True
                         break
-                elif (new_peak, new_mu) < (cur[1], cur[0]):
-                    nxt[new_mask] = (new_mu, new_peak, cur[2])
+                elif (new_peak, new_mu, new_water) < (cur[1], cur[0], cur[2]):
+                    nxt[new_mask] = (new_mu, new_peak, new_water, cur[3])
                     parents[new_mask] = (mask, u)
             if timed_out:
                 break
@@ -222,7 +244,9 @@ def _dp_schedule_python(
             and on_quota == "beam"
             and len(nxt) > state_quota
         ):
-            keep = sorted(nxt.items(), key=lambda kv: (kv[1][1], kv[1][0]))
+            keep = sorted(
+                nxt.items(), key=lambda kv: (kv[1][1], kv[1][0], kv[1][2])
+            )
             nxt = dict(keep[:state_quota])
         if not nxt:
             raise NoSolutionError(
@@ -237,7 +261,7 @@ def _dp_schedule_python(
         n_signatures += len(nxt)
         level = nxt
 
-    (final_mask, (final_mu, final_peak, _)), = level.items()
+    (final_mask, (final_mu, final_peak, final_water, _)), = level.items()
     assert final_mask == full_mask
     order: list[int] = []
     mask = final_mask
@@ -252,6 +276,7 @@ def _dp_schedule_python(
         n_states_expanded=expanded,
         n_signatures=n_signatures,
         wall_time_s=time.perf_counter() - t0,
+        arena_est_bytes=final_water,
     )
 
 
@@ -273,10 +298,10 @@ def _dp_schedule_numpy(
 
       1. unpack every state's ready-set into (state, node) transition pairs,
       2. batched alloc (``mu + net_alloc``), peak update, budget prune,
-      3. signature dedup via one stable lexsort over (mask words, peak),
-         keeping exactly the reference loop's winner per signature (the
-         footprint is a pure function of the mask, so only peak can differ
-         within a group),
+      3. signature dedup via one stable lexsort over (mask words, peak,
+         water), keeping exactly the reference loop's winner per signature
+         (the footprint is a pure function of the mask, so only peak and the
+         arena-watermark estimate can differ within a group),
       4. batched dealloc on the survivors: a predecessor is freed iff its
          successor mask is a subset of the new signature (single-word graphs
          test *all* node pairs with one ``(S, n)`` broadcast),
@@ -324,6 +349,7 @@ def _dp_schedule_numpy(
         frontier = np.ascontiguousarray(frontier0[None, :])
     mu = np.array([mu0], dtype=np.int64)
     peak = np.array([mu0], dtype=np.int64)
+    water = np.array([mu0], dtype=np.int64)   # arena-watermark estimate
 
     # per-level winner arrays for schedule reconstruction: at level L,
     # state i was reached by scheduling node_hist[L][i] in state
@@ -366,23 +392,31 @@ def _dp_schedule_numpy(
                 f"budget {budget} prunes all paths at step {_step} "
                 f"(graph {g.name!r})"
             )
+        # arena-watermark estimate: reuse hole bytes (water - mu) when they
+        # cover the allocation, else grow the arena top (see module docstring)
+        s_arr = bt.alloc_pos[u_arr]
+        water_tr = water[state_idx]
+        new_water = water_tr + np.where(
+            water_tr - mu[state_idx] >= s_arr, 0, s_arr
+        )
 
         # 3. dedup signatures first: the footprint mu is a pure function of
         # the signature mask, so transitions reaching the same mask differ
-        # only in peak.  One sort groups equal masks; the winner per group
-        # is a transition with the group-minimal peak — the reference
-        # loop's strictly-better-replaces rule (among equal-peak ties any
-        # representative is equivalent: same mask, same mu, same peak).
+        # only in (peak, water).  One stable lexsort with the mask words as
+        # primary keys and (peak, water) as tie-breaks groups equal masks
+        # with the lexicographically-best transition first — exactly the
+        # reference loop's strictly-better-replaces rule (earliest
+        # transition wins among full ties, as lexsort is stable).
         firsts = np.empty(len(u_arr), dtype=bool)
         firsts[0] = True
         if word1:
             new_mask = masks[state_idx] | bt.node_bit1[u_arr]
-            order = np.argsort(new_mask)
+            order = np.lexsort((new_water, new_peak, new_mask))
             sorted_mask = new_mask[order]
             np.not_equal(sorted_mask[1:], sorted_mask[:-1], out=firsts[1:])
         else:
             new_mask = masks[state_idx] | bt.node_bit[u_arr]
-            order = np.lexsort(tuple(new_mask.T))
+            order = np.lexsort((new_water, new_peak) + tuple(new_mask.T))
             sorted_mask = new_mask[order]
             np.any(sorted_mask[1:] != sorted_mask[:-1], axis=1, out=firsts[1:])
         starts = np.flatnonzero(firsts)
@@ -393,20 +427,14 @@ def _dp_schedule_numpy(
             and n_uniq > state_quota
         ):
             raise SearchTimeout(f"step {_step}: memo > quota {state_quota}")
-        pk_sorted = new_peak[order]
-        group_min = np.minimum.reduceat(pk_sorted, starts)
-        group_of = np.cumsum(firsts) - 1
-        match = np.flatnonzero(pk_sorted == group_min[group_of])
-        first_match = match[
-            np.searchsorted(group_of[match], np.arange(n_uniq))
-        ]
-        winners = order[first_match]
+        winners = order[starts]
 
         state_w = state_idx[winners]
         u_w = u_arr[winners]
         mask_w = new_mask[winners]
         peak_w = new_peak[winners]
         mu_w = pre_mu[winners]
+        water_w = new_water[winners]
         if word1:
             frontier_w = frontier[state_w] ^ bt.node_bit1[u_w]
         else:
@@ -451,10 +479,11 @@ def _dp_schedule_numpy(
             and on_quota == "beam"
             and len(winners) > state_quota
         ):
-            best = np.lexsort((mu_w, peak_w))[: state_quota]
+            best = np.lexsort((water_w, mu_w, peak_w))[: state_quota]
             state_w, u_w = state_w[best], u_w[best]
             mask_w = mask_w[best]
             peak_w, mu_w = peak_w[best], mu_w[best]
+            water_w = water_w[best]
             frontier_w = frontier_w[best]
         if (
             wall_clock_limit_s is not None
@@ -466,6 +495,7 @@ def _dp_schedule_numpy(
         node_hist.append(u_w)
         from_hist.append(state_w)
         masks, mu, peak, frontier = mask_w, mu_w, peak_w, frontier_w
+        water = water_w
 
     assert len(mu) == 1 and (masks if word1 else masks[0]).reshape(-1).tolist() \
         == full_mask.tolist()
@@ -482,6 +512,7 @@ def _dp_schedule_numpy(
         n_states_expanded=expanded,
         n_signatures=n_signatures,
         wall_time_s=time.perf_counter() - t0,
+        arena_est_bytes=int(water[0]),
     )
 
 

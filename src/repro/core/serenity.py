@@ -13,13 +13,13 @@ import dataclasses
 import time
 from typing import Sequence
 
-from repro.core.allocator import ArenaPlan, plan_arena
+from repro.core.allocator import ArenaPlan, plan_arena_best
 from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import BASELINES, kahn_schedule
 from repro.core.partition import Segment, partition
 from repro.core.plancache import PlanCache, resolve as _resolve_cache
-from repro.core.rewriter import RewriteReport, rewrite_graph
+from repro.core.rewriter import RewriteReport, annotate_inplace, rewrite_graph
 from repro.core.scheduler import ScheduleResult, dp_schedule
 
 
@@ -44,6 +44,7 @@ def schedule(
     g: Graph,
     *,
     rewrite: bool = True,
+    inplace: bool = True,
     divide_and_conquer: bool = True,
     adaptive_budget: bool = True,
     state_quota: int = 20_000,
@@ -53,6 +54,10 @@ def schedule(
     cache: "PlanCache | bool | None" = True,
 ) -> SerenityResult:
     """Run the full SERENITY pipeline on graph ``g``.
+
+    ``inplace``: with ``rewrite=True``, additionally mark in-place-eligible
+    elementwise ops (:func:`~repro.core.rewriter.annotate_inplace`) so unary
+    chains share one buffer end-to-end.
 
     ``exact_threshold``: segments with at most this many nodes skip the budget
     meta-search and run the exact DP directly (cheaper than a meta-search).
@@ -64,13 +69,15 @@ def schedule(
     the process-wide :class:`~repro.core.plancache.PlanCache`; pass a
     :class:`PlanCache` to control capacity/disk placement, or ``False`` to
     always recompute.  A hit returns the cold run's ``SerenityResult``
-    zero-copy (same order, same peaks, same arena plan) in O(graph hash)
-    time — treat cached results as immutable.
+    zero-copy (same order, same peaks, same arena plan — including the
+    chosen allocator policy and offsets) in O(graph hash) time — treat
+    cached results as immutable.
     """
     pc = _resolve_cache(cache)
     cache_opts = (
-        "serenity.schedule", rewrite, divide_and_conquer, adaptive_budget,
-        state_quota, exact_threshold, compute_baselines, engine,
+        "serenity.schedule", rewrite, inplace, divide_and_conquer,
+        adaptive_budget, state_quota, exact_threshold, compute_baselines,
+        engine,
     )
     if pc is not None:
         hit = pc.get(g, cache_opts)
@@ -82,6 +89,8 @@ def schedule(
     report: RewriteReport | None = None
     if rewrite:
         g, report = rewrite_graph(g)
+        if inplace:
+            g, report.n_inplace = annotate_inplace(g)
 
     segments = (
         partition(g)
@@ -114,7 +123,7 @@ def schedule(
         order.extend(inv[u] for u in res.order)
 
     sim = simulate_schedule(g, order)
-    arena = plan_arena(g, order)
+    arena = plan_arena_best(g, order)
     baselines: dict[str, int] = {}
     if compute_baselines:
         for name, fn in BASELINES.items():

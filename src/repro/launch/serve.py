@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import Graph, kahn_schedule, plan_arena
+from repro.core import Graph, kahn_schedule, plan_arena_best
 from repro.core.plancache import default_cache
 from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
@@ -56,9 +56,11 @@ def plan_decode_arena(model, bsz: int, smax: int) -> dict:
     out = pc.get(g, cache_opts)
     if out is None:
         order = kahn_schedule(g).order
-        plan = plan_arena(g, order)
+        plan = plan_arena_best(g, order)
         naive = sum(s["size_bytes"] for s in specs)
         out = {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
+               "peak_bytes": plan.peak_bytes, "policy": plan.policy,
+               "frag_ratio": plan.frag_ratio,
                "n_buffers": len(specs), "plan": plan}
         pc.put(g, cache_opts, out)
     return out
@@ -85,8 +87,20 @@ def main() -> None:
     pc_stats = default_cache().stats
     print(f"[serve] decode-state arena: {plan['arena_bytes']/1e6:.2f} MB "
           f"across {plan['n_buffers']} buffers "
-          f"(naive sum {plan['naive_bytes']/1e6:.2f} MB; plan cache "
+          f"(policy={plan['policy']}, "
+          f"arena/peak={plan['frag_ratio']:.3f}, "
+          f"naive sum {plan['naive_bytes']/1e6:.2f} MB; plan cache "
           f"hits={pc_stats.hits} misses={pc_stats.misses})")
+    apl = plan["plan"]
+    n_cache = plan["n_buffers"] - 2          # trailing two are hidden+logits
+    head = [a.node_ids[0] for a in apl.allocations
+            if a.node_ids[0] < n_cache][:3]
+    offsets = ", ".join(
+        [f"buf{nid}@{apl.offset_of(nid)}" for nid in head]
+        + [f"act{nid}@{apl.offset_of(nid)}"
+           for nid in range(n_cache, plan["n_buffers"])]
+    )
+    print(f"[serve] planned offsets: {offsets}")
 
     mesh = rules = None
     if args.mesh != "none":

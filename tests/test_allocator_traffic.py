@@ -5,8 +5,22 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import Graph, kahn_schedule, plan_arena, simulate_traffic
+from repro.core import (
+    Graph,
+    dp_schedule,
+    kahn_schedule,
+    plan_arena,
+    plan_arena_best,
+    simulate_traffic,
+)
+from repro.core.allocator import (
+    _build_items,
+    _exhaustive_pack,
+    _plan_arena_reference,
+)
 from tests.test_property_scheduler import random_dags
+
+POLICIES = ("first_fit", "best_fit", "greedy_by_size", "best")
 
 
 def _overlaps(a, b):
@@ -16,11 +30,13 @@ def _overlaps(a, b):
     return time and space
 
 
-@given(random_dags(max_nodes=12))
-@settings(max_examples=60, deadline=None)
-def test_arena_no_overlap_and_bounds(g):
+@pytest.mark.parametrize("policy", POLICIES)
+@given(g=random_dags(max_nodes=12))
+@settings(max_examples=40, deadline=None)
+def test_arena_no_overlap_and_bounds(policy, g):
+    """No two allocations may overlap in (lifetime x offset) space."""
     order = kahn_schedule(g).order
-    plan = plan_arena(g, order)
+    plan = plan_arena(g, order, policy=policy)
     allocs = plan.allocations
     for i, a in enumerate(allocs):
         assert a.offset >= 0
@@ -39,6 +55,79 @@ def test_arena_at_least_peak(g):
     sim = simulate_schedule(g, order)
     # the arena can fragment but never beats the liveness lower bound
     assert plan.arena_bytes >= sim.peak_bytes - max(g.sizes)
+    # the plan's own interval peak is the exact packing lower bound
+    assert plan.arena_bytes >= plan.peak_bytes
+
+
+@given(random_dags(max_nodes=12))
+@settings(max_examples=40, deadline=None)
+def test_sweep_packers_match_reference(g):
+    """The event-driven sweep reproduces the seed allocator's offsets."""
+    order = kahn_schedule(g).order
+    for policy in ("first_fit", "best_fit"):
+        ref = _plan_arena_reference(g, order, policy=policy)
+        new = plan_arena(g, order, policy=policy)
+        assert new.arena_bytes == ref.arena_bytes, policy
+        assert [a.offset for a in new.allocations] == \
+            [a.offset for a in ref.allocations], policy
+
+
+@given(random_dags(max_nodes=12))
+@settings(max_examples=40, deadline=None)
+def test_best_policy_never_loses(g):
+    """plan_arena_best <= every individual policy (first_fit in particular)."""
+    order = kahn_schedule(g).order
+    best = plan_arena_best(g, order)
+    assert best.arena_bytes >= best.peak_bytes
+    for policy in ("first_fit", "best_fit", "greedy_by_size"):
+        assert best.arena_bytes <= plan_arena(g, order, policy=policy
+                                              ).arena_bytes, policy
+
+
+@given(random_dags(max_nodes=7))
+@settings(max_examples=30, deadline=None)
+def test_best_matches_bruteforce_packing_on_small_graphs(g):
+    """Whenever a brute-forced packing is fragmentation-free, the selected
+    plan must be too: arena_bytes > peak_bytes never holds when avoidable."""
+    order = kahn_schedule(g).order
+    best = plan_arena_best(g, order)
+    items = _build_items(g, order, ())
+    if len(items) <= 6:
+        brute = _exhaustive_pack(items, stop_at=best.peak_bytes)
+        assert best.arena_bytes <= brute
+        if brute == best.peak_bytes:
+            assert best.arena_bytes == best.peak_bytes
+
+
+def test_policy_alias_and_unknown_policy():
+    g = Graph.build([
+        dict(name="a", op="input", size_bytes=8),
+        dict(name="b", op="op", size_bytes=16, preds=[0]),
+    ])
+    order = kahn_schedule(g).order
+    # best_fit_coalesce is a documented synonym of best_fit
+    a = plan_arena(g, order, policy="best_fit_coalesce")
+    b = plan_arena(g, order, policy="best_fit")
+    assert a.arena_bytes == b.arena_bytes
+    assert [x.offset for x in a.allocations] == \
+        [x.offset for x in b.allocations]
+    with pytest.raises(ValueError, match="unknown arena policy"):
+        plan_arena(g, order, policy="nope")
+    with pytest.raises(ValueError, match="unknown arena policy"):
+        plan_arena_best(g, order, policies=("best",))
+
+
+@given(random_dags(max_nodes=12))
+@settings(max_examples=30, deadline=None)
+def test_offset_index_matches_allocations(g):
+    order = kahn_schedule(g).order
+    plan = plan_arena_best(g, order)
+    for a in plan.allocations:
+        for nid in a.node_ids:
+            assert plan.offset_of(nid) == a.offset
+            assert plan.allocation_of(nid) is a
+    with pytest.raises(KeyError):
+        plan.offset_of(len(g) + 5)
 
 
 def chain(n=6, size=100):
@@ -83,6 +172,27 @@ def test_traffic_monotone_in_capacity():
         if prev is not None:
             assert t <= prev
         prev = t
+
+
+def test_traffic_eradicated_at_dp_peak():
+    """Regression for the paper's 'eradicated' case (Fig. 11): at a capacity
+    equal to the DP-optimal peak, the DP order incurs exactly zero traffic
+    while the Kahn order (4x the liveness peak) must spill."""
+    specs = [dict(name="in", op="input", size_bytes=10)]
+    for i in range(4):
+        specs.append(dict(name=f"e{i}", op="op", size_bytes=1000, preds=[0]))
+        specs.append(dict(name=f"p{i}", op="op", size_bytes=10,
+                          preds=[len(specs) - 1]))
+    g = Graph.build(specs)
+    dp = dp_schedule(g)
+    cap = dp.peak_bytes
+    r_dp = simulate_traffic(g, dp.order, cap, include_weights=False)
+    assert r_dp.total_bytes == 0
+    assert r_dp.fits_entirely
+    r_kahn = simulate_traffic(g, kahn_schedule(g).order, cap,
+                              include_weights=False)
+    assert r_kahn.total_bytes > 0
+    assert not r_kahn.fits_entirely
 
 
 def test_weight_traffic_constant_across_schedules():

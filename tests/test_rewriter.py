@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import (
     Graph,
+    annotate_inplace,
     dp_schedule,
     kahn_schedule,
     rewrite_graph,
@@ -68,6 +69,78 @@ def test_rewrite_skips_concat_with_multiple_consumers():
     g = Graph.build(specs)
     g2, rep = rewrite_graph(g)
     assert rep.total == 0      # concat has 2 consumers -> must materialize
+
+
+# ------------------------------------------------------ in-place annotation
+
+def test_inplace_unary_chain_shares_one_buffer():
+    # conv -> relu -> bn: the elementwise tail aliases through to the conv
+    # output, so the chain costs one buffer instead of three
+    specs = [
+        dict(name="in", op="input", size_bytes=64),
+        dict(name="c", op="conv", size_bytes=128, preds=[0]),
+        dict(name="r", op="relu", size_bytes=128, preds=[1]),
+        dict(name="b", op="bn", size_bytes=128, preds=[2]),
+    ]
+    g = Graph.build(specs)
+    g2, n = annotate_inplace(g)
+    assert n == 2
+    assert g2.nodes[2].alias_preds == frozenset({1})
+    assert g2.nodes[3].alias_preds == frozenset({2})
+    # footprint model: relu/bn allocate nothing on top of the conv output
+    assert dp_schedule(g2).peak_bytes == 64 + 128
+    assert dp_schedule(g).peak_bytes == 128 + 128
+    # and the arena fuses the chain into a single allocation
+    from repro.core import plan_arena
+
+    plan = plan_arena(g2, g2.topo_order())
+    chain = plan.allocation_of(1)
+    assert chain.node_ids == [1, 2, 3]
+
+
+def test_inplace_skips_inputs_multi_consumers_and_size_mismatch():
+    specs = [
+        dict(name="in", op="input", size_bytes=32),
+        dict(name="r0", op="relu", size_bytes=32, preds=[0]),     # pred=input
+        dict(name="c", op="conv", size_bytes=32, preds=[1]),
+        dict(name="r1", op="relu", size_bytes=16, preds=[2]),     # size differs
+        dict(name="r2", op="relu", size_bytes=32, preds=[2]),     # c has 2 uses
+        dict(name="out", op="op", size_bytes=8, preds=[3, 4]),
+    ]
+    g = Graph.build(specs)
+    g2, n = annotate_inplace(g)
+    assert n == 0
+    assert g2 is g                    # untouched graph returned as-is
+
+
+def test_inplace_accumulating_add_aliases_one_operand():
+    specs = [
+        dict(name="in", op="input", size_bytes=16),
+        dict(name="a", op="conv", size_bytes=64, preds=[0]),
+        dict(name="b", op="conv", size_bytes=64, preds=[0]),
+        dict(name="s", op="add", size_bytes=64, preds=[1, 2]),
+    ]
+    g = Graph.build(specs)
+    g2, n = annotate_inplace(g)
+    assert n == 1
+    assert g2.nodes[3].alias_preds == frozenset({1})
+    # the sum accumulates into a's buffer instead of a third feature map
+    assert dp_schedule(g).peak_bytes == 16 + 64 + 64 + 64 - 16
+    assert dp_schedule(g2).peak_bytes == 16 + 64 + 64
+
+
+def test_inplace_composes_with_pipeline():
+    from repro.core import schedule
+    from repro.graphs import darts_normal_cell
+
+    g = darts_normal_cell()
+    with_ip = schedule(g, state_quota=4000, cache=False,
+                       compute_baselines=False)
+    without = schedule(g, state_quota=4000, inplace=False, cache=False,
+                       compute_baselines=False)
+    assert with_ip.rewrite_report.n_inplace > 0
+    assert with_ip.peak_bytes <= without.peak_bytes
+    assert with_ip.arena_bytes <= without.arena_bytes
 
 
 # ---------------------------------------------------------------- numerics
