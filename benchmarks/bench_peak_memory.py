@@ -10,13 +10,25 @@ PR 2 additions: every row carries the allocator-visible plan —
 bound), their ratio ``arena_peak_ratio`` (1.0 == fragmentation-free), the
 winning ``policy``, and ``first_fit_arena`` (the pre-PR single-policy
 watermark, which the selected policy must never exceed).
+
+PR 3 addition: ``realized_bytes`` — the live-byte high-water *measured* by
+actually executing the rewritten schedule against the planned arena
+(``repro.core.executor``); asserted equal to ``peak_bytes``, so the
+reported footprint is what the device observes, not an estimate
+(DESIGN.md §6).
 """
 
 from __future__ import annotations
 
 import time
 
-from repro.core import kahn_schedule, plan_arena, plan_arena_best, schedule
+from repro.core import (
+    execute_plan,
+    kahn_schedule,
+    plan_arena,
+    plan_arena_best,
+    schedule,
+)
 from repro.graphs import BENCHMARK_GRAPHS
 
 
@@ -48,6 +60,10 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         r_w = kahn_peak / rew.peak_bytes
         ratios_sched.append(r_s)
         ratios_rw.append(r_w)
+        # run the rewritten schedule on the planned arena: the realized
+        # high-water is measured from execution, and execute_plan (strict
+        # by default) raises if it diverges from the plan
+        ex = execute_plan(rew.graph, rew.order, arena, inputs=None)
         csv_rows.append((
             f"peak_memory/{name}", dt,
             f"kahn_kb={kahn_peak/1024:.1f};sched_kb="
@@ -59,7 +75,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             f"peak_bytes={arena.peak_bytes};"
             f"arena_peak_ratio={frag:.4f};"
             f"policy={arena.policy};"
-            f"first_fit_arena={first_fit_arena}",
+            f"first_fit_arena={first_fit_arena};"
+            f"realized_bytes={ex.realized_peak_bytes}",
         ))
     gmean = lambda xs: (
         __import__("math").exp(sum(__import__("math").log(x) for x in xs)

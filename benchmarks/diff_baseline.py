@@ -5,7 +5,11 @@
 Compares the *deterministic* derived metrics of rows present in both files
 (byte counts, peaks, ratios, node/buffer counts, policies) and prints a
 warning for every drift; timing-like keys (seconds, speedups, microseconds)
-are machine-dependent and skipped.  Always exits 0 — this is a tripwire for
+are machine-dependent and skipped.  Metric keys present only on one side
+are never treated as value regressions: a key that *disappeared* from the
+smoke run warns (a bench stopped reporting it), while a *new* column (e.g.
+``realized_bytes`` on its first appearance) is a plain note until it lands
+in the committed baseline.  Always exits 0 — this is a tripwire for
 unintended memory-plan regressions, not a hard gate: update the baseline
 (``python benchmarks/run.py --smoke --json BENCH_baseline.json``) when a
 change to the planned arenas/peaks is intentional.
@@ -75,6 +79,18 @@ def main() -> None:
                 warnings += 1
                 print(f"::warning::{name}: {key} drifted "
                       f"{b[key]} -> {n[key]}")
+        for key in sorted(b.keys() - n.keys()):
+            if not _deterministic(key):
+                continue
+            warnings += 1
+            print(f"::warning::{name}: metric {key} disappeared from "
+                  f"smoke run (was {b[key]})")
+        for key in sorted(n.keys() - b.keys()):
+            # new columns are warn-only on first appearance: refresh the
+            # baseline to start tracking them
+            if _deterministic(key):
+                print(f"note: {name}: new metric (not in baseline): "
+                      f"{key}={n[key]}")
     for name in sorted(base_rows.keys() - new_rows.keys()):
         warnings += 1
         print(f"::warning::row disappeared from smoke run: {name}")

@@ -1,11 +1,15 @@
-"""Batched serving example: prefill + greedy decode with the SERENITY
-arena-planned decode state.
+"""Batched serving example: prefill + greedy decode on the SERENITY
+arena-*realized* decode state.
 
     PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
 
-Uses the reduced (smoke) config of any assigned architecture so it runs on
-CPU; the identical driver serves the full config on a TPU mesh
-(launch/serve.py --mesh single).
+The driver plans the decode-state arena with the paper's offset allocator,
+packs the initial KV/recurrent state into one buffer at the planned byte
+offsets, rebuilds the state from arena slices, and measures the realized
+footprint against the plan before decoding (see ``repro.launch.serve``,
+DESIGN.md §1/§6).  Uses the reduced (smoke) config of any assigned
+architecture so it runs on CPU; the identical driver serves the full config
+on a TPU mesh (launch/serve.py --mesh single).
 """
 
 import sys

@@ -4,7 +4,7 @@
 
 Adafactor optimizer: with AdamW the f32 optimizer state alone
 (671e9 x 12 B / 512 chips ≈ 15.7 GB) would exhaust v5e HBM; factored second
-moments bring total state to ~11 GB/chip (DESIGN.md §5)."""
+moments bring total state to ~11 GB/chip."""
 
 import dataclasses
 

@@ -10,10 +10,19 @@ Public API:
     plan_arena, plan_arena_best             -- offset allocation policies
     simulate_traffic                        -- Belady off-chip traffic model
     schedule                                -- end-to-end pipeline (Fig. 4)
+    execute                                 -- run a schedule on the planned
+                                               arena (realized footprint)
 """
 
 from repro.core.allocator import ArenaPlan, plan_arena, plan_arena_best
 from repro.core.budget import adaptive_budget_schedule
+from repro.core.executor import (
+    ExecutionResult,
+    ExecutorError,
+    RealizedTracker,
+    execute_plan,
+    run_reference,
+)
 from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
 from repro.core.heuristics import (
     BASELINES,
@@ -36,17 +45,20 @@ from repro.core.scheduler import (
     brute_force_schedule,
     dp_schedule,
 )
-from repro.core.serenity import SerenityResult, schedule
+from repro.core.serenity import SerenityResult, execute, schedule
 from repro.core.traffic import TrafficResult, simulate_traffic
 
 __all__ = [
     "ArenaPlan",
     "BASELINES",
+    "ExecutionResult",
+    "ExecutorError",
     "Graph",
     "GraphError",
     "Node",
     "NoSolutionError",
     "PlanCache",
+    "RealizedTracker",
     "RewriteReport",
     "ScheduleResult",
     "SearchTimeout",
@@ -61,6 +73,8 @@ __all__ = [
     "default_cache",
     "dfs_schedule",
     "dp_schedule",
+    "execute",
+    "execute_plan",
     "find_separators",
     "labeled_fingerprint",
     "greedy_schedule",
@@ -69,6 +83,7 @@ __all__ = [
     "plan_arena",
     "plan_arena_best",
     "rewrite_graph",
+    "run_reference",
     "schedule",
     "simulate_schedule",
     "simulate_traffic",

@@ -56,11 +56,24 @@ Policy = Literal[
 
 @dataclasses.dataclass
 class Allocation:
+    """One packed buffer: an alias chain's shared storage inside the arena.
+
+    All fields are in *bytes* (offsets/sizes) or *schedule indices* (times).
+
+    ``intra`` maps a member node id to its byte delta inside this buffer:
+    members of an accumulating/in-place chain overwrite the buffer verbatim
+    (delta 0), while ``concat_view`` parts live back-to-back at cumulative
+    deltas in the view's predecessor order.  ``Allocation.offset + intra[n]``
+    is therefore the exact first byte of node ``n``'s output — the address
+    the executor reads and writes (DESIGN.md §6).
+    """
+
     node_ids: list[int]       # members of the alias chain sharing this buffer
     offset: int
     size: int
     t_alloc: int              # schedule index of first allocation
     t_free: int               # schedule index after last use (exclusive)
+    intra: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -71,18 +84,31 @@ class ArenaPlan:
     peak_bytes: int = 0       # max overlapped live bytes: packing lower bound
 
     def offset_of(self, node_id: int) -> int:
-        index = self.__dict__.get("_index")
-        if index is None:
+        """Exact byte offset of ``node_id``'s output storage in the arena.
+
+        Alias-aware: for a node that shares its chain's buffer this is the
+        chain offset plus the node's intra-buffer delta (0 for in-place
+        members, the cumulative slice start for ``concat_view`` parts), so
+        the executor can address every tensor — including the parts of a
+        never-materialized concat — directly.  Raises ``KeyError`` for a
+        node id absent from the plan.
+        """
+        self._ensure_index()
+        a = self._index[node_id]
+        return a.offset + a.intra.get(node_id, 0)
+
+    def allocation_of(self, node_id: int) -> Allocation:
+        """The (possibly shared) :class:`Allocation` backing ``node_id``."""
+        self._ensure_index()
+        return self._index[node_id]
+
+    def _ensure_index(self) -> None:
+        if self.__dict__.get("_index") is None:
             index = {}
             for a in self.allocations:
                 for nid in a.node_ids:
                     index[nid] = a
             self._index = index
-        return index[node_id].offset
-
-    def allocation_of(self, node_id: int) -> Allocation:
-        self.offset_of(node_id)     # ensure the index exists
-        return self._index[node_id]
 
     @property
     def frag_ratio(self) -> float:
@@ -135,9 +161,40 @@ def _build_items(
                 last_use = max(last_use, pos[s])
         t_free = horizon + 1 if is_output else last_use + 1
         size = max(g.sizes[m] for m in mem)
-        items.append(Allocation([*sorted(mem)], -1, size, t_alloc, t_free))
+        items.append(Allocation([*sorted(mem)], -1, size, t_alloc, t_free,
+                                intra=_chain_intra_offsets(g, mem, pos)))
     items.sort(key=lambda a: (a.t_alloc, -a.size, a.node_ids))
     return items
+
+
+def _chain_intra_offsets(
+    g: Graph, members: list[int], pos: dict[int, int]
+) -> dict[int, int]:
+    """Byte deltas of each chain member inside the shared buffer.
+
+    Walking members in reverse schedule order, the chain's final node sits at
+    delta 0; an in-place/accumulating alias inherits its consumer's delta
+    (same bytes, overwritten), and ``concat_view`` parts are laid out
+    back-to-back in the view's predecessor order starting at the view's own
+    delta — which is what lets rewritten graphs execute the concat as pure
+    slice-writes, never materializing it.
+    """
+    if len(members) <= 1:
+        return {}
+    intra: dict[int, int] = {}
+    for m in sorted(members, key=lambda u: pos[u], reverse=True):
+        base = intra.setdefault(m, 0)
+        nd = g.nodes[m]
+        if nd.op == "concat_view":
+            cum = 0
+            for p in nd.preds:
+                if p in nd.alias_preds:
+                    intra[p] = base + cum
+                    cum += g.sizes[p]
+        else:
+            for p in nd.alias_preds:
+                intra[p] = base
+    return intra
 
 
 def _interval_peak(items: Sequence[Allocation]) -> int:
@@ -369,6 +426,22 @@ def plan_arena_best(
     fragmentation-free packing when one exists.  ``greedy_by_size`` is
     skipped above ``_GREEDY_BY_SIZE_MAX`` buffers (its O(n^2) placement
     would dominate planning time on serving arenas).
+
+    Args:
+      g: the (possibly rewritten) graph whose tensors are being packed.
+      order: a topological schedule of ``g``'s node ids; tensor lifetimes
+        are derived from positions in this order.
+      preplaced: node ids already resident when the schedule starts
+        (divide-and-conquer boundary tensors); they occupy arena bytes from
+        time 0.
+      policies: placement policies to race (see module docstring).
+
+    Returns:
+      An :class:`ArenaPlan` whose ``arena_bytes`` (bytes — the buffer an
+      edge device must reserve) is the minimum over the policies tried, with
+      ``peak_bytes`` (bytes — the interval-overlap lower bound), the winning
+      ``policy`` name, and per-node byte offsets via
+      :meth:`ArenaPlan.offset_of`.
     """
     packers = [(pol, _packer_for(pol)) for pol in policies]
     items = _build_items(g, order, preplaced)

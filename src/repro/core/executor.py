@@ -1,0 +1,536 @@
+"""Arena-backed execution of SERENITY schedules (DESIGN.md §6).
+
+The scheduler/allocator stack plans *where* every intermediate tensor lives
+(`ScheduleResult.order` + `ArenaPlan` byte offsets); this module closes the
+loop by actually *running* a graph against that plan: one donated linear
+arena buffer holds every intermediate, each node reads its predecessors as
+slices at their planned offsets and writes its output at its own offset
+(``repro.kernels.arena``: XLA ``dynamic_slice``/``dynamic_update_slice`` on
+CPU/GPU, Pallas slice kernels on TPU).  Alias chains from the rewriter
+execute without copies: in-place nodes overwrite their predecessor's slice,
+``concat_view`` parts slice-write back-to-back into the view's buffer, so
+the rewritten concat is never materialized.
+
+Because benchmark graphs carry only byte costs (not tensor semantics),
+node computation uses a *surrogate numerics* registry: every tensor is a
+flat float32 vector of ``size_bytes / 4`` elements and every op is a
+deterministic, value- and position-sensitive function of its inputs.  The
+executor's correctness contract is *schedule/arena transparency*: for any
+graph and any valid (order, plan), ``execute_plan`` must produce bit-for-bit
+the values of the plain dict-storage interpreter ``run_reference`` — a wrong
+offset, a premature overwrite, or a mis-laid concat part shows up as a
+numeric mismatch.
+
+Alongside values, execution *measures* the arena (realized, not estimated):
+
+  ``realized_peak_bytes``  -- high-water of live bytes resident in the arena,
+                              tracked from executed alloc/free events; must
+                              equal ``ArenaPlan.peak_bytes`` exactly.
+  ``realized_arena_bytes`` -- high-water byte extent (max live offset+size);
+                              must equal ``ArenaPlan.arena_bytes`` exactly.
+
+``strict=True`` (default) asserts both equalities — the realized-vs-planned
+invariant of DESIGN.md §6.
+
+Public entry points
+-------------------
+run_reference(g, inputs)                   -> {output name: value}
+execute_plan(g, order, plan, inputs, ...)  -> ExecutionResult
+RealizedTracker                            -- the measurement machinery
+pack_buffers / unpack_buffer               -- move real (shaped, dtyped)
+                                              tensors in/out of a planned
+                                              uint8 arena (serving state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import ArenaPlan
+from repro.core.graph import Graph, Node
+from repro.kernels.arena import arena_accum, arena_read, arena_write
+
+
+class ExecutorError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Surrogate numerics: deterministic per-op value functions on flat float32
+# ---------------------------------------------------------------------------
+
+# unary elementwise ops (the in-place-eligible set plus synonyms); each maps
+# an (n,) vector to an (n,) vector element-by-element, so aliasing the input
+# buffer is semantics-preserving
+_ELEMWISE: dict[str, Callable] = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+    "bn": lambda x: 1.05 * x - 0.02,
+    "batchnorm": lambda x: 1.05 * x - 0.02,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "bias_add": lambda x: x + 0.05,
+    "scale": lambda x: 0.9 * x,
+    "dropout": lambda x: x,          # deterministic (inference) semantics
+    "identity": lambda x: x,
+    "cast_inplace": lambda x: x,
+}
+
+OpFn = Callable[[Node, list, int], "jnp.ndarray"]
+
+
+def _fit(x, n: int):
+    """Resize a flat vector to ``n`` elements (truncate or tile)."""
+    m = x.shape[0]
+    if m == n:
+        return x
+    if m > n or m == 0:
+        return jnp.zeros(n, x.dtype) if m == 0 else x[:n]
+    reps = -(-n // m)
+    return jnp.tile(x, reps)[:n]
+
+
+def _concat_pad(xs, n: int):
+    """Concatenate then zero-pad/truncate to ``n`` elements.
+
+    This is the reference semantics of ``concat``/``concat_view``: the arena
+    path realizes it as back-to-back slice-writes plus a zeroed tail, so the
+    reference must pad with zeros (never tile)."""
+    if not xs:
+        return jnp.zeros(n, jnp.float32)
+    cc = jnp.concatenate(xs) if len(xs) > 1 else xs[0]
+    if cc.shape[0] >= n:
+        return cc[:n]
+    return jnp.concatenate([cc, jnp.zeros(n - cc.shape[0], cc.dtype)])
+
+
+def _ramp(uid: int, n: int):
+    # per-node positional signature: makes off-by-one-slice bugs visible
+    return 0.05 * jnp.cos(jnp.arange(n, dtype=jnp.float32)
+                          * (0.37 + 0.013 * (uid % 29)))
+
+
+def _blend(xs, n: int):
+    if not xs:
+        return jnp.zeros(n, jnp.float32)
+    acc = _fit(xs[0], n)
+    for x in xs[1:]:
+        acc = acc + _fit(x, n)
+    return acc / len(xs)
+
+
+def _default_op(nd: Node, xs, n: int):
+    acc = _blend(xs, n)
+    acc = jnp.tanh(acc + 0.25 * jnp.roll(acc, 1))
+    return 0.9 * acc + _ramp(nd.id, n)
+
+
+def _partial_conv_contrib(nd: Node, branch_xs, n: int):
+    """The per-branch accumulation step of a rewritten partial conv."""
+    t = _blend(branch_xs, n)
+    return 0.4 * jnp.tanh(t + 0.25 * jnp.roll(t, 1)) + 0.1 * _ramp(nd.id, n)
+
+
+def _split_accum(nd: Node, invals):
+    """(accumulator value or None, branch values) for an accumulating node."""
+    acc, branches = None, []
+    for p, v in zip(nd.preds, invals):
+        if p in nd.alias_preds and acc is None:
+            acc = v
+        else:
+            branches.append(v)
+    return acc, branches
+
+
+def node_value(nd: Node, invals, n: int,
+               registry: Mapping[str, OpFn] | None = None):
+    """Reference output of ``nd`` given predecessor values (``(n,)`` f32).
+
+    ``registry`` overrides/extends the built-in op table; entries are called
+    as ``fn(node, raw_pred_values, n_elements)``.
+    """
+    if registry is not None and nd.op in registry:
+        return registry[nd.op](nd, invals, n)
+    if nd.op in ("concat", "concat_view"):
+        return _concat_pad(invals, n)
+    if nd.op == "partial_conv":
+        acc, branches = _split_accum(nd, invals)
+        contrib = _partial_conv_contrib(nd, branches, n)
+        return contrib if acc is None else acc + contrib
+    if nd.op == "add":
+        return _blend(invals, n)
+    if nd.op in _ELEMWISE and len(invals) == 1:
+        return _ELEMWISE[nd.op](_fit(invals[0], n))
+    return _default_op(nd, invals, n)
+
+
+# ---------------------------------------------------------------------------
+# Input / output plumbing
+# ---------------------------------------------------------------------------
+
+
+def _elems(nbytes: int, what: str) -> int:
+    if nbytes % 4:
+        raise ExecutorError(
+            f"{what}: size {nbytes} bytes is not float32-aligned (the "
+            f"surrogate executor models tensors as 4-byte elements)"
+        )
+    return nbytes // 4
+
+
+def input_nodes(g: Graph) -> list[int]:
+    return [nd.id for nd in g.nodes if nd.op == "input"]
+
+
+def _resolve_inputs(g: Graph, inputs) -> dict[int, "jnp.ndarray"]:
+    """Accept {name: array}, {node_id: array}, or a sequence in input-node
+    id order; returns flat float32 arrays keyed by node id."""
+    ids = input_nodes(g)
+    by_name = {g.nodes[i].name: i for i in ids}
+    out: dict[int, jnp.ndarray] = {}
+    if inputs is None:
+        inputs = {}
+    if isinstance(inputs, Mapping):
+        for k, v in inputs.items():
+            nid = by_name.get(k, k if isinstance(k, int) else None)
+            if nid is None or nid not in ids:
+                raise ExecutorError(f"unknown input {k!r}")
+            out[nid] = jnp.asarray(v, jnp.float32).reshape(-1)
+    else:
+        vals = list(inputs)
+        if len(vals) != len(ids):
+            raise ExecutorError(
+                f"graph has {len(ids)} inputs, got {len(vals)}")
+        for nid, v in zip(ids, vals):
+            out[nid] = jnp.asarray(v, jnp.float32).reshape(-1)
+    for nid in ids:
+        out.setdefault(nid, _ramp(nid, _elems(g.sizes[nid], g.nodes[nid].name))
+                       / 0.05 * 0.3)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Realized-footprint measurement
+# ---------------------------------------------------------------------------
+
+
+class RealizedTracker:
+    """Measure the arena from executed events (DESIGN.md §6).
+
+    Feed it each node as it executes (`step(u)`); it activates the node's
+    allocation on first touch (the whole chain buffer is reserved from its
+    first write) and retires an allocation one step after its last consumer
+    executed — exactly the allocator's free-before-alloc event order.  Bytes
+    of graph outputs stay resident to the end.
+
+    ``peak_bytes`` is the high-water of summed live allocation sizes;
+    ``extent_bytes`` the high-water of ``offset + size`` over live
+    allocations.  Both are in bytes and must reproduce the plan's
+    ``peak_bytes`` / ``arena_bytes`` when execution follows the planned
+    order — the realized-vs-planned invariant.
+    """
+
+    def __init__(self, g: Graph, order: Sequence[int], plan: ArenaPlan):
+        self._g = g
+        sched = set(order)
+        self._alloc = {u: plan.allocation_of(u) for u in order}
+        self._uses: dict[int, int] = {}
+        self._output: dict[int, bool] = {}
+        for a in {id(a): a for a in self._alloc.values()}.values():
+            uses = 0
+            is_out = False
+            for m in a.node_ids:
+                consumers = [s for s in g.succs[m] if s in sched]
+                uses += len(consumers)
+                is_out |= not consumers
+            self._uses[id(a)] = uses
+            self._output[id(a)] = is_out
+        self._active: set[int] = set()
+        self._pending_retire: list = []
+        self._live = 0
+        self.peak_bytes = 0
+        self.extent_bytes = 0
+
+    def step(self, u: int) -> None:
+        # frees scheduled from the previous step land before this alloc
+        for a in self._pending_retire:
+            self._active.discard(id(a))
+            self._live -= a.size
+        self._pending_retire = []
+        a = self._alloc[u]
+        if id(a) not in self._active:
+            self._active.add(id(a))
+            self._live += a.size
+            self.extent_bytes = max(self.extent_bytes, a.offset + a.size)
+        self.peak_bytes = max(self.peak_bytes, self._live)
+        for p in self._g.nodes[u].preds:
+            pa = self._alloc.get(p)
+            if pa is None:
+                continue
+            self._uses[id(pa)] -= 1
+            if self._uses[id(pa)] == 0 and not self._output[id(pa)] \
+                    and id(pa) in self._active:
+                self._pending_retire.append(pa)
+
+
+# ---------------------------------------------------------------------------
+# Interpreters
+# ---------------------------------------------------------------------------
+
+
+def run_reference(g: Graph, inputs=None, *,
+                  registry: Mapping[str, OpFn] | None = None
+                  ) -> dict[str, "jnp.ndarray"]:
+    """Plain dict-storage interpreter: the executor's numeric ground truth.
+
+    Runs ``g`` in topological order with every intermediate held as its own
+    array (no arena).  Returns ``{node name: flat f32 value}`` for the graph
+    outputs (nodes with no consumers).
+    """
+    env: dict[int, jnp.ndarray] = {}
+    ext = _resolve_inputs(g, inputs)
+    for u in g.topo_order():
+        nd = g.nodes[u]
+        n = _elems(nd.size_bytes, nd.name)
+        if nd.op == "input":
+            env[u] = _fit(ext[u], n)
+        else:
+            env[u] = node_value(nd, [env[p] for p in nd.preds], n, registry)
+    return {g.nodes[u].name: env[u] for u in g.exits()}
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    """What ``execute_plan`` produced and measured.
+
+    ``outputs`` maps output-node names to their flat float32 values (read
+    back from the final arena).  All ``*_bytes`` fields are bytes;
+    ``realized_*`` are measured from execution, ``planned_*`` copied from
+    the plan.
+    """
+
+    outputs: dict[str, "jnp.ndarray"]
+    realized_peak_bytes: int
+    realized_arena_bytes: int
+    planned_peak_bytes: int
+    planned_arena_bytes: int
+    order: list[int]
+    impl: str
+
+    @property
+    def realized_matches_plan(self) -> bool:
+        return (self.realized_peak_bytes == self.planned_peak_bytes
+                and self.realized_arena_bytes == self.planned_arena_bytes)
+
+
+def execute_plan(
+    g: Graph,
+    order: Sequence[int],
+    plan: ArenaPlan,
+    inputs=None,
+    *,
+    registry: Mapping[str, OpFn] | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+    arena=None,
+    jit: bool = False,
+    strict: bool = True,
+) -> ExecutionResult:
+    """Run schedule ``order`` of ``g`` against the planned arena.
+
+    Args:
+      g: the graph to execute (typically ``SerenityResult.graph`` — i.e.
+        post-rewrite, so alias chains are present).
+      order: the schedule to execute; must be the order ``plan`` was built
+        from (the realized-vs-planned invariant is asserted against it).
+      plan: the :class:`ArenaPlan` whose byte offsets place every tensor.
+      inputs: input-node values ({name: array}, {node_id: array}, or a
+        sequence in input-node order); missing inputs get a deterministic
+        per-node default.  Values are flattened to float32.
+      registry: optional op-function overrides (see :func:`node_value`).
+      impl: arena slice op dispatch — 'auto' (Pallas on TPU, XLA elsewhere),
+        'pallas', 'xla', or 'ref'.
+      interpret: run Pallas kernels in interpret mode (CPU validation).
+      arena: optional donated float32 buffer of at least
+        ``plan.arena_bytes / 4`` elements to execute in (reused storage,
+        e.g. across decode steps); allocated fresh when ``None``.
+      jit: trace the whole arena program into one jitted function with the
+        arena buffer donated to XLA.
+      strict: assert the realized-vs-planned invariant and that the arena
+        buffer is large enough.
+
+    Returns:
+      :class:`ExecutionResult` with output values and the measured
+      realized peak/extent bytes.
+    """
+    order = list(order)
+    nds = g.nodes
+    elems = {u: _elems(g.sizes[u], nds[u].name) for u in order}
+    off = {}
+    for u in order:
+        b = plan.offset_of(u)
+        if b % 4:
+            raise ExecutorError(
+                f"node {nds[u].name}: planned byte offset {b} is not "
+                f"float32-aligned")
+        off[u] = b // 4
+    arena_elems = -(-plan.arena_bytes // 4)
+    ext = _resolve_inputs(g, inputs)
+    ext_vals = tuple(_fit(ext[u], elems[u]) for u in order
+                     if nds[u].op == "input")
+
+    tracker = RealizedTracker(g, order, plan)
+    for u in order:
+        tracker.step(u)
+
+    def _program(arena, ext_flat):
+        ext_it = iter(ext_flat)
+        for u in order:
+            nd = nds[u]
+            n = elems[u]
+            if nd.op == "input":
+                arena = arena_write(arena, next(ext_it), off[u], impl=impl,
+                                    interpret=interpret)
+                continue
+            if nd.op == "concat_view" and nd.alias_preds:
+                # parts already sit back-to-back inside this buffer: the
+                # concat never materializes.  Zero any tail the parts do
+                # not cover so the view equals the reference's zero-pad.
+                if any(p not in nd.alias_preds for p in nd.preds):
+                    # rewriter-produced views alias every predecessor; a
+                    # mixed view has no arena layout for the non-aliased
+                    # parts — refuse rather than silently diverge from
+                    # run_reference
+                    raise ExecutorError(
+                        f"concat_view {nd.name}: preds {nd.preds} are not "
+                        f"all aliased ({sorted(nd.alias_preds)}); mixed "
+                        f"views are not executable")
+                covered = sum(elems[p] for p in nd.preds
+                              if p in nd.alias_preds)
+                if covered < n:
+                    arena = arena_write(
+                        arena, jnp.zeros(n - covered, jnp.float32),
+                        off[u] + covered, impl=impl, interpret=interpret)
+                continue
+            invals = [arena_read(arena, off[p], elems[p], impl=impl,
+                                 interpret=interpret) for p in nd.preds]
+            if nd.op == "partial_conv" and nd.alias_preds:
+                # in-place accumulation into the (aliased) running output
+                branches = [v for p, v in zip(nd.preds, invals)
+                            if p not in nd.alias_preds]
+                contrib = _partial_conv_contrib(nd, branches, n)
+                arena = arena_accum(arena, contrib, off[u], impl=impl,
+                                    interpret=interpret)
+                continue
+            val = node_value(nd, invals, n, registry)
+            arena = arena_write(arena, val, off[u], impl=impl,
+                                interpret=interpret)
+        outs = tuple(arena_read(arena, off[u], elems[u], impl=impl,
+                                interpret=interpret) for u in g.exits())
+        return outs, arena
+
+    if arena is None:
+        arena = jnp.zeros(arena_elems, jnp.float32)
+    elif strict and arena.shape[0] < arena_elems:
+        raise ExecutorError(
+            f"donated arena has {arena.shape[0]} elements "
+            f"({arena.shape[0] * 4} bytes) < planned arena_bytes "
+            f"{plan.arena_bytes}")
+
+    if jit:
+        outs, _ = jax.jit(_program, donate_argnums=(0,))(arena, ext_vals)
+    else:
+        outs, _ = _program(arena, ext_vals)
+
+    result = ExecutionResult(
+        outputs={nds[u].name: v for u, v in zip(g.exits(), outs)},
+        realized_peak_bytes=tracker.peak_bytes,
+        realized_arena_bytes=tracker.extent_bytes,
+        planned_peak_bytes=plan.peak_bytes,
+        planned_arena_bytes=plan.arena_bytes,
+        order=order,
+        impl=impl,
+    )
+    if strict and not result.realized_matches_plan:
+        raise ExecutorError(
+            f"realized arena diverges from plan: peak "
+            f"{result.realized_peak_bytes} vs planned {plan.peak_bytes}, "
+            f"extent {result.realized_arena_bytes} vs planned "
+            f"{plan.arena_bytes}")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Real-tensor arena packing (serving state)
+# ---------------------------------------------------------------------------
+
+
+def _to_bytes(x) -> "jnp.ndarray":
+    """Flatten any (non-bool) array to its raw little-endian uint8 bytes."""
+    x = jnp.asarray(x)
+    if x.dtype == jnp.bool_:
+        raise ExecutorError("bool tensors cannot be arena-packed")
+    # bitcast appends an itemsize axis for multi-byte dtypes (none for u8)
+    return jax.lax.bitcast_convert_type(x.reshape(-1),
+                                        jnp.uint8).reshape(-1)
+
+
+def _from_bytes(b, shape, dtype) -> "jnp.ndarray":
+    """Rebuild an array of ``shape``/``dtype`` from its raw bytes."""
+    dtype = jnp.dtype(dtype)
+    if dtype.itemsize == 1:
+        return jax.lax.bitcast_convert_type(b, dtype).reshape(shape)
+    return jax.lax.bitcast_convert_type(
+        b.reshape(-1, dtype.itemsize), dtype).reshape(shape)
+
+
+def pack_buffers(plan: ArenaPlan, arrays: Mapping[int, "jnp.ndarray"], *,
+                 arena=None, impl: str = "auto",
+                 jit: bool = True) -> "jnp.ndarray":
+    """Pack real tensors into one uint8 arena at their planned byte offsets.
+
+    ``arrays`` maps node ids (of the graph the plan was built from) to
+    arbitrarily shaped/dtyped tensors; each must fit the node's planned
+    span in bytes.  Returns the (donatable) uint8 arena of
+    ``plan.arena_bytes`` bytes.  The pack loop is jitted with the arena
+    donated by default, so XLA fuses it into one in-place pack instead of
+    copying the whole arena once per tensor.  Used by the serving driver to
+    realize the decode-state plan (DESIGN.md §1/§6).
+    """
+    items = sorted(arrays.items())
+    for nid, x in items:
+        a = plan.allocation_of(nid)
+        span = a.size - a.intra.get(nid, 0)
+        nbytes = int(np.prod(jnp.shape(x))) * jnp.dtype(
+            jnp.result_type(x)).itemsize
+        if nbytes > span:
+            raise ExecutorError(
+                f"node {nid}: {nbytes} bytes exceed planned span {span}")
+
+    def _pack(arena, vals):
+        for (nid, _), x in zip(items, vals):
+            arena = arena_write(arena, _to_bytes(x), plan.offset_of(nid),
+                                impl=impl)
+        return arena
+
+    if arena is None:
+        arena = jnp.zeros(plan.arena_bytes, jnp.uint8)
+    vals = tuple(x for _, x in items)
+    if jit:
+        return jax.jit(_pack, donate_argnums=(0,))(arena, vals)
+    return _pack(arena, vals)
+
+
+def unpack_buffer(arena, plan: ArenaPlan, node_id: int, shape, dtype, *,
+                  impl: str = "auto") -> "jnp.ndarray":
+    """Read one planned tensor back out of a uint8 arena."""
+    nbytes = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    b = arena_read(arena, plan.offset_of(node_id), nbytes, impl=impl)
+    return _from_bytes(b, shape, dtype)

@@ -12,6 +12,8 @@ Public API
 jaxpr_to_graph(closed_jaxpr)          -> (Graph, eqn_nodes)
 schedule_jaxpr(closed_jaxpr, ...)     -> (reordered ClosedJaxpr, report)
 serenity_transform(fn)(*args)         -> fn with memory-optimal eqn order
+compile_scheduled(fn)(*args)          -> fn jitted through the planned arena
+                                         (realized footprint measured)
 analyze_fn(fn, *args)                 -> footprint report (no transform)
 memory_aware_remat(fn, budget, *args) -> fn or jax.checkpoint(fn) chosen by
                                          the scheduler's footprint analysis
@@ -28,13 +30,15 @@ import numpy as np
 from jax.extend import core
 from jax._src.core import eval_jaxpr as _eval_jaxpr
 
-from repro.core.allocator import plan_arena_best
+from repro.core.allocator import ArenaPlan, plan_arena_best
+from repro.core.executor import RealizedTracker, _from_bytes, _to_bytes
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import kahn_schedule
 from repro.core.plancache import PlanCache, resolve as _resolve_cache
 from repro.core.scheduler import dp_schedule
 from repro.core.budget import adaptive_budget_schedule
 from repro.core.scheduler import SearchTimeout
+from repro.kernels.arena import arena_write
 
 
 def _aval_bytes(aval) -> int:
@@ -85,14 +89,26 @@ def jaxpr_to_graph(closed) -> tuple[Graph, list[int]]:
 
 @dataclasses.dataclass
 class JaxprScheduleReport:
+    """Footprint accounting for one scheduled jaxpr.  All ``*_peak``/
+    ``*_bytes`` fields are bytes; ``order`` indexes the lifted graph's
+    nodes (invars first, then equations)."""
+
     n_eqns: int
-    original_peak: int
-    kahn_peak: int
-    optimal_peak: int
+    original_peak: int             # live-bytes peak of the traced eqn order
+    kahn_peak: int                 # peak of the Kahn/TFLite-style order
+    optimal_peak: int              # peak of the chosen (best) order
     exact: bool                    # False if the beam fallback was used
     order: list[int]
     arena_bytes: int = 0           # offset-allocator watermark of the order
     arena_policy: str = ""         # winning placement policy
+    realized_bytes: int = 0        # live-byte high-water of the planned
+                                   # lifetimes replayed over the executed
+                                   # order (0 = not run; set by
+                                   # compile_scheduled, whose numeric
+                                   # equivalence assert covers addressing)
+    n_env_bypassed: int = 0        # tensors kept out of the arena (unsized
+                                   # or non-byteable dtypes)
+    arena_plan: "ArenaPlan | None" = None   # full offset plan of the order
 
     @property
     def reduction_vs_original(self) -> float:
@@ -103,6 +119,11 @@ class JaxprScheduleReport:
         """Fragmentation ratio: 1.0 == the arena realizes the liveness peak."""
         return self.arena_bytes / max(self.optimal_peak, 1)
 
+    @property
+    def realized_matches_plan(self) -> bool:
+        """True when the measured high-water equals the planned peak."""
+        return self.realized_bytes == self.optimal_peak
+
 
 def schedule_jaxpr(closed, *, state_quota: int = 4000,
                    beam_fallback: bool = True,
@@ -112,6 +133,22 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
     Equation orders are memoized in the content-addressed plan cache keyed
     on the lifted graph, so re-tracing the same function (every ``jit``
     refresh, every serving replica warm-up) schedules in O(graph hash).
+
+    Args:
+      closed: the ``ClosedJaxpr`` to reorder.
+      state_quota: maximum DP signatures per search level before the exact
+        search aborts (deterministic timeout).
+      beam_fallback: on quota exhaustion, rerun with a bounded beam (keeps
+        the ``state_quota`` best signatures per level) instead of raising;
+        the report's ``exact`` flag records which path produced the order.
+      cache: plan-cache handle/boolean as in :func:`repro.core.schedule`.
+
+    Returns:
+      ``(new_closed, report)``: the same jaxpr with equations permuted into
+      the best order found (never worse than the traced order), and a
+      :class:`JaxprScheduleReport` with the byte peaks of the traced /
+      Kahn / chosen orders plus the offset-allocator watermark
+      (``arena_bytes``, bytes) of the chosen order.
     """
     g, eqn_nodes = jaxpr_to_graph(closed)
     node_to_eqn = {n: i for i, n in enumerate(eqn_nodes)}
@@ -120,8 +157,7 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
     cache_opts = ("jax_bridge.schedule_jaxpr", state_quota, beam_fallback)
     cached = pc.get(g, cache_opts) if pc is not None else None
     if cached is not None:
-        (best_peak, best_order, exact, orig_peak, kahn_peak, arena_bytes,
-         arena_policy) = cached
+        (best_peak, best_order, exact, orig_peak, kahn_peak, arena) = cached
     else:
         # footprint of the original (trace) order — itself a feasible
         # schedule, so it seeds the soft budget (tighter than Kahn on
@@ -152,12 +188,12 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
         orig_peak, kahn_peak = orig.peak_bytes, kahn.peak_bytes
         # realized memory plan for the chosen order: XLA's buffer assigner
         # honours program order, so this is the arena the runtime reserves
+        # (the full plan rides the cache so compile_scheduled never replans)
         arena = plan_arena_best(g, best_order)
-        arena_bytes, arena_policy = arena.arena_bytes, arena.policy
         if pc is not None:
             pc.put(g, cache_opts,
                    (best_peak, list(best_order), exact, orig_peak, kahn_peak,
-                    arena_bytes, arena_policy))
+                    arena))
     new_eqns = [closed.jaxpr.eqns[node_to_eqn[n]] for n in best_order
                 if n in node_to_eqn]
     assert len(new_eqns) == len(closed.jaxpr.eqns)
@@ -170,8 +206,9 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
         optimal_peak=best_peak,
         exact=exact,
         order=list(best_order),
-        arena_bytes=arena_bytes,
-        arena_policy=arena_policy,
+        arena_bytes=arena.arena_bytes,
+        arena_policy=arena.policy,
+        arena_plan=arena,
     )
     return new_closed, report
 
@@ -187,6 +224,168 @@ def serenity_transform(fn: Callable, **kw) -> Callable:
         out = _eval_jaxpr(new_closed.jaxpr, new_closed.consts, *flat)
         out_tree = jax.tree.structure(jax.eval_shape(fn, *args, **kwargs))
         return jax.tree.unflatten(out_tree, out)
+
+    wrapped.report = None
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Arena-threaded execution: realize the planned offsets (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _threadable(aval) -> bool:
+    try:
+        return (_aval_bytes(aval) > 0
+                and aval.dtype != jnp.bool_
+                and aval.dtype.itemsize in (1, 2, 4, 8))
+    except Exception:
+        return False
+
+
+def _build_arena_program(closed, g: Graph, order, plan: ArenaPlan):
+    """Compile the scheduled jaxpr into ``run(*flat_args) -> flat_outputs``
+    where every threadable intermediate lives as a byte slice of one uint8
+    arena buffer at its planned offset.
+
+    Returns ``(run, n_env_bypassed)``.  ``run`` is pure and jittable; the
+    arena is created inside the trace so XLA owns (and can donate/alias)
+    its storage.
+    """
+    jaxpr = closed.jaxpr
+    n_in = len(jaxpr.invars)
+    # byte address of every threaded var: node offset + intra-node cursor
+    # (an equation's outvars are laid out back-to-back inside its node slice)
+    addr: dict[Any, int] = {}
+    bypassed = 0
+    node_vars: list[tuple[int, list]] = []     # (node id, vars) in node order
+    for i, v in enumerate(jaxpr.invars):
+        node_vars.append((i, [v]))
+    for i, eqn in enumerate(jaxpr.eqns):
+        node_vars.append((n_in + i, list(eqn.outvars)))
+    for nid, out_vs in node_vars:
+        cursor = plan.offset_of(nid)
+        for v in out_vs:
+            if _threadable(v.aval):
+                addr[v] = cursor
+            else:
+                bypassed += 1
+            cursor += _aval_bytes(v.aval)
+    eqn_of_node = {n_in + i: eqn for i, eqn in enumerate(jaxpr.eqns)}
+
+    out_set = {v for v in jaxpr.outvars if not isinstance(v, core.Literal)}
+
+    def run(*flat_args):
+        env: dict[Any, Any] = dict(zip(jaxpr.constvars, closed.consts))
+        arena = jnp.zeros(max(plan.arena_bytes, 1), jnp.uint8)
+        # jaxpr outputs escape the arena at production time: the planner is
+        # free to reuse their bytes afterwards (they have in-graph consumers
+        # but must survive to the caller)
+        captured: dict[Any, Any] = {}
+
+        def read(v):
+            if isinstance(v, core.Literal):
+                return v.val
+            if v in addr:
+                nbytes = _aval_bytes(v.aval)
+                b = jax.lax.dynamic_slice(arena, (addr[v],), (nbytes,))
+                return _from_bytes(b, v.aval.shape, v.aval.dtype)
+            return env[v]
+
+        def write(v, val):
+            nonlocal arena
+            if v in out_set:
+                captured[v] = val
+            if v in addr:
+                arena = arena_write(arena, _to_bytes(val), addr[v],
+                                    impl="xla")
+            else:
+                env[v] = val
+
+        for nid in order:
+            if nid < n_in:
+                write(jaxpr.invars[nid], flat_args[nid])
+                continue
+            eqn = eqn_of_node[nid]
+            invals = [read(v) for v in eqn.invars]
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            ans = eqn.primitive.bind(*subfuns, *invals, **bind_params)
+            outs = ans if eqn.primitive.multiple_results else [ans]
+            for v, val in zip(eqn.outvars, outs):
+                write(v, val)
+        return tuple(v.val if isinstance(v, core.Literal)
+                     else captured.get(v, env.get(v))
+                     for v in jaxpr.outvars)
+
+    return run, bypassed
+
+
+def compile_scheduled(fn: Callable, *, state_quota: int = 4000,
+                      cache: "PlanCache | bool | None" = True,
+                      assert_equiv: bool = True, atol: float = 1e-5,
+                      ) -> Callable:
+    """Jit ``fn`` with its equations reordered *and executed through the
+    planned arena*: every threadable intermediate is read and written as a
+    byte slice of one linear uint8 buffer at its
+    :class:`~repro.core.allocator.ArenaPlan` offset.
+
+    The wrapper (re)compiles per input-shape signature.  On each first call
+    for a signature it:
+
+      1. traces ``fn`` and schedules the jaxpr (:func:`schedule_jaxpr`);
+      2. packs the lifted graph's tensor lifetimes with
+         :func:`~repro.core.allocator.plan_arena_best`;
+      3. jits the arena-threaded program and runs it;
+      4. with ``assert_equiv`` (default), also runs the *unscheduled* ``fn``
+         once and asserts all outputs match within ``atol`` — arena
+         transparency is checked, not assumed (first call per signature
+         only: warm calls run just the jitted arena program);
+      5. replays the executed schedule's alloc/free events through
+         :class:`~repro.core.executor.RealizedTracker` and records the
+         live-byte high-water in ``wrapped.report.realized_bytes`` next to
+         the planned ``arena_bytes`` — realized vs planned, both in bytes
+         (byte-addressing correctness itself is what step 4 checks).
+
+    Warm calls for a known signature skip tracing entirely: the key is the
+    input leaves' (shape, dtype) tuple and the output treedef is cached with
+    the jitted program.
+
+    Returns the wrapped callable; ``wrapped.report`` holds the
+    :class:`JaxprScheduleReport` of the most recent compilation.
+    """
+    compiled: dict[Any, tuple] = {}
+
+    def wrapped(*args, **kwargs):
+        flat, in_tree = jax.tree.flatten((args, kwargs))
+        key = (in_tree, tuple((jnp.shape(x), jnp.result_type(x))
+                              for x in flat))
+        first_call = key not in compiled
+        if first_call:
+            # one trace yields both the jaxpr and the output tree structure
+            closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+                *args, **kwargs)
+            _, report = schedule_jaxpr(closed, state_quota=state_quota,
+                                       cache=cache)
+            g, _ = jaxpr_to_graph(closed)
+            plan = report.arena_plan or plan_arena_best(g, report.order)
+            run, bypassed = _build_arena_program(closed, g, report.order,
+                                                 plan)
+            tracker = RealizedTracker(g, report.order, plan)
+            for u in report.order:
+                tracker.step(u)
+            report.realized_bytes = tracker.peak_bytes
+            report.n_env_bypassed = bypassed
+            out_tree = jax.tree.structure(out_shape)
+            compiled[key] = (jax.jit(run), report, out_tree)
+        run_jit, report, out_tree = compiled[key]
+        wrapped.report = report
+        result = jax.tree.unflatten(out_tree, list(run_jit(*flat)))
+        if assert_equiv and first_call:
+            ref = fn(*args, **kwargs)
+            for a, b in zip(jax.tree.leaves(result), jax.tree.leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=atol, rtol=atol)
+        return result
 
     wrapped.report = None
     return wrapped

@@ -130,7 +130,7 @@ def labeled_fingerprint(g: Graph) -> str:
 # Bump whenever the *shape* of cached payloads changes (new plan fields,
 # different tuple layouts...): folded into every options key, so stale disk
 # entries from older code become clean misses instead of poison.
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3   # 3: ArenaPlan.intra offsets + serve plan graph/order
 
 
 def _options_key(options: Any) -> str:

@@ -257,10 +257,21 @@ def annotate_inplace(
 
     Unary ops alias their single predecessor; accumulating ops (``add``)
     alias one eligible operand.  The aliases flow through the existing
-    alias-chain machinery: the DP charges zero net allocation for the node
-    and the arena planner fuses the chain into one buffer, so unary chains
-    (relu -> bn -> ...) share storage end-to-end.  Returns the annotated
-    graph and the number of nodes marked.
+    alias-chain machinery: the DP charges zero net allocation for the node,
+    the arena planner fuses the chain into one buffer, and the executor
+    overwrites the predecessor's arena slice in place (DESIGN.md §6), so
+    unary chains (relu -> bn -> ...) share storage end-to-end.
+
+    Args:
+      g: graph to annotate (node sizes in bytes; sizes must match exactly
+        for a mark, since the output reuses the buffer verbatim).
+      unary_ops: op names treated as unary elementwise (overwrite-safe).
+      accum_ops: op names allowed to accumulate into one dying operand.
+
+    Returns:
+      ``(annotated_graph, n_marked)`` — the input graph object itself when
+      nothing was marked (``n_marked == 0``), otherwise a rebuilt graph
+      with ``alias_preds`` set on the marked nodes.
     """
     def eligible(u: Node, p: int) -> bool:
         return (

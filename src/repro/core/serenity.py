@@ -1,10 +1,14 @@
-"""SERENITY end-to-end scheduling pipeline (paper Fig. 4).
+"""SERENITY end-to-end scheduling pipeline (paper Fig. 4) and executor.
 
     graph  ->  [identity graph rewriting]  ->  divide-and-conquer
            ->  per-segment adaptive-soft-budgeted DP  ->  combine
            ->  (peak footprint, arena plan, schedule)
+           ->  execute: run the schedule against the planned arena
 
-This is the public entry point the rest of the framework uses.
+``schedule`` plans; ``execute`` realizes the plan on one donated arena
+buffer and measures that the footprint the device would reserve equals the
+planned bytes (DESIGN.md §6).  These are the public entry points the rest
+of the framework uses.
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ from typing import Sequence
 
 from repro.core.allocator import ArenaPlan, plan_arena_best
 from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
+from repro.core.executor import ExecutionResult, ExecutorError, execute_plan
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import BASELINES, kahn_schedule
 from repro.core.partition import Segment, partition
@@ -55,23 +60,40 @@ def schedule(
 ) -> SerenityResult:
     """Run the full SERENITY pipeline on graph ``g``.
 
-    ``inplace``: with ``rewrite=True``, additionally mark in-place-eligible
-    elementwise ops (:func:`~repro.core.rewriter.annotate_inplace`) so unary
-    chains share one buffer end-to-end.
+    Args:
+      g: the dataflow graph to schedule (node sizes in *bytes*).
+      rewrite: apply the paper's identity graph rewrites first (partial
+        convs, concat views, fused-proj distribution); the returned
+        ``SerenityResult.graph`` is the rewritten graph actually scheduled.
+      inplace: with ``rewrite=True``, additionally mark in-place-eligible
+        elementwise ops (:func:`~repro.core.rewriter.annotate_inplace`) so
+        unary chains share one buffer end-to-end.
+      divide_and_conquer: split at single-node separators and schedule each
+        segment independently (paper Section 3.2).
+      adaptive_budget: run the Algorithm 2 soft-budget meta-search on large
+        segments instead of one unbudgeted DP.
+      state_quota: deterministic stand-in for Algorithm 2's per-step
+        timeout — maximum DP signatures per level before a step aborts.
+      exact_threshold: segments with at most this many nodes skip the budget
+        meta-search and run the exact DP directly (cheaper than a
+        meta-search).
+      compute_baselines: also evaluate the heuristic baselines (Kahn/greedy/
+        DFS peaks, in bytes) on the final graph.
+      engine: DP implementation (see :func:`repro.core.scheduler.dp_schedule`).
+      cache: content-addressed plan memoization.  ``True`` (default) uses
+        the process-wide :class:`~repro.core.plancache.PlanCache`; pass a
+        :class:`PlanCache` to control capacity/disk placement, or ``False``
+        to always recompute.  A hit returns the cold run's
+        ``SerenityResult`` zero-copy (same order, same peaks, same arena
+        plan — including the chosen allocator policy and offsets) in
+        O(graph hash) time — treat cached results as immutable.
 
-    ``exact_threshold``: segments with at most this many nodes skip the budget
-    meta-search and run the exact DP directly (cheaper than a meta-search).
-
-    ``engine`` picks the DP implementation (see
-    :func:`repro.core.scheduler.dp_schedule`).
-
-    ``cache``: content-addressed plan memoization.  ``True`` (default) uses
-    the process-wide :class:`~repro.core.plancache.PlanCache`; pass a
-    :class:`PlanCache` to control capacity/disk placement, or ``False`` to
-    always recompute.  A hit returns the cold run's ``SerenityResult``
-    zero-copy (same order, same peaks, same arena plan — including the
-    chosen allocator policy and offsets) in O(graph hash) time — treat
-    cached results as immutable.
+    Returns:
+      A :class:`SerenityResult`: the (possibly rewritten) graph, the chosen
+      ``order``, ``peak_bytes`` (liveness-model peak, bytes), the packed
+      ``arena`` plan (``arena_bytes`` = bytes a device must reserve), the
+      divide-and-conquer segments, rewrite/budget/baseline reports and the
+      scheduling wall time in seconds.
     """
     pc = _resolve_cache(cache)
     cache_opts = (
@@ -142,3 +164,58 @@ def schedule(
     if pc is not None:
         pc.put(g_in, cache_opts, result)
     return result
+
+
+def execute(
+    g: Graph,
+    inputs=None,
+    plan: ArenaPlan | None = None,
+    *,
+    order: Sequence[int] | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+    arena=None,
+    jit: bool = False,
+    strict: bool = True,
+    **schedule_kw,
+) -> ExecutionResult:
+    """Schedule (if needed) and run ``g`` on the planned arena.
+
+    The plan→execution closing move (DESIGN.md §6): every intermediate
+    tensor lives as a slice of one donated arena buffer at its
+    :class:`~repro.core.allocator.ArenaPlan` byte offset, and execution
+    *measures* the realized footprint against the planned one.
+
+    Args:
+      g: graph to run.  When ``plan`` is ``None`` the full pipeline
+        (:func:`schedule`, including rewriting) runs first and the rewritten
+        graph is executed; when a ``plan`` is supplied, ``g`` must be the
+        exact graph the plan was built from and ``order`` its schedule.
+      inputs: values for the graph's input nodes — ``{name: array}``,
+        ``{node_id: array}`` or a sequence in input-node order; flattened to
+        float32.  Missing inputs get deterministic defaults.
+      plan: an :class:`ArenaPlan` to realize (skips scheduling).
+      order: the schedule ``plan`` was built from (required with ``plan``).
+      impl / interpret / arena / jit / strict: forwarded to
+        :func:`repro.core.executor.execute_plan` — slice-op dispatch
+        (Pallas on TPU / XLA elsewhere), Pallas interpret mode, an optional
+        donated float32 buffer, whole-program jit, and the
+        realized-vs-planned assertion.
+      **schedule_kw: forwarded to :func:`schedule` when planning here.
+
+    Returns:
+      :class:`~repro.core.executor.ExecutionResult` with the output values
+      (flat float32, keyed by output-node name) and the measured
+      ``realized_peak_bytes`` / ``realized_arena_bytes`` (both in bytes,
+      asserted equal to the plan's ``peak_bytes`` / ``arena_bytes`` under
+      ``strict``).
+    """
+    if plan is None:
+        res = schedule(g, **schedule_kw)
+        g, order, plan = res.graph, res.order, res.arena
+    elif order is None:
+        raise ExecutorError("execute: `order` is required when `plan` is "
+                            "supplied (the schedule the plan was built from)")
+    return execute_plan(g, order, plan, inputs, impl=impl,
+                        interpret=interpret, arena=arena, jit=jit,
+                        strict=strict)

@@ -1,0 +1,13 @@
+"""Arena slice kernels: move tensors in/out of the planned linear arena.
+
+kernel.py  -- pl.pallas_call slice read/write/accumulate (TPU; interpret on CPU)
+ops.py     -- dispatching wrappers (impl in {auto, pallas, xla, ref})
+ref.py     -- numpy oracle
+
+Used by ``repro.core.executor`` to realize ``ArenaPlan`` offsets at runtime
+(DESIGN.md §6).
+"""
+
+from repro.kernels.arena.ops import arena_accum, arena_read, arena_write
+
+__all__ = ["arena_accum", "arena_read", "arena_write"]

@@ -1,0 +1,74 @@
+"""Pallas arena slice kernels (TPU target; interpret-mode validated on CPU).
+
+One linear arena buffer holds every intermediate activation of a scheduled
+graph at the byte offsets chosen by the offset allocator (DESIGN.md §6).
+Three kernels move tensors in and out of it:
+
+  arena_write_pallas  -- copy a tensor into ``arena[offset : offset+n]``
+  arena_read_pallas   -- materialize ``arena[offset : offset+n]`` as a tensor
+  arena_accum_pallas  -- ``arena[offset : offset+n] += x`` (the rewriter's
+                         accumulating partial-conv step, done in place)
+
+Offsets are *static* (schedule-time constants from the ``ArenaPlan``), so
+each call site compiles to a fixed slice — no scatter/gather machinery.  The
+write/accum kernels alias the arena input to the output
+(``input_output_aliases``), which is what makes the arena a true in-place
+buffer instead of a copy-on-write value: XLA updates the donated storage.
+
+Units: ``offset``/lengths here are *elements* of the arena's dtype, not
+bytes — callers (``repro.core.executor``) convert plan byte offsets by the
+element size before dispatching.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _write_kernel(x_ref, arena_ref, out_ref, *, offset: int):
+    # aliased arena: copy-through keeps interpret mode (no real aliasing)
+    # correct; on TPU the copy is elided because in/out share storage
+    out_ref[...] = arena_ref[...]
+    out_ref[pl.ds(offset, x_ref.shape[0])] = x_ref[...]
+
+
+def _accum_kernel(x_ref, arena_ref, out_ref, *, offset: int):
+    n = x_ref.shape[0]
+    out_ref[...] = arena_ref[...]
+    out_ref[pl.ds(offset, n)] = arena_ref[pl.ds(offset, n)] + x_ref[...]
+
+
+def _read_kernel(arena_ref, out_ref, *, offset: int):
+    out_ref[...] = arena_ref[pl.ds(offset, out_ref.shape[0])]
+
+
+def arena_write_pallas(arena, x, offset: int, *, interpret: bool = False):
+    """Return ``arena`` with ``x`` written at element ``offset``."""
+    return pl.pallas_call(
+        functools.partial(_write_kernel, offset=offset),
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(x, arena)
+
+
+def arena_accum_pallas(arena, x, offset: int, *, interpret: bool = False):
+    """Return ``arena`` with ``x`` added into ``arena[offset : offset+n]``."""
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, offset=offset),
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(x, arena)
+
+
+def arena_read_pallas(arena, offset: int, n: int, *, interpret: bool = False):
+    """Materialize ``arena[offset : offset+n]`` as a fresh ``(n,)`` tensor."""
+    return pl.pallas_call(
+        functools.partial(_read_kernel, offset=offset),
+        out_shape=jax.ShapeDtypeStruct((n,), arena.dtype),
+        interpret=interpret,
+    )(arena)

@@ -1,0 +1,67 @@
+"""Public arena slice ops: impl dispatch over {auto, pallas, xla, ref}.
+
+``xla`` lowers to ``lax.dynamic_slice`` / ``dynamic_update_slice`` — the
+portable path used on CPU and inside jitted executor programs.  ``pallas``
+runs the explicit TPU kernels (interpret mode off-TPU, for validation).
+``auto`` picks ``pallas`` on TPU backends and ``xla`` elsewhere.  All
+offsets/lengths are in *elements* of the arena dtype (see
+``repro.core.executor`` for the byte conversion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.arena.kernel import (
+    arena_accum_pallas,
+    arena_read_pallas,
+    arena_write_pallas,
+)
+from repro.kernels.arena.ref import (
+    arena_accum_ref,
+    arena_read_ref,
+    arena_write_ref,
+)
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla", "ref"):
+        raise ValueError(f"unknown arena impl {impl!r}")
+    return impl
+
+
+def arena_write(arena, x, offset: int, *, impl: str = "auto",
+                interpret: bool = False):
+    """Write ``x`` (1-D, arena dtype) at element ``offset``; returns arena."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return arena_write_pallas(arena, x, offset, interpret=interpret)
+    if impl == "ref":
+        return jnp.asarray(arena_write_ref(arena, x, offset))
+    return jax.lax.dynamic_update_slice(arena, x, (offset,))
+
+
+def arena_accum(arena, x, offset: int, *, impl: str = "auto",
+                interpret: bool = False):
+    """Add ``x`` into ``arena[offset : offset+n]`` in place; returns arena."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return arena_accum_pallas(arena, x, offset, interpret=interpret)
+    if impl == "ref":
+        return jnp.asarray(arena_accum_ref(arena, x, offset))
+    cur = jax.lax.dynamic_slice(arena, (offset,), (x.shape[0],))
+    return jax.lax.dynamic_update_slice(arena, cur + x, (offset,))
+
+
+def arena_read(arena, offset: int, n: int, *, impl: str = "auto",
+               interpret: bool = False):
+    """Materialize ``arena[offset : offset+n]`` as a fresh ``(n,)`` array."""
+    impl = _resolve(impl)
+    if impl == "pallas":
+        return arena_read_pallas(arena, offset, n, interpret=interpret)
+    if impl == "ref":
+        return jnp.asarray(arena_read_ref(arena, offset, n))
+    return jax.lax.dynamic_slice(arena, (offset,), (n,))

@@ -1,0 +1,21 @@
+"""Pure-numpy oracle for the arena slice kernels (allclose ground truth)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def arena_write_ref(arena, x, offset: int):
+    out = np.array(arena)
+    out[offset:offset + len(x)] = np.asarray(x)
+    return out
+
+
+def arena_accum_ref(arena, x, offset: int):
+    out = np.array(arena)
+    out[offset:offset + len(x)] += np.asarray(x)
+    return out
+
+
+def arena_read_ref(arena, offset: int, n: int):
+    return np.array(arena[offset:offset + n])

@@ -10,7 +10,7 @@ For each cell this script:
      production mesh (16x16 single-pod, 2x16x16 multi-pod),
   3. records ``memory_analysis`` (fits-per-device proof), ``cost_analysis``
      (FLOPs/bytes) and the collective-op bytes parsed from the partitioned
-     HLO, and derives the three roofline terms (DESIGN.md §6),
+     HLO, and derives the three roofline terms (DESIGN.md §7),
   4. writes one JSON per cell into --out (EXPERIMENTS.md §Dry-run reads it).
 
 Usage:
@@ -178,7 +178,7 @@ def model_flops(cfg, shape) -> float:
 
 def cell_applicable(cfg, shape_name: str) -> tuple[bool, str]:
     if shape_name == "long_500k" and not cfg.subquadratic:
-        return False, "full-attention arch: O(S^2) at 500k infeasible (DESIGN.md §4)"
+        return False, "full-attention arch: O(S^2) at 500k infeasible"
     return True, ""
 
 
@@ -410,7 +410,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         flops = cost.get("flops", 0.0)
         bytes_acc = cost.get("bytes accessed", 0.0)
         coll_bytes = float(coll["total_bytes"])
-    # cost_analysis is per-device post-SPMD; roofline terms per DESIGN.md §6
+    # cost_analysis is per-device post-SPMD; roofline terms per DESIGN.md §7
     t_compute = flops / PEAK_FLOPS
     t_memory = bytes_acc / HBM_BW
     t_coll = coll_bytes / LINK_BW

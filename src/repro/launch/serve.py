@@ -1,14 +1,19 @@
-"""Serving driver: batched prefill + greedy decode with a planned KV arena.
+"""Serving driver: batched prefill + greedy decode on a planned KV arena.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
 SERENITY integration: before allocating the decode state, the server builds
 the serve-schedule dataflow graph (embed -> L x block -> logits per step,
-cache buffers live across the whole schedule), runs the paper's linear-arena
-planner on it, and prints the planned offsets + arena size next to the naive
-sum of buffers — the compile-time memory plan for the serving runtime
-(DESIGN.md §1 "serving arena planner").
+cache buffers live across the whole schedule) and runs the paper's
+linear-arena planner on it (DESIGN.md §1 "serving arena planner").  The
+plan is then *realized*, not just printed: the initial decode state is
+packed into one arena buffer at the planned byte offsets and handed to the
+decode loop as slices of that arena (JAX values are immutable, so each
+donated decode step carries the state forward from those slices), and the
+realized footprint — measured by executing the decode-state graph through
+``repro.core.executor`` — is reported against the planned bytes
+(DESIGN.md §6).
 """
 
 from __future__ import annotations
@@ -22,6 +27,7 @@ import numpy as np
 
 import repro.configs as configs
 from repro.core import Graph, kahn_schedule, plan_arena_best
+from repro.core.executor import execute_plan, pack_buffers, unpack_buffer
 from repro.core.plancache import default_cache
 from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
@@ -61,9 +67,27 @@ def plan_decode_arena(model, bsz: int, smax: int) -> dict:
         out = {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
                "peak_bytes": plan.peak_bytes, "policy": plan.policy,
                "frag_ratio": plan.frag_ratio,
-               "n_buffers": len(specs), "plan": plan}
+               "n_buffers": len(specs), "plan": plan,
+               "graph": g, "order": order}
         pc.put(g, cache_opts, out)
     return out
+
+
+def realize_decode_state(plan: dict, cache):
+    """Initialize the decode state through the planned arena.
+
+    Packs the initial cache leaves into one uint8 arena buffer at their
+    planned byte offsets (jitted, arena donated) and rebuilds the cache
+    pytree from slices of it, so the state the decode loop starts from is
+    materialized at the plan's offsets rather than ad-hoc per-buffer
+    allocations.  Returns (arena, rebuilt_cache).
+    """
+    leaves, treedef = jax.tree.flatten(cache)
+    apl = plan["plan"]
+    arena = pack_buffers(apl, dict(enumerate(leaves)))
+    rebuilt = [unpack_buffer(arena, apl, i, leaf.shape, leaf.dtype)
+               for i, leaf in enumerate(leaves)]
+    return arena, jax.tree.unflatten(treedef, rebuilt)
 
 
 def main() -> None:
@@ -91,16 +115,13 @@ def main() -> None:
           f"arena/peak={plan['frag_ratio']:.3f}, "
           f"naive sum {plan['naive_bytes']/1e6:.2f} MB; plan cache "
           f"hits={pc_stats.hits} misses={pc_stats.misses})")
-    apl = plan["plan"]
-    n_cache = plan["n_buffers"] - 2          # trailing two are hidden+logits
-    head = [a.node_ids[0] for a in apl.allocations
-            if a.node_ids[0] < n_cache][:3]
-    offsets = ", ".join(
-        [f"buf{nid}@{apl.offset_of(nid)}" for nid in head]
-        + [f"act{nid}@{apl.offset_of(nid)}"
-           for nid in range(n_cache, plan["n_buffers"])]
-    )
-    print(f"[serve] planned offsets: {offsets}")
+    # execute the decode-state graph against the plan: the realized
+    # footprint is measured from alloc/free events, not estimated
+    # (execute_plan is strict — it raises if realized diverges from planned)
+    ex = execute_plan(plan["graph"], plan["order"], plan["plan"], inputs=None)
+    print(f"[serve] realized arena: live-byte peak "
+          f"{ex.realized_peak_bytes/1e6:.2f} MB == planned peak, extent "
+          f"{ex.realized_arena_bytes/1e6:.2f} MB == planned arena")
 
     mesh = rules = None
     if args.mesh != "none":
@@ -108,7 +129,11 @@ def main() -> None:
         rules = rules_for_mesh(mesh)
 
     params = model.init(jax.random.PRNGKey(args.seed))
-    cache = model.init_cache(args.batch, smax)
+    # decode state starts as slices of the planned arena buffer
+    state_arena, cache = realize_decode_state(
+        plan, model.init_cache(args.batch, smax))
+    print(f"[serve] decode state initialized from a "
+          f"{state_arena.nbytes/1e6:.2f} MB planned arena buffer")
     prefill = jax.jit(make_prefill_step(model, rules))
     decode = jax.jit(make_decode_step(model, rules), donate_argnums=(1,))
 

@@ -1,0 +1,173 @@
+"""Property tests for divide-and-conquer separators (paper Section 3.2).
+
+``find_separators`` is checked against a brute-force oracle that evaluates
+the two separator conditions literally on transitive-closure sets:
+
+  (a) every other node is a strict ancestor or strict descendant of v,
+  (b) no edge jumps from a strict ancestor directly to a strict descendant.
+
+And the optimality argument behind ``partition`` is exercised end-to-end:
+concatenating per-segment exact DP schedules must reproduce the whole-graph
+DP peak (Wilken et al., 2000 — the argument the paper invokes).
+
+A seeded random sweep always runs; the hypothesis variants add shrinking
+and wider exploration when hypothesis is installed (it is pinned in the
+``test`` extra, so CI runs both).
+"""
+
+import random
+
+import pytest
+
+from repro.core import (
+    Graph,
+    dp_schedule,
+    find_separators,
+    partition,
+    simulate_schedule,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------- graph builders
+
+def random_dag(rng: random.Random, max_nodes: int = 10) -> Graph:
+    n = rng.randint(2, max_nodes)
+    specs = []
+    for i in range(n):
+        preds = []
+        if i > 0:
+            k = rng.randint(0, min(i, 3))
+            preds = sorted(rng.sample(range(i), k))
+        specs.append(dict(name=f"n{i}", op="op",
+                          size_bytes=rng.randint(1, 64), preds=preds))
+    return Graph.build(specs)
+
+
+def hourglass_dag(rng: random.Random, max_cells: int = 4,
+                  max_cell_nodes: int = 4) -> Graph:
+    """Cells joined by single nodes: separator-rich by construction."""
+    specs = [dict(name="in", op="op", size_bytes=rng.randint(1, 32),
+                  preds=[])]
+    joint = 0
+    for _ in range(rng.randint(1, max_cells)):
+        branch_ids = []
+        for _ in range(rng.randint(1, max_cell_nodes)):
+            specs.append(dict(name=f"n{len(specs)}", op="op",
+                              size_bytes=rng.randint(1, 32), preds=[joint]))
+            branch_ids.append(len(specs) - 1)
+        specs.append(dict(name=f"n{len(specs)}", op="op",
+                          size_bytes=rng.randint(1, 32), preds=branch_ids))
+        joint = len(specs) - 1
+    return Graph.build(specs)
+
+
+# ------------------------------------------------------------ the oracles
+
+def brute_force_separators(g: Graph) -> list[int]:
+    """Conditions (a) and (b) evaluated literally on closure sets."""
+    n = len(g)
+    ancestors = [set() for _ in range(n)]
+    for u in g.topo_order():
+        for p in g.nodes[u].preds:
+            ancestors[u] |= ancestors[p] | {p}
+    descendants = [set() for _ in range(n)]
+    for u in range(n):
+        for a in ancestors[u]:
+            descendants[a].add(u)
+    seps = []
+    for v in range(n):
+        if ancestors[v] | descendants[v] | {v} != set(range(n)):
+            continue                                   # (a) fails
+        crossing = any(
+            p in ancestors[v]
+            for d in descendants[v]
+            for p in g.nodes[d].preds
+        )
+        if not crossing:                               # (b) holds
+            seps.append(v)
+    return sorted(seps)
+
+
+def _segment_concat_peak(g: Graph) -> tuple[list[int], int]:
+    """Concatenate per-segment exact DP schedules; return (order, peak)."""
+    order: list[int] = []
+    for seg in partition(g):
+        sub_ids = sorted(set(seg.node_ids) | set(seg.boundary_in))
+        sub, idmap = g.induced_subgraph(sub_ids)
+        inv = {v: k for k, v in idmap.items()}
+        pre = tuple(idmap[b] for b in seg.boundary_in)
+        res = dp_schedule(sub, preplaced=pre)
+        order.extend(inv[u] for u in res.order)
+    return order, simulate_schedule(g, order).peak_bytes
+
+
+# ------------------------------------------------- seeded deterministic sweep
+
+def test_separators_match_brute_force_seeded_sweep():
+    rng = random.Random(2003_02369)
+    for i in range(120):
+        g = random_dag(rng) if i % 2 else hourglass_dag(rng)
+        assert sorted(find_separators(g)) == brute_force_separators(g), \
+            f"graph #{i}: {[ (nd.id, nd.preds) for nd in g.nodes ]}"
+
+
+def test_hourglass_graphs_always_have_separators():
+    rng = random.Random(7)
+    for _ in range(40):
+        g = hourglass_dag(rng)
+        assert len(find_separators(g)) >= 1
+
+
+def test_segment_concatenated_dp_matches_whole_graph_seeded_sweep():
+    rng = random.Random(42)
+    for i in range(60):
+        g = random_dag(rng, max_nodes=11) if i % 2 else hourglass_dag(rng)
+        order, peak = _segment_concat_peak(g)
+        assert g.is_topological(order)
+        assert peak == dp_schedule(g).peak_bytes
+
+
+# ------------------------------------------------------ hypothesis variants
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def random_dags(draw, max_nodes=10):
+        n = draw(st.integers(min_value=2, max_value=max_nodes))
+        specs = []
+        for i in range(n):
+            preds = []
+            if i > 0:
+                k = draw(st.integers(min_value=0, max_value=min(i, 3)))
+                preds = sorted(draw(st.sets(
+                    st.integers(min_value=0, max_value=i - 1),
+                    min_size=min(k, i), max_size=min(k, i),
+                )))
+            size = draw(st.integers(min_value=1, max_value=64))
+            specs.append(dict(name=f"n{i}", op="op", size_bytes=size,
+                              preds=preds))
+        return Graph.build(specs)
+
+    @given(random_dags())
+    @settings(max_examples=80, deadline=None)
+    def test_find_separators_matches_brute_force(g):
+        assert sorted(find_separators(g)) == brute_force_separators(g)
+
+    @given(random_dags(max_nodes=11))
+    @settings(max_examples=50, deadline=None)
+    def test_segment_concatenated_dp_matches_whole_graph_dp(g):
+        order, peak = _segment_concat_peak(g)
+        assert g.is_topological(order)
+        assert peak == dp_schedule(g).peak_bytes
+
+else:
+
+    def test_hypothesis_variants_skipped():
+        pytest.skip("hypothesis not installed: seeded sweeps above cover "
+                    "the same properties")

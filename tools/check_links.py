@@ -1,0 +1,73 @@
+"""Docs tripwire: validate markdown links and DESIGN.md section anchors.
+
+    python tools/check_links.py
+
+Checks, without any network access:
+
+  * every relative markdown link ``[text](path)`` in the repo's top-level
+    ``*.md`` files points at an existing file (anchors stripped; http(s)
+    and mailto links are skipped — external availability is not this
+    script's business);
+  * every ``DESIGN.md §N`` citation — in the markdown files *and* in
+    ``src``/``benchmarks``/``examples``/``tests`` Python sources — resolves
+    to an actual ``## §N`` heading in DESIGN.md, so renumbering a section
+    without fixing its citations fails CI.
+
+Exits non-zero on the first class of rot it finds.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+MD_FILES = sorted(ROOT.glob("*.md"))
+PY_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SECTION_REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+_SECTION_DEF = re.compile(r"^##\s+§(\d+)\b", re.M)
+
+
+def check_markdown_links() -> list[str]:
+    errors = []
+    for md in MD_FILES:
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                errors.append(f"{md.name}: broken link -> {target}")
+    return errors
+
+
+def check_design_section_refs() -> list[str]:
+    design = ROOT / "DESIGN.md"
+    defined = set(_SECTION_DEF.findall(design.read_text()))
+    errors = []
+    sources = list(MD_FILES)
+    for d in PY_DIRS:
+        sources += sorted((ROOT / d).rglob("*.py"))
+    for src in sources:
+        for num in _SECTION_REF.findall(src.read_text()):
+            if num not in defined:
+                errors.append(
+                    f"{src.relative_to(ROOT)}: cites DESIGN.md §{num}, "
+                    f"which does not exist (sections: "
+                    f"{', '.join(sorted(defined))})")
+    return errors
+
+
+def main() -> int:
+    errors = check_markdown_links() + check_design_section_refs()
+    for e in errors:
+        print(f"::error::{e}")
+    print(f"check_links: {len(MD_FILES)} markdown files, "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
