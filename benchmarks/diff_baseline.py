@@ -4,15 +4,19 @@
 
 Compares the *deterministic* derived metrics of rows present in both files
 (byte counts, peaks, ratios, node/buffer counts, policies) and prints a
-warning for every drift; timing-like keys (seconds, speedups, microseconds)
-are machine-dependent and skipped.  Metric keys present only on one side
-are never treated as value regressions: a key that *disappeared* from the
-smoke run warns (a bench stopped reporting it), while a *new* column (e.g.
-``realized_bytes`` on its first appearance) is a plain note until it lands
-in the committed baseline.  Always exits 0 — this is a tripwire for
-unintended memory-plan regressions, not a hard gate: update the baseline
-(``python benchmarks/run.py --smoke --json BENCH_baseline.json``) when a
-change to the planned arenas/peaks is intentional.
+warning for every drift.  Timing-like keys (seconds, speedups,
+microseconds) are machine-dependent and exempt from exact comparison, but
+absolute durations in ``scheduling_time/`` rows are still sanity-checked:
+a search that got more than 2x slower than the baseline (above a small
+noise floor) warns — the tripwire for scheduling-time regressions the CI
+run annotates.  Metric keys present only on one side are never treated as
+value regressions: a key that *disappeared* from the smoke run warns (a
+bench stopped reporting it), while a *new* column (e.g. ``realized_bytes``
+on its first appearance) is a plain note until it lands in the committed
+baseline.  Always exits 0 — this is a tripwire, not a hard gate: update
+the baseline (``python benchmarks/run.py --smoke --json
+BENCH_baseline.json``) when a change to the plans or search costs is
+intentional.
 """
 
 from __future__ import annotations
@@ -21,14 +25,57 @@ import json
 import re
 import sys
 
-# timing/noise keys: skipped entirely
+# timing/noise keys: exempt from exact comparison
 _NOISY = re.compile(
     r"(_s|_ms|_us|_sec|seconds|speedup|cold|warm|time|gflops|tok)s?$"
 )
+# absolute-duration keys eligible for the >2x regression check (ratios and
+# speedups are excluded: a smaller speedup is not necessarily a slowdown)
+_DURATION_KEY = re.compile(r"(_s|_ms|_us|seconds|cold_ms|warm_us)$")
 # duration-shaped values ("0.01s", "12.3ms"): timing smuggled into an
 # otherwise-deterministic key (e.g. the Table 2 ablation row)
 _DURATION = re.compile(r"^\d+(\.\d+)?(s|ms|us)$")
 _REL_TOL = 1e-6
+# scheduling-time regression tripwire: new > 2x old, and the new value must
+# be above the noise floor for its unit so microsecond jitter never warns
+_REGRESSION_FACTOR = 2.0
+_NOISE_FLOOR = {"s": 0.05, "ms": 50.0, "us": 50_000.0}
+
+
+def _duration_unit(key: str, value: str) -> str | None:
+    m = _DURATION.match(value)
+    if m:
+        return m.group(2)
+    if key.endswith(("_s", "seconds")):
+        return "s"
+    if key.endswith("_ms"):
+        return "ms"
+    if key.endswith("_us"):
+        return "us"
+    return None
+
+
+def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
+    """True (and warn) when a scheduling_time duration regressed >2x."""
+    if not name.startswith("scheduling_time/"):
+        return False
+    if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
+        return False
+    unit = _duration_unit(key, new)
+    if unit is None or _duration_unit(key, old) != unit:
+        return False
+    try:
+        fo = float(old.rstrip("smu"))
+        fn = float(new.rstrip("smu"))
+    except ValueError:
+        return False
+    if fn <= _NOISE_FLOOR[unit] or fo <= 0:
+        return False
+    if fn > _REGRESSION_FACTOR * fo:
+        print(f"::warning::{name}: scheduling time {key} regressed "
+              f">{_REGRESSION_FACTOR:g}x: {old} -> {new}")
+        return True
+    return False
 
 
 def _parse_derived(derived: str) -> dict[str, str]:
@@ -71,9 +118,12 @@ def main() -> None:
     for name in sorted(base_rows.keys() & new_rows.keys()):
         b, n = base_rows[name], new_rows[name]
         for key in sorted(b.keys() & n.keys()):
-            if not _deterministic(key):
-                continue
-            if _DURATION.match(b[key]) or _DURATION.match(n[key]):
+            if not _deterministic(key) or _DURATION.match(b[key]) \
+                    or _DURATION.match(n[key]):
+                # timing: exempt from exact diffing, but still tripwired
+                # against >2x scheduling-time regressions
+                if _check_time_regression(name, key, b[key], n[key]):
+                    warnings += 1
                 continue
             if _differs(b[key], n[key]):
                 warnings += 1

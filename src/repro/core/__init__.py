@@ -3,9 +3,13 @@
 Public API:
 
     Graph, Node, simulate_schedule          -- dataflow IR + footprint model
-    dp_schedule, brute_force_schedule       -- Algorithm 1 (+ oracle for tests)
+    dp_schedule, brute_force_schedule       -- Algorithm 1 + branch-and-bound
+                                               pruning (+ oracle for tests)
     adaptive_budget_schedule                -- Algorithm 2
-    partition, find_separators              -- divide & conquer
+    partition, partition_hierarchy          -- divide & conquer (flat and
+    find_separators                            nested segment tree)
+    schedule_order                          -- hierarchical exact order with
+                                               isomorphic-cell plan reuse
     rewrite_graph, annotate_inplace         -- identity rewriting + in-place
     plan_arena, plan_arena_best             -- offset allocation policies
     simulate_traffic                        -- Belady off-chip traffic model
@@ -26,16 +30,25 @@ from repro.core.executor import (
 from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
 from repro.core.heuristics import (
     BASELINES,
+    best_heuristic_schedule,
     dfs_schedule,
     greedy_schedule,
     kahn_schedule,
 )
-from repro.core.partition import Segment, find_separators, partition
+from repro.core.partition import (
+    PartitionNode,
+    Segment,
+    find_separators,
+    partition,
+    partition_hierarchy,
+)
 from repro.core.plancache import (
     PlanCache,
     canonical_hash,
     default_cache,
     labeled_fingerprint,
+    translate_order,
+    wl_colors,
 )
 from repro.core.rewriter import RewriteReport, annotate_inplace, rewrite_graph
 from repro.core.scheduler import (
@@ -45,7 +58,13 @@ from repro.core.scheduler import (
     brute_force_schedule,
     dp_schedule,
 )
-from repro.core.serenity import SerenityResult, execute, schedule
+from repro.core.serenity import (
+    OrderResult,
+    SerenityResult,
+    execute,
+    schedule,
+    schedule_order,
+)
 from repro.core.traffic import TrafficResult, simulate_traffic
 
 __all__ = [
@@ -57,6 +76,8 @@ __all__ = [
     "GraphError",
     "Node",
     "NoSolutionError",
+    "OrderResult",
+    "PartitionNode",
     "PlanCache",
     "RealizedTracker",
     "RewriteReport",
@@ -67,6 +88,7 @@ __all__ = [
     "SimResult",
     "TrafficResult",
     "adaptive_budget_schedule",
+    "best_heuristic_schedule",
     "annotate_inplace",
     "brute_force_schedule",
     "canonical_hash",
@@ -80,11 +102,15 @@ __all__ = [
     "greedy_schedule",
     "kahn_schedule",
     "partition",
+    "partition_hierarchy",
     "plan_arena",
     "plan_arena_best",
     "rewrite_graph",
     "run_reference",
     "schedule",
+    "schedule_order",
     "simulate_schedule",
     "simulate_traffic",
+    "translate_order",
+    "wl_colors",
 ]

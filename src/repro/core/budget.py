@@ -26,6 +26,13 @@ among equal-peak signatures the winner is the partial schedule with the
 smaller estimated arena watermark, so the tau meta-search converges on
 orders the offset allocator can realize without fragmentation (rule and
 rationale in DESIGN.md §5).
+
+Since the branch-and-bound rework (DESIGN.md §8) the DP bounds itself with
+a heuristic incumbent, so a plain ``dp_schedule`` call already runs with an
+automatic, tighter-than-Kahn tau; this meta-search is the *fallback* the
+pipeline reaches for when even the bounded search exceeds its state quota
+(every round still benefits from the bound: the effective tau is
+``min(tau_round, incumbent)`` plus the dominance and lower-bound prunes).
 """
 
 from __future__ import annotations

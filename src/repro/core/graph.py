@@ -154,10 +154,30 @@ class Graph:
             anc[u] = m
         return anc
 
+    def descendants_masks(self) -> list[int]:
+        """Bitmask of strict descendants per node (transpose of ancestors)."""
+        anc = self.ancestors_masks()
+        desc = [0] * len(self)
+        for u in range(len(self)):
+            m = anc[u]
+            while m:
+                b = m & -m
+                m ^= b
+                desc[b.bit_length() - 1] |= 1 << u
+        return desc
+
     def induced_subgraph(
-        self, node_ids: Sequence[int]
+        self, node_ids: Sequence[int], anonymize: bool = False
     ) -> tuple["Graph", dict[int, int]]:
         """Subgraph on ``node_ids``; edges from outside are dropped.
+
+        ``anonymize`` replaces node names with ``n{new_id}`` and drops
+        ``meta`` (which carries provenance labels such as the rewriter's
+        ``rewritten_from``) so that two structurally identical segments
+        whose nodes merely carry different labels (stacked cells: ``c0.x``
+        vs ``c3.x``) produce byte-identical graphs.  The scheduler reads
+        only op/sizes/wiring/alias, so this is exactly the payload the
+        isomorphic-cell plan reuse may key on (DESIGN.md §8).
 
         Returns (subgraph, old_id -> new_id map).
         """
@@ -170,13 +190,13 @@ class Graph:
             nodes.append(
                 Node(
                     id=idmap[old],
-                    name=nd.name,
+                    name=f"n{idmap[old]}" if anonymize else nd.name,
                     op=nd.op,
                     size_bytes=nd.size_bytes,
                     preds=preds,
                     alias_preds=alias,
                     weight_bytes=nd.weight_bytes,
-                    meta=nd.meta,
+                    meta=() if anonymize else nd.meta,
                 )
             )
         return Graph(nodes, name=f"{self.name}.sub"), idmap
@@ -209,9 +229,12 @@ class Graph:
         return bt
 
     def __getstate__(self) -> dict:
-        # the numpy tables are a pure cache — rebuild on demand after unpickle
+        # derived tables are pure caches — rebuild on demand after unpickle
+        # rather than bloating every pickled plan (the bound tables alone
+        # hold an O(n^2) float64 matrix)
         state = dict(self.__dict__)
-        state.pop("_masks", None)
+        for cache_attr in ("_masks", "_bound_tables", "_incumbents"):
+            state.pop(cache_attr, None)
         return state
 
     def __setstate__(self, state: dict) -> None:
@@ -261,43 +284,47 @@ class BitmaskTables:
         # bytes the arena must find room for (aliases reuse their pred's
         # storage, so never less than zero) — the DP's watermark estimate
         self.alloc_pos = np.maximum(self.net_alloc, 0)
-        # Merged CSR edge table: scheduling u touches two kinds of edges —
+        # Two CSR edge tables sharing one subset test: scheduling u touches
         # its non-alias preds (freed iff the pred's successor mask is now a
         # subset of the signature; contributes `size` bytes) and its succs
         # (enter the frontier iff their pred mask is a subset; contribute a
-        # frontier `bit`).  Both share the subset test, so they live in one
-        # flat table and the DP expands a whole level's transitions against
-        # it with a single repeat/gather/reduceat pass per level.
-        me_tgt: list[int] = []       # mask that must be covered for a hit
-        me_size: list[int] = []      # bytes freed on hit (0 for succ edges)
-        me_bit: list[int] = []       # frontier bit set on hit (0 for preds)
-        me_len = np.zeros(n, dtype=np.int64)
+        # frontier `bit`).  They are kept separate because the DP needs the
+        # freed bytes for *every* transition of a level (the eager-move
+        # dominance test, DESIGN.md §8) but the frontier refill only for the
+        # deduplicated winners; each table is expanded with a single
+        # repeat/gather/reduceat pass per level.
+        pe_tgt: list[int] = []       # pred edges: succ mask to be covered
+        pe_size: list[int] = []      # bytes freed on hit
+        pe_len = np.zeros(n, dtype=np.int64)
+        se_tgt: list[int] = []       # succ edges: pred mask to be covered
+        se_bit: list[int] = []       # frontier bit set on hit
+        se_len = np.zeros(n, dtype=np.int64)
         for u in range(n):
             nd = g.nodes[u]
-            k = 0
             for p in nd.preds:
                 if p not in nd.alias_preds:
-                    me_tgt.append(g.succ_mask[p])
-                    me_size.append(g.sizes[p])
-                    me_bit.append(0)
-                    k += 1
+                    pe_tgt.append(g.succ_mask[p])
+                    pe_size.append(g.sizes[p])
+                    pe_len[u] += 1
             for s in g.succs[u]:
-                me_tgt.append(g.pred_mask[s])
-                me_size.append(0)
-                me_bit.append(1 << s)
-                k += 1
-            me_len[u] = k
-        self.me_tgt = _pack_masks(me_tgt, W)
-        self.me_bit = _pack_masks(me_bit, W)
-        self.me_size = np.array(me_size, dtype=np.int64)
-        self.me_len = me_len
-        self.me_off = np.concatenate(([0], np.cumsum(me_len)))[:-1]
+                se_tgt.append(g.pred_mask[s])
+                se_bit.append(1 << s)
+                se_len[u] += 1
+        self.pe_tgt = _pack_masks(pe_tgt, W)
+        self.pe_size = np.array(pe_size, dtype=np.int64)
+        self.pe_len = pe_len
+        self.pe_off = np.concatenate(([0], np.cumsum(pe_len)))[:-1]
+        self.se_tgt = _pack_masks(se_tgt, W)
+        self.se_bit = _pack_masks(se_bit, W)
+        self.se_len = se_len
+        self.se_off = np.concatenate(([0], np.cumsum(se_len)))[:-1]
         if W == 1:
             self.pred_mask1 = self.pred_mask[:, 0]
             self.succ_mask1 = self.succ_mask[:, 0]
             self.node_bit1 = self.node_bit[:, 0]
-            self.me_tgt1 = self.me_tgt[:, 0]
-            self.me_bit1 = self.me_bit[:, 0]
+            self.pe_tgt1 = self.pe_tgt[:, 0]
+            self.se_tgt1 = self.se_tgt[:, 0]
+            self.se_bit1 = self.se_bit[:, 0]
 
 
 def _pack_masks(masks: Sequence[int], words: int) -> np.ndarray:

@@ -27,6 +27,7 @@ def _result(g: Graph, order: list[int], preplaced: Sequence[int]) -> ScheduleRes
         n_states_expanded=len(order),
         n_signatures=len(order),
         wall_time_s=0.0,
+        exact=False,
     )
 
 
@@ -109,6 +110,23 @@ def greedy_schedule(g: Graph, preplaced: Sequence[int] = ()) -> ScheduleResult:
             if indeg[v] == 0:
                 frontier.add(v)
     return _result(g, order, preplaced)
+
+
+def best_heuristic_schedule(
+    g: Graph, preplaced: Sequence[int] = ()
+) -> ScheduleResult:
+    """The tightest heuristic order: min peak over Kahn / greedy / DFS.
+
+    Used by the DP's branch-and-bound layer as the search incumbent
+    (DESIGN.md §8): each order is feasible, so its peak upper-bounds the
+    optimum and every state that provably cannot beat it is pruned.
+    """
+    best: ScheduleResult | None = None
+    for fn in (kahn_schedule, greedy_schedule, dfs_schedule):
+        res = fn(g, preplaced=preplaced)
+        if best is None or res.peak_bytes < best.peak_bytes:
+            best = res
+    return best
 
 
 BASELINES: dict[str, Callable[..., ScheduleResult]] = {

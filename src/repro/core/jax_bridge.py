@@ -35,9 +35,7 @@ from repro.core.executor import RealizedTracker, _from_bytes, _to_bytes
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import kahn_schedule
 from repro.core.plancache import PlanCache, resolve as _resolve_cache
-from repro.core.scheduler import dp_schedule
-from repro.core.budget import adaptive_budget_schedule
-from repro.core.scheduler import SearchTimeout
+from repro.core.serenity import schedule_order
 from repro.kernels.arena import arena_write
 
 
@@ -136,11 +134,14 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
 
     Args:
       closed: the ``ClosedJaxpr`` to reorder.
-      state_quota: maximum DP signatures per search level before the exact
-        search aborts (deterministic timeout).
-      beam_fallback: on quota exhaustion, rerun with a bounded beam (keeps
-        the ``state_quota`` best signatures per level) instead of raising;
-        the report's ``exact`` flag records which path produced the order.
+      state_quota: maximum DP signatures per search level before a cell's
+        exact search aborts (deterministic timeout).
+      beam_fallback: with ``True`` (default), a cell that exhausts its
+        quota falls back to the Algorithm 2 budget meta-search and, if even
+        that capitulates, to a bounded per-cell beam (the ``state_quota``
+        best signatures per level) — the report's ``exact`` flag records
+        whether any fallback produced the order.  With ``False`` the
+        timeout propagates as :class:`~repro.core.scheduler.SearchTimeout`.
       cache: plan-cache handle/boolean as in :func:`repro.core.schedule`.
 
     Returns:
@@ -159,30 +160,26 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
     if cached is not None:
         (best_peak, best_order, exact, orig_peak, kahn_peak, arena) = cached
     else:
-        # footprint of the original (trace) order — itself a feasible
-        # schedule, so it seeds the soft budget (tighter than Kahn on
-        # traced programs)
+        # footprints of the traced order and the Kahn order — both feasible
+        # schedules, so the chosen order is never worse than either
         orig_order = list(range(len(g)))
         orig = simulate_schedule(g, orig_order)
         kahn = kahn_schedule(g)
-        tau = min(orig.peak_bytes, kahn.peak_bytes)
 
-        exact = True
-        try:
-            res = dp_schedule(g, budget=tau, state_quota=state_quota)
-        except SearchTimeout:
-            if not beam_fallback:
-                raise
-            # beam runs UNBUDGETED: beam width alone bounds the search — a
-            # budget would dead-end it (low-peak states it keeps can all hit
-            # the budget wall while the feasible path got evicted)
-            exact = False
-            res = dp_schedule(g, state_quota=state_quota, on_quota="beam")
+        # hierarchical divide and conquer + branch-and-bound DP per cell
+        # (the same search serenity.schedule runs); isomorphic cells replay
+        # through the plan cache; with beam_fallback the per-cell timeout
+        # policy is meta-search-then-beam, otherwise timeouts propagate
+        res = schedule_order(
+            g, state_quota=state_quota, cache=pc,
+            on_timeout="adaptive" if beam_fallback else "raise")
+        exact = res.exact
+        res_peak = simulate_schedule(g, res.order).peak_bytes
 
         candidates = [
             (orig.peak_bytes, orig_order),
             (kahn.peak_bytes, kahn.order),
-            (res.peak_bytes, res.order),
+            (res_peak, res.order),
         ]
         best_peak, best_order = min(candidates, key=lambda c: c[0])
         orig_peak, kahn_peak = orig.peak_bytes, kahn.peak_bytes

@@ -70,15 +70,15 @@ def _fold(salt: int, values) -> int:
     return h
 
 
-def canonical_hash(g: Graph) -> str:
-    """Label-invariant content hash of the scheduling-relevant structure.
+def wl_colors(g: Graph) -> list[int]:
+    """Per-node Weisfeiler–Lehman colors over the scheduling payload.
 
-    WL color refinement with process-stable colors: initial colors come from
-    sha256 of the node payload, refinement mixes the sorted neighbor color
-    multisets with 64-bit integer arithmetic (no per-node hashing in the
-    loop — the refinement is the hot path for cache lookups), and the final
-    digest is sha256 over the sorted color multiset plus edge color pairs.
-    Isomorphic relabelings hash equal; any shape/size/op/edge change does not.
+    Initial colors come from sha256 of the node payload (op, sizes, meta —
+    *not* names), refinement mixes the sorted neighbor color multisets with
+    64-bit integer arithmetic (no per-node hashing in the loop — the
+    refinement is the hot path for cache lookups).  Isomorphic relabelings
+    produce the same color multiset; nodes distinguished by structure get
+    distinct colors, which is what :func:`translate_order` keys on.
     """
     n = len(g)
     payload_color: dict[bytes, int] = {}
@@ -104,6 +104,18 @@ def canonical_hash(g: Graph) -> str:
         if nxt == colors:
             break
         colors = nxt
+    return colors
+
+
+def canonical_hash(g: Graph) -> str:
+    """Label-invariant content hash of the scheduling-relevant structure.
+
+    sha256 over the sorted WL color multiset (:func:`wl_colors`) plus edge
+    color pairs.  Isomorphic relabelings hash equal; any shape/size/op/edge
+    change does not.
+    """
+    n = len(g)
+    colors = wl_colors(g)
     acc = hashlib.sha256()
     acc.update(f"n={n}".encode())
     for c in sorted(colors):
@@ -127,10 +139,47 @@ def labeled_fingerprint(g: Graph) -> str:
     return acc.hexdigest()
 
 
+def translate_order(src: Graph, dst: Graph, order: list[int]) -> list[int] | None:
+    """Map a schedule of ``src`` onto the isomorphic-but-relabeled ``dst``.
+
+    The WL colors (:func:`wl_colors`) of both graphs are compared; when the
+    refinement individualizes every node (all color classes are singletons)
+    the node bijection is forced, and after verifying it really is an
+    isomorphism (pred and alias sets map exactly — WL equality alone is
+    necessary, not sufficient) the order is rewritten through it.  Returns
+    ``None`` when the graphs aren't color-equivalent or the cell is too
+    symmetric to individualize — callers fall back to rescheduling.
+
+    This is what turns the plan cache's canonical (WL) tier into real
+    cross-labeling reuse for repeated network cells (DESIGN.md §8).
+    """
+    n = len(src)
+    if n != len(dst):
+        return None
+    cs, cd = wl_colors(src), wl_colors(dst)
+    if sorted(cs) != sorted(cd):
+        return None
+    by_color: dict[int, int] = {}
+    for u, c in enumerate(cd):
+        if c in by_color:
+            return None          # symmetric cell: bijection not forced
+        by_color[c] = u
+    mapping = [by_color[c] for c in cs]          # src id -> dst id
+    for u in range(n):                           # verify the isomorphism
+        su, du = src.nodes[u], dst.nodes[mapping[u]]
+        if sorted(mapping[p] for p in su.preds) != sorted(du.preds):
+            return None
+        if {mapping[p] for p in su.alias_preds} != set(du.alias_preds):
+            return None
+        if su.size_bytes != du.size_bytes or su.op != du.op:
+            return None
+    return [mapping[u] for u in order]
+
+
 # Bump whenever the *shape* of cached payloads changes (new plan fields,
 # different tuple layouts...): folded into every options key, so stale disk
 # entries from older code become clean misses instead of poison.
-SCHEMA_VERSION = 3   # 3: ArenaPlan.intra offsets + serve plan graph/order
+SCHEMA_VERSION = 4   # 4: SerenityResult exactness fields + segment plans
 
 
 def _options_key(options: Any) -> str:
@@ -170,6 +219,10 @@ class PlanCache:
         self.disk_dir = disk_dir
         self.stats = CacheStats()
         self._mem: OrderedDict[tuple[str, str, str], Any] = OrderedDict()
+        # canonical tier: (canonical, options) -> most recent full key, so
+        # isomorphic-but-relabeled graphs can find *a* stored plan to
+        # translate (memory tier only; validated against _mem on lookup)
+        self._canon: dict[tuple[str, str], tuple[str, str, str]] = {}
         self._lock = threading.Lock()
 
     # -- keys ---------------------------------------------------------------
@@ -210,10 +263,29 @@ class PlanCache:
             self.stats.misses += 1
         return None
 
+    def get_canonical(self, g: Graph, options: Any = ()) -> Any | None:
+        """A stored payload for *any* graph isomorphic to ``g`` (same
+        canonical hash, same options) — node ids inside it refer to the
+        graph it was stored for; callers translate (see
+        :func:`translate_order`).  Returns ``None`` on miss; never counts
+        toward hit/miss stats (it's a secondary, best-effort tier)."""
+        key = self.key_for(g, options)
+        with self._lock:
+            full = self._canon.get((key[0], key[1]))
+            if full is None or full == key:
+                return None
+            payload = self._mem.get(full)
+            if payload is None:
+                self._canon.pop((key[0], key[1]), None)   # evicted: drop
+                return None
+            self._mem.move_to_end(full)
+            return payload
+
     def put(self, g: Graph, options: Any, payload: Any) -> None:
         key = self.key_for(g, options)
         with self._lock:
             self._mem_put(key, payload)
+            self._canon[(key[0], key[1])] = key
             self.stats.puts += 1
         if self.disk_dir:
             self._disk_write(key, pickle.dumps(payload))
@@ -221,6 +293,7 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._mem.clear()
+            self._canon.clear()
             self.stats = CacheStats()
 
     def __len__(self) -> int:

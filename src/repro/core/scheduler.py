@@ -1,34 +1,42 @@
 """Dynamic-programming memory-aware scheduler (paper Algorithm 1).
 
 The paper keys the memoization table on the *zero-indegree set* ``z`` of each
-partial schedule.  ``z`` is a pure function of the set of already-scheduled
-nodes, so we key on the canonical bitmask of the scheduled set — the classic
-Held–Karp signature — which identifies exactly the same subproblems while
-being O(1) to update.  For each signature we keep only the partial schedule
-with the smallest ``mu_peak`` (ties broken on smaller ``mu``), which Theorem 1
-of the paper proves sufficient for optimality.
+partial schedule.  ``z`` determines the scheduled set exactly (and vice
+versa): the unscheduled nodes are precisely ``z`` plus the strict descendants
+of ``z``, so the canonical frontier signature and the scheduled-set bitmask
+are two representations of the same signature (bijection proven in
+DESIGN.md §8).  We key on the bitmask — the classic Held–Karp signature —
+because it is O(1) to update; the frontier rides along in the state for
+transition generation.  For each signature we keep only the partial schedule
+with the smallest ``(mu_peak, mu, water)`` — the footprint ``mu`` is a pure
+function of the signature, so this is the Pareto/dominance filter over the
+signature class, which Theorem 1 of the paper proves sufficient for
+optimality.
 
-Two pruning hooks implement the paper's speed machinery:
+Three pruning layers implement the search-speed machinery (DESIGN.md §8):
 
-  * ``budget`` (tau)     — drop any transition whose ``mu_peak`` exceeds tau
-                           (Section 3.2, Figure 8a).
-  * ``state_quota``      — the per-search-step "timeout" T of Algorithm 2,
-                           made deterministic: if a search step's memo grows
-                           beyond the quota we raise :class:`SearchTimeout`
-                           instead of measuring wall-clock.
-
-``wall_clock_limit_s`` offers the paper's literal wall-clock T as well.
+  * **eager-move dominance** — if a ready node's scheduling fits under the
+    running peak and does not grow the footprint (its deallocations cover
+    its allocation), the state that schedules it immediately dominates every
+    sibling at the same level: all other transitions of that state are
+    dropped.  Chains and in-place ops collapse to a single path.
+  * **branch and bound** — with ``bnb=True`` (default) the search seeds an
+    incumbent from the best memory-aware heuristic order and prunes every
+    transition whose peak exceeds it, plus every signature whose *admissible
+    lower bound* (max over remaining nodes of unavoidable resident bytes)
+    exceeds it.  ``budget`` (the paper's tau) remains available as an
+    explicit cap; the effective bound is ``min(budget, incumbent)``.
+    Both engines implement identical rules, so results stay in parity.
+  * ``state_quota`` / ``wall_clock_limit_s`` — the per-search-step "timeout"
+    T of Algorithm 2, deterministic (signature quota) or literal.
 
 Beyond the paper (DESIGN.md §5): among signatures with equal ``mu_peak``
-(and equal ``mu`` — the footprint is a pure function of the signature), the
-DP prefers the partial schedule with the smaller *estimated arena watermark*
-``water``: a per-state scalar modelling a first-fit allocator whose free
-holes never coalesce — scheduling ``u`` reuses hole bytes when
-``water - mu >= net_alloc(u)`` and otherwise grows the arena top.  Ties are
-thereby broken toward fragmentation-free orders instead of arbitrary node
-ids, which is what the offset allocator (``plan_arena``) realizes later.
-The peak-optimality proof is untouched: ``water`` only orders equal-peak
-winners.
+(and equal ``mu``), the DP prefers the partial schedule with the smaller
+*estimated arena watermark* ``water`` — a first-fit-no-coalesce model that
+orders equal-peak winners toward fragmentation-free orders.  The
+peak-optimality proof is untouched by any of the above: eager moves are an
+exchange-argument dominance, and the bound only removes states that provably
+cannot beat an order already in hand.
 """
 
 from __future__ import annotations
@@ -42,9 +50,18 @@ import numpy as np
 
 from repro.core.graph import Graph, simulate_schedule
 
-# Below this node count the per-level numpy dispatch overhead outweighs the
-# vectorization win; the scalar reference loop is faster on tiny segments.
-_NUMPY_MIN_NODES = 24
+# In engine='auto' the scalar loop runs until some level generates more
+# transitions than this, then the search restarts on the vectorized engine
+# (the scalar prefix was cheap by definition — it only ran while levels were
+# narrow).  This replaces the old static node-count crossover, which made
+# 'auto' pick the slower engine on small-but-wide graphs.
+_AUTO_SPILL_TRANSITIONS = 512
+
+# The admissible lower bound only pays for itself on wide levels (it exists
+# to stop state-space blowups, and costs a per-signature scan / matmul).
+# Levels at or below this many deduped signatures skip it — in *both*
+# engines, so the explored state sets stay in parity.
+_LB_MIN_STATES = 256
 
 
 class NoSolutionError(RuntimeError):
@@ -53,6 +70,10 @@ class NoSolutionError(RuntimeError):
 
 class SearchTimeout(RuntimeError):
     """A search step exceeded its state quota / wall-clock limit."""
+
+
+class _EngineSpill(Exception):
+    """Internal: a level outgrew the scalar loop; restart vectorized."""
 
 
 @dataclasses.dataclass
@@ -65,9 +86,76 @@ class ScheduleResult:
     wall_time_s: float
     arena_est_bytes: int = 0   # DP's incremental arena-watermark estimate
                                # (0 when the producing path doesn't track it)
+    exact: bool = True         # False for beam-trimmed / heuristic orders
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Admissible lower-bound tables (branch and bound, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+class _BoundTables:
+    """Per-graph tables for the admissible completion lower bound.
+
+    For a state with scheduled-set mask ``S`` and any remaining node ``u``,
+    the footprint at the moment ``u`` is scheduled is at least
+
+        static_lb[u]                 (u's allocation + all its preds resident)
+      + sum sizes over S & need[u]   (already-produced tensors that *cannot*
+                                      die before u: a consumer among u's
+                                      strict descendants, or no consumer at
+                                      all — graph outputs stay resident)
+
+    so ``LB(S) = max(peak, max_u not in S: static_lb[u] + extra(S, u))`` is a
+    valid lower bound on every completion's peak: any state with
+    ``LB > bound`` cannot beat an order already in hand and is dropped.
+    """
+
+    def __init__(self, g: Graph):
+        n = len(g)
+        sizes = g.sizes
+        desc = g.descendants_masks()
+        need: list[int] = [0] * n
+        static_lb: list[int] = [0] * n
+        for u in range(n):
+            nd = g.nodes[u]
+            pm = g.pred_mask[u]
+            m = 0
+            for t in range(n):
+                if t == u or pm >> t & 1:
+                    continue
+                if g.succ_mask[t] == 0 or g.succ_mask[t] & desc[u]:
+                    m |= 1 << t
+            need[u] = m
+            alias = sum(sizes[p] for p in nd.alias_preds)
+            static_lb[u] = (
+                sizes[u] - alias + sum(sizes[p] for p in nd.preds)
+            )
+        self.need = need
+        self.static_lb = static_lb
+        # float64 keeps the per-level evaluation a single BLAS matmul; byte
+        # sums stay far below 2**53, so the arithmetic is exact
+        W = np.zeros((n, n), dtype=np.float64)
+        for u in range(n):
+            m = need[u]
+            while m:
+                b = m & -m
+                m ^= b
+                t = b.bit_length() - 1
+                W[t, u] = float(sizes[t])
+        self.need_w = W
+        self.static_lb_np = np.array(static_lb, dtype=np.float64)
+
+
+def _bound_tables(g: Graph) -> _BoundTables:
+    bt = g.__dict__.get("_bound_tables")
+    if bt is None:
+        bt = _BoundTables(g)
+        g._bound_tables = bt
+    return bt
 
 
 def dp_schedule(
@@ -79,6 +167,7 @@ def dp_schedule(
     preplaced: Sequence[int] = (),
     on_quota: str = "raise",
     engine: str = "auto",
+    bnb: bool = True,
 ) -> ScheduleResult:
     """Optimal-peak topological schedule of ``g`` via signature DP.
 
@@ -86,7 +175,16 @@ def dp_schedule(
     timeout).  ``on_quota='beam'`` instead keeps only the ``state_quota`` best
     signatures per step (lowest peak, then footprint) — no longer provably
     optimal, but bounded; the production fallback for very wide graphs
-    (DESIGN.md §3).
+    (DESIGN.md §3).  Beam runs without the automatic bound (an incumbent
+    prune can dead-end a beam whose feasible path was evicted).
+
+    ``bnb`` (default) turns the paper's user-supplied budget tau into an
+    automatic bound: the search seeds an incumbent from the best heuristic
+    order (`repro.core.heuristics.best_heuristic_schedule`), prunes peaks
+    above ``min(budget, incumbent)``, applies the admissible lower bound,
+    and collapses zero-cost moves via the eager-move dominance.  The
+    returned peak is identical to the unpruned DP's; pass ``bnb=False`` for
+    the pre-bound reference search (kept for A/B state-count benchmarks).
 
     ``engine`` selects the DP implementation:
 
@@ -94,13 +192,16 @@ def dp_schedule(
         state transition).  Semantically the source of truth.
       * ``'numpy'``  — the vectorized bitmask engine: each DP level is a
         batch of packed-uint64 signature rows and every transition rule
-        (alloc, budget prune, dealloc, frontier update, dedup) is evaluated
-        for the whole level at once.  Identical results (same ``peak_bytes``
-        and ``final_bytes``; ties may pick a different but equally-optimal
-        order only when the two engines enumerate states differently —
-        both are deterministic).
-      * ``'auto'``   — ``'numpy'`` for graphs above ``_NUMPY_MIN_NODES``
-        nodes, ``'python'`` for tiny ones where dispatch overhead dominates.
+        (alloc, dominance, bound prune, dealloc, frontier update, dedup) is
+        evaluated for the whole level at once.  Identical results (same
+        ``peak_bytes`` and ``final_bytes``; ties may pick a different but
+        equally-optimal order only when the two engines enumerate states
+        differently — both are deterministic).
+      * ``'auto'``   — starts on the scalar loop and restarts on the
+        vectorized engine the first time a level generates more than
+        ``_AUTO_SPILL_TRANSITIONS`` transitions, so tiny/narrow searches
+        never pay the per-level numpy dispatch overhead and wide ones never
+        pay the per-transition interpreter overhead.
 
     Raises
     ------
@@ -108,43 +209,58 @@ def dp_schedule(
     SearchTimeout     if a search step exceeds ``state_quota`` signatures or
                       the wall clock limit (with ``on_quota='raise'``).
     """
-    if engine == "auto":
-        engine = (
-            "numpy"
-            if len(g) > _NUMPY_MIN_NODES and sys.byteorder == "little"
-            else "python"
-        )
-    if engine == "numpy":
-        return _dp_schedule_numpy(
-            g,
-            budget=budget,
-            state_quota=state_quota,
-            wall_clock_limit_s=wall_clock_limit_s,
-            preplaced=preplaced,
-            on_quota=on_quota,
-        )
-    if engine != "python":
-        raise ValueError(f"unknown engine {engine!r}")
-    return _dp_schedule_python(
-        g,
-        budget=budget,
+    use_bound = bnb and on_quota != "beam"
+    tau = budget
+    if use_bound:
+        # the incumbent is a pure function of (graph, preplaced) — memoized
+        # on the instance so budget meta-search rounds don't re-run the
+        # heuristics (dropped on pickle, like the other derived caches)
+        incumbents = g.__dict__.setdefault("_incumbents", {})
+        inc_key = tuple(sorted(preplaced))
+        inc_peak = incumbents.get(inc_key)
+        if inc_peak is None:
+            from repro.core.heuristics import best_heuristic_schedule
+
+            inc_peak = best_heuristic_schedule(
+                g, preplaced=preplaced).peak_bytes
+            incumbents[inc_key] = inc_peak
+        tau = inc_peak if budget is None else min(budget, inc_peak)
+
+    kw = dict(
+        tau=tau,
         state_quota=state_quota,
         wall_clock_limit_s=wall_clock_limit_s,
         preplaced=preplaced,
         on_quota=on_quota,
+        use_bound=use_bound,
     )
+    little = sys.byteorder == "little"
+    if engine == "auto":
+        try:
+            return _dp_schedule_python(
+                g, spill_cap=_AUTO_SPILL_TRANSITIONS if little else None, **kw
+            )
+        except _EngineSpill:
+            return _dp_schedule_numpy(g, **kw)
+    if engine == "numpy":
+        return _dp_schedule_numpy(g, **kw)
+    if engine != "python":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _dp_schedule_python(g, **kw)
 
 
 def _dp_schedule_python(
     g: Graph,
     *,
-    budget: int | None = None,
+    tau: int | None = None,
     state_quota: int | None = None,
     wall_clock_limit_s: float | None = None,
     preplaced: Sequence[int] = (),
     on_quota: str = "raise",
+    use_bound: bool = False,
+    spill_cap: int | None = None,
 ) -> ScheduleResult:
-    """Scalar reference DP (the seed implementation, kept verbatim)."""
+    """Scalar reference DP: one Python iteration per state transition."""
     t0 = time.perf_counter()
     n = len(g)
     pre = frozenset(preplaced)
@@ -167,6 +283,33 @@ def _dp_schedule_python(
         dealloc_preds[u] = tuple(
             (p, sizes[p]) for p in nd.preds if p not in nd.alias_preds
         )
+
+    lbt = _bound_tables(g) if use_bound and tau is not None else None
+    lb_cache: dict[int, int] = {}
+
+    def _lb(mask: int) -> int:
+        """max over remaining nodes of unavoidable resident bytes."""
+        v = lb_cache.get(mask)
+        if v is not None:
+            return v
+        best = 0
+        need = lbt.need
+        slb = lbt.static_lb
+        for u in to_schedule:
+            if mask >> u & 1:
+                continue
+            s = slb[u]
+            m = mask & need[u]
+            while m:
+                b = m & -m
+                m ^= b
+                s += sizes[b.bit_length() - 1]
+            if s > best:
+                best = s
+                if best > tau:
+                    break          # prune decision already determined
+        lb_cache[mask] = best
+        return best
 
     pre_mask = 0
     mu0 = 0
@@ -194,26 +337,39 @@ def _dp_schedule_python(
 
     for _step in range(len(to_schedule)):
         nxt: dict[int, tuple[int, int, int, int]] = {}
-        timed_out = False
+        level_tr = 0
         for mask, (mu, peak, water, frontier) in level.items():
+            # generate the state's transitions; the eager-move dominance
+            # (DESIGN.md §8) keeps only the first (lowest-id) ready node
+            # whose transient fits under the running peak and whose
+            # deallocations cover its allocation — its child state dominates
+            # every sibling, so the rest of the frontier is dropped.
+            trans: list[tuple[int, int, int, int, int]] = []
             f = frontier
             while f:
                 ubit = f & -f
                 f ^= ubit
                 u = ubit.bit_length() - 1
-                expanded += 1
                 new_mu = mu + net_alloc[u]
-                new_peak = peak if peak >= new_mu else new_mu
-                if budget is not None and new_peak > budget:
-                    continue  # pruned (soft budget)
-                # arena-watermark estimate: reuse hole bytes (water - mu) if
-                # they cover the allocation, else grow the arena top
-                s = alloc_pos[u]
-                new_water = water if water - mu >= s else water + s
+                tpeak = new_mu           # transient before deallocations
                 new_mask = mask | ubit
                 for p, psz in dealloc_preds[u]:
                     if succ_mask[p] & new_mask == succ_mask[p]:
                         new_mu -= psz
+                if use_bound and tpeak <= peak and new_mu <= mu:
+                    trans = [(u, ubit, new_mask, new_mu, tpeak)]
+                    break
+                trans.append((u, ubit, new_mask, new_mu, tpeak))
+            expanded += len(trans)
+            level_tr += len(trans)
+            for u, ubit, new_mask, new_mu, tpeak in trans:
+                new_peak = peak if peak >= tpeak else tpeak
+                if tau is not None and new_peak > tau:
+                    continue  # pruned (budget / incumbent bound)
+                # arena-watermark estimate: reuse hole bytes (water - mu) if
+                # they cover the allocation, else grow the arena top
+                s = alloc_pos[u]
+                new_water = water if water - mu >= s else water + s
                 cur = nxt.get(new_mask)
                 if cur is None:
                     new_frontier = frontier ^ ubit
@@ -224,18 +380,31 @@ def _dp_schedule_python(
                     nxt[new_mask] = (new_mu, new_peak, new_water, new_frontier)
                     parents[new_mask] = (mask, u)
                     if (
-                        state_quota is not None
+                        lbt is None
+                        and state_quota is not None
                         and on_quota == "raise"
                         and len(nxt) > state_quota
                     ):
-                        timed_out = True
-                        break
+                        # without a lower-bound filter nothing can shrink
+                        # this level anymore: abort before materializing it
+                        raise SearchTimeout(
+                            f"step {_step}: memo > quota {state_quota}"
+                        )
                 elif (new_peak, new_mu, new_water) < (cur[1], cur[0], cur[2]):
                     nxt[new_mask] = (new_mu, new_peak, new_water, cur[3])
                     parents[new_mask] = (mask, u)
-            if timed_out:
-                break
-        if timed_out:
+            if spill_cap is not None and level_tr > spill_cap:
+                raise _EngineSpill
+        # the admissible lower bound runs on wide levels only (it exists to
+        # stop blowups; narrow levels aren't one) — stale `parents` entries
+        # of pruned masks are unreachable and harmless
+        if lbt is not None and len(nxt) > _LB_MIN_STATES:
+            nxt = {m: v for m, v in nxt.items() if _lb(m) <= tau}
+        if (
+            state_quota is not None
+            and on_quota == "raise"
+            and len(nxt) > state_quota
+        ):
             raise SearchTimeout(
                 f"step {_step}: memo > quota {state_quota}"
             )
@@ -250,7 +419,7 @@ def _dp_schedule_python(
             nxt = dict(keep[:state_quota])
         if not nxt:
             raise NoSolutionError(
-                f"budget {budget} prunes all paths at step {_step} "
+                f"budget {tau} prunes all paths at step {_step} "
                 f"(graph {g.name!r})"
             )
         if (
@@ -277,17 +446,19 @@ def _dp_schedule_python(
         n_signatures=n_signatures,
         wall_time_s=time.perf_counter() - t0,
         arena_est_bytes=final_water,
+        exact=on_quota != "beam",
     )
 
 
 def _dp_schedule_numpy(
     g: Graph,
     *,
-    budget: int | None = None,
+    tau: int | None = None,
     state_quota: int | None = None,
     wall_clock_limit_s: float | None = None,
     preplaced: Sequence[int] = (),
     on_quota: str = "raise",
+    use_bound: bool = False,
 ) -> ScheduleResult:
     """Vectorized bitmask DP over whole levels at once.
 
@@ -297,15 +468,18 @@ def _dp_schedule_numpy(
     reference loop becomes ~a dozen batched numpy ops:
 
       1. unpack every state's ready-set into (state, node) transition pairs,
-      2. batched alloc (``mu + net_alloc``), peak update, budget prune,
-      3. signature dedup via one stable lexsort over (mask words, peak,
-         water), keeping exactly the reference loop's winner per signature
-         (the footprint is a pure function of the mask, so only peak and the
-         arena-watermark estimate can differ within a group),
-      4. batched dealloc on the survivors: a predecessor is freed iff its
-         successor mask is a subset of the new signature (single-word graphs
-         test *all* node pairs with one ``(S, n)`` broadcast),
-      5. batched frontier refill the same way.
+      2. batched alloc (``mu + net_alloc``) and dealloc: a predecessor is
+         freed iff its successor mask is a subset of the new signature
+         (CSR repeat/gather/reduceat over the pred-edge table),
+      3. eager-move dominance: per source state, if any transition fits
+         under the running peak without growing the footprint, keep only the
+         first such transition (``minimum.reduceat`` over the state groups),
+      4. bound prune (``new_peak > tau``), then signature dedup via one
+         stable lexsort over (mask words, peak, water) — exactly the
+         reference loop's per-signature winner,
+      5. admissible lower bound on the surviving signatures: one float64
+         matmul of the unpacked masks against the need-weight table,
+      6. batched frontier refill over the succ-edge table.
     """
     if sys.byteorder != "little":
         # unpackbits(view(uint8), bitorder='little') relies on little-endian
@@ -323,6 +497,7 @@ def _dp_schedule_numpy(
     bt = g.masks()
     W = bt.words
     u64 = np.uint64
+    lbt = _bound_tables(g) if use_bound and tau is not None else None
 
     pre_mask = np.zeros(W, dtype=u64)
     mu0 = 0
@@ -362,6 +537,21 @@ def _dp_schedule_numpy(
     row_bits = 64 * W            # unpacked row width (a power of two iff
     row_shift = row_bits.bit_length() - 1     # W is one: the hot path)
     row_pow2 = row_bits & (row_bits - 1) == 0
+
+    def _csr_expand(u_sel, table_len, table_off):
+        """(rows, flat, row_rep, offs) expanding u_sel against a CSR table."""
+        cnt = table_len[u_sel]
+        rows = np.flatnonzero(cnt)
+        if not len(rows):
+            return rows, rows, rows, rows
+        cnt_nz = cnt[rows]
+        ends = np.cumsum(cnt_nz)
+        offs = ends - cnt_nz
+        pos = np.arange(int(ends[-1])) - np.repeat(offs, cnt_nz)
+        flat = np.repeat(table_off[u_sel[rows]], cnt_nz) + pos
+        row_rep = np.repeat(rows, cnt_nz)
+        return rows, flat, row_rep, offs
+
     for _step in range(n_free):
         # 1. all (state, node) transitions of this level: unpack the packed
         # frontiers to one flat bit array; flat position p encodes
@@ -378,18 +568,54 @@ def _dp_schedule_numpy(
         else:
             state_idx = tpos // row_bits
             u_arr = tpos - state_idx * row_bits
+
+        # 2. batched alloc + dealloc for *every* transition (the dominance
+        # test needs the post-dealloc footprint before any pruning)
+        tpeak_tr = mu[state_idx] + bt.net_alloc[u_arr]   # transient
+        if word1:
+            new_mask = masks[state_idx] | bt.node_bit1[u_arr]
+        else:
+            new_mask = masks[state_idx] | bt.node_bit[u_arr]
+        new_mu = tpeak_tr.copy()
+        rows, flat, row_rep, offs = _csr_expand(u_arr, bt.pe_len, bt.pe_off)
+        if len(rows):
+            if word1:
+                tgt = bt.pe_tgt1[flat]
+                hit = (new_mask[row_rep] & tgt) == tgt
+            else:
+                tgt = bt.pe_tgt[flat]
+                hit = ((new_mask[row_rep] & tgt) == tgt).all(axis=1)
+            new_mu[rows] -= np.add.reduceat(
+                np.where(hit, bt.pe_size[flat], 0), offs)
+
+        # 3. eager-move dominance: per state, keep only the first transition
+        # that fits under the running peak without growing the footprint
+        if use_bound and len(u_arr):
+            qual = (tpeak_tr <= peak[state_idx]) & (new_mu <= mu[state_idx])
+            if qual.any():
+                T = len(u_arr)
+                starts = np.flatnonzero(
+                    np.r_[True, state_idx[1:] != state_idx[:-1]])
+                gid = np.cumsum(
+                    np.r_[False, state_idx[1:] != state_idx[:-1]])
+                qpos = np.where(qual, np.arange(T), T)
+                firstq = np.minimum.reduceat(qpos, starts)
+                keep = (firstq[gid] == T) | (np.arange(T) == firstq[gid])
+                state_idx, u_arr = state_idx[keep], u_arr[keep]
+                tpeak_tr, new_mu = tpeak_tr[keep], new_mu[keep]
+                new_mask = new_mask[keep]
         expanded += len(u_arr)
 
-        # 2. batched alloc + budget prune (O(transitions) scalar arrays)
-        pre_mu = mu[state_idx] + bt.net_alloc[u_arr]
-        new_peak = np.maximum(peak[state_idx], pre_mu)
-        if budget is not None:
-            keep = new_peak <= budget
+        # 4. bound prune (budget / incumbent)
+        new_peak = np.maximum(peak[state_idx], tpeak_tr)
+        if tau is not None:
+            keep = new_peak <= tau
             u_arr, state_idx = u_arr[keep], state_idx[keep]
-            pre_mu, new_peak = pre_mu[keep], new_peak[keep]
+            new_mu, new_peak = new_mu[keep], new_peak[keep]
+            new_mask = new_mask[keep]
         if len(u_arr) == 0:
             raise NoSolutionError(
-                f"budget {budget} prunes all paths at step {_step} "
+                f"budget {tau} prunes all paths at step {_step} "
                 f"(graph {g.name!r})"
             )
         # arena-watermark estimate: reuse hole bytes (water - mu) when they
@@ -400,9 +626,9 @@ def _dp_schedule_numpy(
             water_tr - mu[state_idx] >= s_arr, 0, s_arr
         )
 
-        # 3. dedup signatures first: the footprint mu is a pure function of
-        # the signature mask, so transitions reaching the same mask differ
-        # only in (peak, water).  One stable lexsort with the mask words as
+        # 5. dedup signatures: the footprint mu is a pure function of the
+        # signature mask, so transitions reaching the same mask differ only
+        # in (peak, water).  One stable lexsort with the mask words as
         # primary keys and (peak, water) as tie-breaks groups equal masks
         # with the lexicographically-best transition first — exactly the
         # reference loop's strictly-better-replaces rule (earliest
@@ -410,74 +636,74 @@ def _dp_schedule_numpy(
         firsts = np.empty(len(u_arr), dtype=bool)
         firsts[0] = True
         if word1:
-            new_mask = masks[state_idx] | bt.node_bit1[u_arr]
             order = np.lexsort((new_water, new_peak, new_mask))
             sorted_mask = new_mask[order]
             np.not_equal(sorted_mask[1:], sorted_mask[:-1], out=firsts[1:])
         else:
-            new_mask = masks[state_idx] | bt.node_bit[u_arr]
             order = np.lexsort((new_water, new_peak) + tuple(new_mask.T))
             sorted_mask = new_mask[order]
             np.any(sorted_mask[1:] != sorted_mask[:-1], axis=1, out=firsts[1:])
-        starts = np.flatnonzero(firsts)
-        n_uniq = len(starts)
+        winners = order[np.flatnonzero(firsts)]
+
+        state_w = state_idx[winners]
+        u_w = u_arr[winners]
+        mask_w = new_mask[winners]
+        peak_w = new_peak[winners]
+        mu_w = new_mu[winners]
+        water_w = new_water[winners]
+
+        # 6. admissible lower bound on the deduped signatures (one matmul;
+        # wide levels only — the same rule as the reference loop)
+        if lbt is not None and len(u_w) > _LB_MIN_STATES:
+            mbits = np.unpackbits(
+                np.ascontiguousarray(mask_w).view(np.uint8),
+                bitorder="little",
+            ).reshape(len(u_w), row_bits)[:, :n].astype(np.float64)
+            lb = mbits @ lbt.need_w + lbt.static_lb_np
+            np.copyto(lb, -1.0, where=mbits > 0.5)   # only remaining nodes
+            keep = lb.max(axis=1) <= tau
+            if not keep.all():
+                state_w, u_w = state_w[keep], u_w[keep]
+                mask_w, peak_w = mask_w[keep], peak_w[keep]
+                mu_w, water_w = mu_w[keep], water_w[keep]
+            if len(u_w) == 0:
+                raise NoSolutionError(
+                    f"budget {tau} prunes all paths at step {_step} "
+                    f"(graph {g.name!r})"
+                )
+        n_uniq = len(u_w)
         if (
             state_quota is not None
             and on_quota == "raise"
             and n_uniq > state_quota
         ):
             raise SearchTimeout(f"step {_step}: memo > quota {state_quota}")
-        winners = order[starts]
 
-        state_w = state_idx[winners]
-        u_w = u_arr[winners]
-        mask_w = new_mask[winners]
-        peak_w = new_peak[winners]
-        mu_w = pre_mu[winners]
-        water_w = new_water[winners]
+        # 7. batched frontier refill over the succ-edge table: a successor
+        # enters the frontier iff all its preds are in the new signature
         if word1:
             frontier_w = frontier[state_w] ^ bt.node_bit1[u_w]
         else:
             frontier_w = frontier[state_w] ^ bt.node_bit[u_w]
-
-        # 4. batched dealloc + frontier refill on the deduped level: expand
-        # each survivor against its node's merged CSR edge table
-        # (repeat/gather), test subset-of-signature per edge once, and fold
-        # back per row with reduceat — bytes freed for pred edges, frontier
-        # bits for successor edges.  A pred is freed iff all its consumers
-        # are scheduled; a successor enters the frontier iff all its preds
-        # are.
-        cnt = bt.me_len[u_w]
-        rows = np.flatnonzero(cnt)
+        rows, flat, row_rep, offs = _csr_expand(u_w, bt.se_len, bt.se_off)
         if len(rows):
-            cnt_nz = cnt[rows]
-            ends = np.cumsum(cnt_nz)
-            offs = ends - cnt_nz
-            # flat[i] = csr_off[u] + (position of i within its row)
-            pos = np.arange(int(ends[-1])) - np.repeat(offs, cnt_nz)
-            flat = np.repeat(bt.me_off[u_w[rows]], cnt_nz) + pos
-            row_rep = np.repeat(rows, cnt_nz)
             if word1:
-                tgt = bt.me_tgt1[flat]
+                tgt = bt.se_tgt1[flat]
                 hit = (mask_w[row_rep] & tgt) == tgt
-                mu_w[rows] -= np.add.reduceat(
-                    np.where(hit, bt.me_size[flat], 0), offs)
                 frontier_w[rows] |= np.bitwise_or.reduceat(
-                    np.where(hit, bt.me_bit1[flat], u64(0)), offs)
+                    np.where(hit, bt.se_bit1[flat], u64(0)), offs)
             else:
-                tgt = bt.me_tgt[flat]
+                tgt = bt.se_tgt[flat]
                 hit = ((mask_w[row_rep] & tgt) == tgt).all(axis=1)
-                mu_w[rows] -= np.add.reduceat(
-                    np.where(hit, bt.me_size[flat], 0), offs)
                 frontier_w[rows] |= np.bitwise_or.reduceat(
-                    np.where(hit[:, None], bt.me_bit[flat], u64(0)),
+                    np.where(hit[:, None], bt.se_bit[flat], u64(0)),
                     offs, axis=0)
 
-        # 5. beam trim (needs the post-dealloc footprint for its tie-break)
+        # 8. beam trim (needs the post-dealloc footprint for its tie-break)
         if (
             state_quota is not None
             and on_quota == "beam"
-            and len(winners) > state_quota
+            and len(u_w) > state_quota
         ):
             best = np.lexsort((water_w, mu_w, peak_w))[: state_quota]
             state_w, u_w = state_w[best], u_w[best]
@@ -513,6 +739,7 @@ def _dp_schedule_numpy(
         n_signatures=n_signatures,
         wall_time_s=time.perf_counter() - t0,
         arena_est_bytes=int(water[0]),
+        exact=on_quota != "beam",
     )
 
 

@@ -21,11 +21,15 @@ from repro.core.allocator import ArenaPlan, plan_arena_best
 from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
 from repro.core.executor import ExecutionResult, ExecutorError, execute_plan
 from repro.core.graph import Graph, simulate_schedule
-from repro.core.heuristics import BASELINES, kahn_schedule
-from repro.core.partition import Segment, partition
-from repro.core.plancache import PlanCache, resolve as _resolve_cache
+from repro.core.heuristics import BASELINES
+from repro.core.partition import Segment, partition_hierarchy
+from repro.core.plancache import (
+    PlanCache,
+    resolve as _resolve_cache,
+    translate_order,
+)
 from repro.core.rewriter import RewriteReport, annotate_inplace, rewrite_graph
-from repro.core.scheduler import ScheduleResult, dp_schedule
+from repro.core.scheduler import ScheduleResult, SearchTimeout, dp_schedule
 
 
 @dataclasses.dataclass
@@ -39,10 +43,155 @@ class SerenityResult:
     budget_stats: list[BudgetSearchStats]
     wall_time_s: float
     baseline_peaks: dict[str, int]     # heuristic peaks on the same graph
+    exact: bool = True                 # every segment solved by the exact DP
+    n_states_expanded: int = 0         # DP transitions summed over segments
+    seg_cache_hits: int = 0            # segments replayed from the plan cache
 
     @property
     def arena_bytes(self) -> int:
         return self.arena.arena_bytes
+
+
+@dataclasses.dataclass
+class SegmentPlan:
+    """Cached DP result for one partition cell (anonymized subgraph)."""
+
+    graph: Graph                       # the anonymized segment subgraph
+    preplaced: tuple[int, ...]         # boundary ids within that subgraph
+    result: ScheduleResult
+
+
+@dataclasses.dataclass
+class OrderResult:
+    """A memory-optimal order for a whole graph, segment by segment."""
+
+    order: list[int]
+    exact: bool
+    n_states_expanded: int
+    n_signatures: int
+    segments: list[Segment]
+    seg_cache_hits: int
+    budget_stats: list[BudgetSearchStats]
+
+
+def schedule_order(
+    g: Graph,
+    *,
+    divide_and_conquer: bool = True,
+    adaptive_budget: bool = True,
+    state_quota: int | None = 20_000,
+    exact_threshold: int = 18,
+    engine: str = "auto",
+    cache: PlanCache | None = None,
+    on_timeout: str = "adaptive",
+) -> OrderResult:
+    """Hierarchically decompose ``g`` and DP-schedule each cell once.
+
+    The nested segment tree (:func:`repro.core.partition.partition_hierarchy`)
+    reduces the graph to leaf cells; each leaf's *anonymized* subgraph is
+    DP-scheduled with the branch-and-bound search and memoized in the plan
+    cache, so structurally identical cells — stacked RandWire/DARTS stages
+    repeat — schedule once and replay (``seg_cache_hits``).  A relabeled
+    isomorphic cell additionally tries the cache's canonical (WL) tier and
+    rewrites the stored order through the color bijection
+    (:func:`repro.core.plancache.translate_order`).
+
+    Large cells run the branch-and-bound DP under ``state_quota``;
+    ``on_timeout`` picks the quota-exhaustion policy: ``'adaptive'``
+    (default) falls back to the Algorithm 2 budget meta-search — and, if
+    even that capitulates to a heuristic order, to a bounded per-cell beam,
+    keeping the better of the two inexact orders — while ``'raise'``
+    propagates :class:`~repro.core.scheduler.SearchTimeout` to the caller.
+    ``exact`` reports whether every cell was solved exactly (no beam, no
+    heuristic capitulation).  When ``cache`` is None an ephemeral per-call
+    cache still provides in-run cell reuse.
+    """
+    if divide_and_conquer:
+        leaves = partition_hierarchy(g).leaves()
+        segments = [Segment(node_ids=list(lf.node_ids),
+                            boundary_in=list(lf.boundary_in))
+                    for lf in leaves]
+    else:
+        segments = [Segment(node_ids=g.topo_order(), boundary_in=[])]
+
+    seg_cache = cache if cache is not None else PlanCache(capacity=64)
+    order: list[int] = []
+    budget_stats: list[BudgetSearchStats] = []
+    exact = True
+    expanded = 0
+    n_signatures = 0
+    hits = 0
+    for seg in segments:
+        sub_ids = sorted(set(seg.node_ids) | set(seg.boundary_in))
+        sub, idmap = g.induced_subgraph(sub_ids, anonymize=True)
+        inv = {v: k for k, v in idmap.items()}
+        pre = tuple(sorted(idmap[b] for b in seg.boundary_in))
+        opts = ("dp_segment", pre, engine, state_quota, exact_threshold,
+                adaptive_budget)
+        plan = seg_cache.get(sub, opts)
+        if plan is None:
+            iso = seg_cache.get_canonical(sub, opts)
+            if isinstance(iso, SegmentPlan):
+                k = len(iso.result.order)
+                translated = translate_order(
+                    iso.graph, sub,
+                    list(iso.result.order) + list(iso.preplaced))
+                if translated is not None and \
+                        sorted(translated[k:]) == sorted(pre):
+                    plan = SegmentPlan(
+                        graph=sub, preplaced=pre,
+                        result=dataclasses.replace(
+                            iso.result, order=translated[:k]),
+                    )
+                    seg_cache.put(sub, opts, plan)
+        if plan is not None:
+            hits += 1
+            res = plan.result
+            searched = False
+        else:
+            searched = True
+            n_free = len(sub) - len(pre)
+            if n_free <= exact_threshold or not adaptive_budget:
+                res = dp_schedule(sub, preplaced=pre, engine=engine)
+            else:
+                try:
+                    res = dp_schedule(sub, preplaced=pre, engine=engine,
+                                      state_quota=state_quota)
+                except SearchTimeout:
+                    if on_timeout == "raise":
+                        raise
+                    # Algorithm 2 fallback: budget meta-search with quota
+                    # escalation (terminates; may capitulate to a heuristic
+                    # order, which clears the `exact` flag)
+                    res, stats = adaptive_budget_schedule(
+                        sub, state_quota=state_quota, preplaced=pre,
+                        engine=engine,
+                    )
+                    budget_stats.append(stats)
+                    if not res.exact:
+                        # meta-search capitulated to a heuristic order: a
+                        # bounded beam usually does better — keep the lower
+                        # peak (both are inexact)
+                        beam = dp_schedule(sub, preplaced=pre, engine=engine,
+                                           state_quota=state_quota,
+                                           on_quota="beam")
+                        if beam.peak_bytes < res.peak_bytes:
+                            res = beam
+            seg_cache.put(sub, opts, SegmentPlan(sub, pre, res))
+        order.extend(inv[u] for u in res.order)
+        exact = exact and res.exact
+        if searched:          # replayed cells did no search work
+            expanded += res.n_states_expanded
+            n_signatures += res.n_signatures
+    return OrderResult(
+        order=order,
+        exact=exact,
+        n_states_expanded=expanded,
+        n_signatures=n_signatures,
+        segments=segments,
+        seg_cache_hits=hits,
+        budget_stats=budget_stats,
+    )
 
 
 def schedule(
@@ -68,10 +217,14 @@ def schedule(
       inplace: with ``rewrite=True``, additionally mark in-place-eligible
         elementwise ops (:func:`~repro.core.rewriter.annotate_inplace`) so
         unary chains share one buffer end-to-end.
-      divide_and_conquer: split at single-node separators and schedule each
-        segment independently (paper Section 3.2).
-      adaptive_budget: run the Algorithm 2 soft-budget meta-search on large
-        segments instead of one unbudgeted DP.
+      divide_and_conquer: reduce the graph to the leaves of the nested
+        segment tree (:func:`repro.core.partition.partition_hierarchy`) and
+        schedule each cell independently (paper Section 3.2, hierarchical);
+        structurally identical cells are DP-scheduled once and replayed via
+        the plan cache (``SerenityResult.seg_cache_hits``).
+      adaptive_budget: large segments run the branch-and-bound DP under
+        ``state_quota`` and fall back to the Algorithm 2 soft-budget
+        meta-search on timeout.
       state_quota: deterministic stand-in for Algorithm 2's per-step
         timeout — maximum DP signatures per level before a step aborts.
       exact_threshold: segments with at most this many nodes skip the budget
@@ -114,52 +267,35 @@ def schedule(
         if inplace:
             g, report.n_inplace = annotate_inplace(g)
 
-    segments = (
-        partition(g)
-        if divide_and_conquer
-        else [Segment(node_ids=g.topo_order(), boundary_in=[])]
+    ores = schedule_order(
+        g,
+        divide_and_conquer=divide_and_conquer,
+        adaptive_budget=adaptive_budget,
+        state_quota=state_quota,
+        exact_threshold=exact_threshold,
+        engine=engine,
+        cache=pc,
     )
 
-    order: list[int] = []
-    budget_stats: list[BudgetSearchStats] = []
-    for seg in segments:
-        sub_ids = sorted(set(seg.node_ids) | set(seg.boundary_in))
-        sub, idmap = g.induced_subgraph(sub_ids)
-        inv = {v: k for k, v in idmap.items()}
-        pre = tuple(idmap[b] for b in seg.boundary_in)
-        n_free = len(sub) - len(pre)
-        if n_free <= exact_threshold or not adaptive_budget:
-            res = dp_schedule(sub, preplaced=pre, engine=engine)
-        else:
-            # Seed the meta-search with the tightest *feasible* budget any
-            # heuristic achieves (beyond-paper: the paper seeds with Kahn
-            # only).  Feasible taus can only shrink the search space.
-            tau0 = min(fn(sub, preplaced=pre).peak_bytes
-                       for fn in (kahn_schedule, BASELINES["greedy"],
-                                  BASELINES["dfs"]))
-            res, stats = adaptive_budget_schedule(
-                sub, state_quota=state_quota, preplaced=pre, tau_max=tau0,
-                engine=engine,
-            )
-            budget_stats.append(stats)
-        order.extend(inv[u] for u in res.order)
-
-    sim = simulate_schedule(g, order)
-    arena = plan_arena_best(g, order)
+    sim = simulate_schedule(g, ores.order)
+    arena = plan_arena_best(g, ores.order)
     baselines: dict[str, int] = {}
     if compute_baselines:
         for name, fn in BASELINES.items():
             baselines[name] = fn(g).peak_bytes
     result = SerenityResult(
         graph=g,
-        order=order,
+        order=ores.order,
         peak_bytes=sim.peak_bytes,
         arena=arena,
-        segments=segments,
+        segments=ores.segments,
         rewrite_report=report,
-        budget_stats=budget_stats,
+        budget_stats=ores.budget_stats,
         wall_time_s=time.perf_counter() - t0,
         baseline_peaks=baselines,
+        exact=ores.exact,
+        n_states_expanded=ores.n_states_expanded,
+        seg_cache_hits=ores.seg_cache_hits,
     )
     if pc is not None:
         pc.put(g_in, cache_opts, result)

@@ -56,6 +56,31 @@ def test_transform_with_grad():
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5)
 
 
+def test_nas_cell_sized_jaxpr_schedules_exactly():
+    """Regression gate for the beam fallback: the 45-eqn NAS-cell pattern
+    (six expand/project branches into one concat) used to exhaust the DP
+    quota and silently fall back to beam (`exact=False`, reduction 1.0).
+    With hierarchical decomposition + branch-and-bound it must schedule
+    exactly at the default quota — if this flips back to False, the
+    pruning has regressed."""
+
+    def nas_cell(x):
+        branches = []
+        for i in range(6):
+            h = jnp.tanh(x * (i + 1.0))
+            h = h @ jnp.ones((x.shape[-1], 4 * x.shape[-1]), x.dtype)
+            h = jax.nn.relu(h)
+            h = h @ jnp.ones((4 * x.shape[-1], 16), x.dtype)
+            branches.append(h)
+        return jnp.sum(jnp.concatenate(branches, -1) ** 2)
+
+    x = jnp.ones((64, 128), jnp.float32)
+    rep = analyze_fn(nas_cell, x, cache=False)
+    assert rep.n_eqns >= 40                     # the pattern actually traced
+    assert rep.exact, "NAS-cell jaxpr fell back to beam (exact=False)"
+    assert rep.optimal_peak <= rep.original_peak
+
+
 def test_memory_aware_remat_decision():
     x = jnp.ones((8, 64))
     fn_lo, dec_lo = memory_aware_remat(_wide, 10**12, x)

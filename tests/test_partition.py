@@ -21,9 +21,12 @@ import pytest
 
 from repro.core import (
     Graph,
+    PlanCache,
     dp_schedule,
     find_separators,
     partition,
+    partition_hierarchy,
+    schedule_order,
     simulate_schedule,
 )
 
@@ -133,6 +136,107 @@ def test_segment_concatenated_dp_matches_whole_graph_seeded_sweep():
         assert peak == dp_schedule(g).peak_bytes
 
 
+# ------------------------------------------------- nested segment tree
+
+def test_hierarchy_leaves_cover_every_node():
+    rng = random.Random(77)
+    for i in range(60):
+        g = random_dag(rng) if i % 2 else hourglass_dag(rng)
+        root = partition_hierarchy(g)
+        leaves = root.leaves()
+        covered = sorted(u for lf in leaves for u in lf.node_ids)
+        assert covered == list(range(len(g)))
+        # leaf boundaries reference only earlier-scheduled nodes
+        seen: set[int] = set()
+        for lf in leaves:
+            assert set(lf.boundary_in) <= seen
+            seen |= set(lf.node_ids)
+
+
+def test_hierarchy_matches_flat_partition_on_separator_chains():
+    """Flat separator cuts are maximal, so the tree's leaves partition the
+    free nodes exactly like the flat pass (DESIGN.md §8)."""
+    rng = random.Random(13)
+    for _ in range(30):
+        g = hourglass_dag(rng)
+        flat = [sorted(s.node_ids) for s in partition(g)]
+        leaves = [sorted(lf.node_ids) for lf in partition_hierarchy(g).leaves()]
+        assert leaves == flat
+
+
+def test_schedule_order_concatenates_to_flat_dp_optimum():
+    """The hierarchical scheduler (tree walk + per-cell DP + plan-cache
+    reuse) must reproduce the flat whole-graph DP peak."""
+    rng = random.Random(2003)
+    for i in range(40):
+        g = random_dag(rng, max_nodes=11) if i % 2 else hourglass_dag(rng)
+        res = schedule_order(g)
+        assert g.is_topological(res.order)
+        assert res.exact
+        assert simulate_schedule(g, res.order).peak_bytes == \
+            dp_schedule(g).peak_bytes
+
+
+def test_isomorphic_cell_reuse_on_stacked_network():
+    """A stacked repeated-cell network: every cell after the first replays
+    from the plan cache and the result still matches the flat DP."""
+    from repro.graphs import randwire_network
+
+    g = randwire_network(n_cells=4, n=8, seed=10)
+    pc = PlanCache()
+    res = schedule_order(g, cache=pc)
+    assert res.exact
+    assert res.seg_cache_hits >= 3          # cells 2..4 replayed
+    assert g.is_topological(res.order)
+    # small enough for the flat exact DP: peaks must agree
+    flat = dp_schedule(g, state_quota=400_000)
+    assert simulate_schedule(g, res.order).peak_bytes == flat.peak_bytes
+    # a second run hits every cell
+    res2 = schedule_order(g, cache=pc)
+    assert res2.seg_cache_hits == len(res2.segments)
+    assert res2.order == res.order
+
+
+def test_schedule_order_timeout_policies():
+    """on_timeout='raise' must propagate the cell timeout; the default
+    'adaptive' policy must still return a valid (possibly inexact) order."""
+    import pytest as _pytest
+
+    from repro.core import SearchTimeout
+
+    # wide fanout: every order has the same peak, levels blow past quota 3
+    specs = [dict(name="in", op="input", size_bytes=1)]
+    for i in range(12):
+        specs.append(dict(name=f"n{i}", op="op", size_bytes=1, preds=[0]))
+    g = Graph.build(specs)
+    with _pytest.raises(SearchTimeout):
+        schedule_order(g, state_quota=3, exact_threshold=0,
+                       on_timeout="raise")
+    res = schedule_order(g, state_quota=3, exact_threshold=0)
+    assert g.is_topological(res.order)
+
+
+def test_full_network_schedules_exactly_within_budget():
+    """The acceptance gate: a stacked >=200-node RandWire network schedules
+    *exactly* (no beam fallback) in well under a minute end to end."""
+    import time
+
+    from repro.core import schedule
+    from repro.graphs import randwire_network
+
+    g = randwire_network(n_cells=8, n=32)
+    assert len(g) >= 200
+    t0 = time.perf_counter()
+    res = schedule(g, cache=PlanCache(), compute_baselines=False)
+    wall = time.perf_counter() - t0
+    assert res.exact, "full network fell back from the exact DP"
+    assert wall < 60.0, f"{wall:.1f}s breaks the one-minute budget"
+    assert res.graph.is_topological(res.order)
+    assert res.seg_cache_hits > 0           # repeated cells replayed
+    assert simulate_schedule(res.graph, res.order).peak_bytes == \
+        res.peak_bytes
+
+
 # ------------------------------------------------------ hypothesis variants
 
 if HAVE_HYPOTHESIS:
@@ -165,6 +269,15 @@ if HAVE_HYPOTHESIS:
         order, peak = _segment_concat_peak(g)
         assert g.is_topological(order)
         assert peak == dp_schedule(g).peak_bytes
+
+    @given(random_dags(max_nodes=11))
+    @settings(max_examples=50, deadline=None)
+    def test_hierarchical_schedule_order_matches_whole_graph_dp(g):
+        res = schedule_order(g)
+        assert g.is_topological(res.order)
+        assert res.exact
+        assert simulate_schedule(g, res.order).peak_bytes == \
+            dp_schedule(g).peak_bytes
 
 else:
 

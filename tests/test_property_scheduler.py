@@ -51,6 +51,35 @@ def test_dp_is_optimal_on_random_dags(g):
 
 @given(random_dags())
 @settings(max_examples=60, deadline=None)
+def test_bnb_pruning_never_changes_optimal_peak(g):
+    """Dominance + incumbent + lower-bound pruning are exactness-preserving:
+    the bounded search must return the brute-force peak on both engines and
+    never expand more states than the unpruned DP."""
+    bf = brute_force_schedule(g)
+    legacy = dp_schedule(g, engine="python", bnb=False)
+    for engine in ("python", "numpy"):
+        res = dp_schedule(g, engine=engine, bnb=True)
+        assert res.peak_bytes == bf.peak_bytes == legacy.peak_bytes
+        assert res.final_bytes == legacy.final_bytes
+        assert res.n_states_expanded <= legacy.n_states_expanded
+        assert simulate_schedule(g, res.order).peak_bytes == res.peak_bytes
+
+
+@given(random_dags(max_nodes=11))
+@settings(max_examples=40, deadline=None)
+def test_hierarchical_schedule_matches_flat_dp(g):
+    """Nested-segment-tree scheduling (with in-run cell reuse) concatenates
+    to the flat whole-graph DP optimum."""
+    from repro.core import schedule_order
+
+    res = schedule_order(g)
+    assert g.is_topological(res.order)
+    assert simulate_schedule(g, res.order).peak_bytes == \
+        dp_schedule(g).peak_bytes
+
+
+@given(random_dags())
+@settings(max_examples=60, deadline=None)
 def test_heuristics_never_beat_dp(g):
     opt = dp_schedule(g).peak_bytes
     for fn in (kahn_schedule, greedy_schedule):

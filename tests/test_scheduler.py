@@ -249,6 +249,95 @@ def test_tie_break_prefers_hole_reusing_order():
         assert plan.arena_bytes == res.arena_est_bytes, engine
 
 
+# -- branch-and-bound + dominance pruning (DESIGN.md §8) ----------------------
+
+
+def test_bnb_matches_unbounded_on_random_dags():
+    """The bound layer (incumbent, lower bound, eager-move dominance) must
+    never change the optimal peak — checked against the unpruned DP and the
+    brute-force oracle, on both engines."""
+    import random
+
+    rng = random.Random(20030)
+    for _ in range(40):
+        g = _random_dag(rng, rng.randint(2, 10))
+        bf = brute_force_schedule(g)
+        legacy = dp_schedule(g, engine="python", bnb=False)
+        for engine in ("python", "numpy"):
+            res = dp_schedule(g, engine=engine, bnb=True)
+            assert res.peak_bytes == bf.peak_bytes == legacy.peak_bytes
+            assert res.final_bytes == legacy.final_bytes
+            assert res.n_states_expanded <= legacy.n_states_expanded
+            assert g.is_topological(res.order)
+            assert simulate_schedule(g, res.order).peak_bytes == res.peak_bytes
+
+
+def test_bnb_reduces_states_on_benchmark_graphs():
+    """Same peaks as the pre-bound DP, with strictly fewer expansions on
+    every paper cell (the 5x gate itself lives in bench_scheduling_time)."""
+    from repro.graphs import BENCHMARK_GRAPHS
+
+    for name, fn in BENCHMARK_GRAPHS.items():
+        g = fn()
+        new = dp_schedule(g, state_quota=400_000, bnb=True)
+        old = dp_schedule(g, state_quota=400_000, bnb=False)
+        assert new.peak_bytes == old.peak_bytes, name
+        assert new.final_bytes == old.final_bytes, name
+        assert new.n_states_expanded < old.n_states_expanded, name
+
+
+def test_eager_move_dominance_collapses_chains():
+    """Two parallel head->unary-chain branches: once a head has established
+    peak slack, every chain step is a zero-cost move and the dominance rule
+    prunes the sibling transitions, collapsing the interleaving blowup."""
+    specs = []
+    chain_len = 7
+    for b in range(2):
+        head = len(specs)
+        specs.append(dict(name=f"h{b}", op="input", size_bytes=1000))
+        prev = head
+        for i in range(chain_len):
+            specs.append(dict(name=f"b{b}c{i}", op="op", size_bytes=100,
+                              preds=[prev]))
+            prev = len(specs) - 1
+    g = Graph.build(specs)
+    legacy = dp_schedule(g, engine="python", bnb=False)
+    for engine in ("python", "numpy"):
+        res = dp_schedule(g, engine=engine, bnb=True)
+        assert res.peak_bytes == legacy.peak_bytes
+        # without dominance the two chains interleave combinatorially;
+        # with it each chain runs as a forced single path
+        assert res.n_states_expanded * 3 <= legacy.n_states_expanded
+
+
+def test_auto_engine_spills_and_matches():
+    """engine='auto' starts scalar and restarts vectorized on a wide level;
+    results must equal both fixed engines (randwire32 crosses the spill
+    threshold, randwire16 stays scalar)."""
+    from repro.graphs import randwire_graph
+
+    for n in (16, 32):
+        g = randwire_graph(seed=10, n=n)
+        auto = dp_schedule(g, state_quota=400_000, engine="auto")
+        ref = dp_schedule(g, state_quota=400_000, engine="python")
+        vec = dp_schedule(g, state_quota=400_000, engine="numpy")
+        assert (auto.peak_bytes, auto.final_bytes, auto.arena_est_bytes) == \
+            (ref.peak_bytes, ref.final_bytes, ref.arena_est_bytes)
+        assert auto.n_states_expanded == vec.n_states_expanded
+        assert g.is_topological(auto.order)
+
+
+def test_bnb_budget_below_optimal_still_raises():
+    """An explicit infeasible budget must dominate the automatic bound."""
+    g = diamond()
+    opt = dp_schedule(g).peak_bytes
+    for engine in ("python", "numpy"):
+        with pytest.raises(NoSolutionError):
+            dp_schedule(g, engine=engine, budget=opt - 1, bnb=True)
+        assert dp_schedule(g, engine=engine, budget=opt,
+                           bnb=True).peak_bytes == opt
+
+
 def test_numpy_engine_preplaced_and_alias():
     g = Graph.build([
         dict(name="x", op="input", size_bytes=7),
