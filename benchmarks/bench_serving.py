@@ -1,0 +1,148 @@
+"""Multi-tenant serving: pooled admission vs one-arena-per-request.
+
+Two sections (DESIGN.md §9):
+
+* **Co-residency on the paper's workloads** — K copies of a cell's optimal
+  arena plan co-packed by ``plan_shared_arena``; the joint extent must be
+  strictly below the sum of the standalone extents (the members' transient
+  slack is shared on the serial timeline).  Asserted.
+
+* **Serving load generator** — the same request stream driven through the
+  continuous-batching decode server twice under one byte budget: admission
+  by pooled co-residency accounting vs the naive baseline that reserves a
+  full standalone arena per request.  Reports throughput, p50/p99 request
+  latency, peak reserved bytes and admitted concurrency; asserts the
+  pooled server sustains **>= 2x** the naive baseline's concurrency.
+
+Rows land in the smoke JSON / ``BENCH_baseline.json``;
+``diff_baseline.py`` treats the latency and peak-bytes columns with the
+same >2x unit-aware tripwire as the scheduling-time rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import PlanCache, plan_shared_arena, schedule
+
+
+def _coresidency_rows(csv_rows: list, smoke: bool) -> dict:
+    from repro.graphs import BENCHMARK_GRAPHS
+
+    names = ["darts_imagenet_cell"] if smoke else \
+        ["darts_imagenet_cell", "swiftnet_cell_a", "randwire_cifar10"]
+    k = 4
+    out = {}
+    for name in names:
+        g = BENCHMARK_GRAPHS[name]()
+        res = schedule(g, cache=PlanCache())
+        t0 = time.perf_counter()
+        sh = plan_shared_arena([res.arena] * k)
+        dt = (time.perf_counter() - t0) * 1e6
+        assert sh.arena_bytes < sh.sum_member_bytes, (
+            f"{name}: co-residency found no slack to share "
+            f"({sh.arena_bytes} !< {sh.sum_member_bytes})")
+        ratio = sh.sum_member_bytes / sh.arena_bytes
+        out[name] = ratio
+        csv_rows.append((
+            f"serving/coresidency_{name}", dt,
+            f"members={k};member_arena_bytes={res.arena.arena_bytes};"
+            f"joint_arena_bytes={sh.arena_bytes};"
+            f"sum_member_bytes={sh.sum_member_bytes};"
+            f"saved_bytes={sh.saved_bytes};"
+            f"sharing_ratio={ratio:.3f};policy={sh.policy}",
+        ))
+    return out
+
+
+def _metrics_row(tag: str, dt_us: float, m: dict) -> tuple:
+    return (
+        f"serving/{tag}", dt_us,
+        f"n_served={m['n_served']};n_rejected={m['n_rejected']};"
+        f"n_tokens={m['n_tokens']};tok_per_s={m['tok_per_s']:.1f};"
+        f"p50_ms={m['p50_ms']:.1f};p99_ms={m['p99_ms']:.1f};"
+        f"max_concurrent={m['max_concurrent']};"
+        f"peak_reserved_bytes={m['peak_reserved_bytes']};"
+        f"budget_bytes={m['budget_bytes']};"
+        f"arena_bytes={m['arena_bytes']};"
+        f"persistent_bytes={m['persistent_bytes']};"
+        f"transient_bytes={m['transient_bytes']};"
+        f"warm_hits={m['warm_hits']}",
+    )
+
+
+def run(csv_rows: list, smoke: bool = False) -> dict:
+    ratios = _coresidency_rows(csv_rows, smoke)
+
+    import jax
+
+    import repro.configs as configs
+    from repro.launch.serve import (
+        plan_decode_arena,
+        run_server,
+        synth_requests,
+    )
+    from repro.models.zoo import build_model
+
+    # A vocab-heavy decode shape: the logits buffer is the classic per-step
+    # transient that dwarfs a short-context KV state — exactly the slack
+    # co-residency shares.  (The full-config ratio is even more extreme:
+    # llama3.2-1b's 128k-vocab logits are ~0.5 MB/request.)
+    cfg = dataclasses.replace(configs.smoke("llama3.2-1b"),
+                              name="llama3.2-1b-serve-bench",
+                              vocab_size=8192)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_req, prompt, gen = (8, 8, 4) if smoke else (16, 16, 8)
+    smax = prompt + gen
+    plan = plan_decode_arena(model, 1, smax)
+
+    # budget: exactly what K co-resident requests need jointly
+    k_target = 6
+    joint = plan_shared_arena([plan["plan"]] * k_target)
+    budget = joint.arena_bytes
+
+    def load(pooled: bool) -> dict:
+        reqs = synth_requests(n_req, prompt, gen, cfg.vocab_size, seed=7)
+        t0 = time.perf_counter()
+        m = run_server(model, params, reqs, smax=smax, budget_bytes=budget,
+                       pooled=pooled, warm=2)
+        m["bench_wall_s"] = time.perf_counter() - t0
+        return m
+
+    # absorb prefill/decode jit compilation before the measured runs, so
+    # the reported latencies are service time, not tracing time
+    run_server(model, params, synth_requests(1, prompt, gen,
+                                             cfg.vocab_size, seed=1),
+               smax=smax, budget_bytes=budget, pooled=True)
+    naive = load(pooled=False)
+    pooled = load(pooled=True)
+    csv_rows.append(_metrics_row("naive", naive["bench_wall_s"] * 1e6, naive))
+    csv_rows.append(_metrics_row("pooled", pooled["bench_wall_s"] * 1e6,
+                                 pooled))
+    assert naive["n_served"] == pooled["n_served"] == n_req
+    assert pooled["max_concurrent"] >= 2 * naive["max_concurrent"], (
+        f"pooled admission sustained {pooled['max_concurrent']} concurrent "
+        f"requests vs naive {naive['max_concurrent']} under the same "
+        f"{budget} byte budget — expected >= 2x")
+    assert pooled["peak_reserved_bytes"] <= budget
+    assert naive["peak_reserved_bytes"] <= budget
+
+    return {
+        "coresidency_sharing_ratios": ratios,
+        "budget_bytes": budget,
+        "naive_concurrency": naive["max_concurrent"],
+        "pooled_concurrency": pooled["max_concurrent"],
+        "concurrency_gain": pooled["max_concurrent"]
+        / max(naive["max_concurrent"], 1),
+    }
+
+
+if __name__ == "__main__":
+    rows: list = []
+    summary = run(rows, smoke=True)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(summary)

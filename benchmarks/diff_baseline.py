@@ -9,7 +9,12 @@ microseconds) are machine-dependent and exempt from exact comparison, but
 absolute durations in ``scheduling_time/`` rows are still sanity-checked:
 a search that got more than 2x slower than the baseline (above a small
 noise floor) warns — the tripwire for scheduling-time regressions the CI
-run annotates.  Metric keys present only on one side are never treated as
+run annotates.  ``serving/`` rows get the same first-class treatment:
+request-latency percentiles (``p50_ms``/``p99_ms``/``wall_s``) are
+tripwired at >2x with the unit-aware noise floor, and the load-dependent
+peak-bytes columns (``peak_reserved_bytes``) warn on a >2x regression
+instead of exact-diffing (admission timing may legitimately shift them a
+little; doubling means the pool stopped sharing).  Metric keys present only on one side are never treated as
 value regressions: a key that *disappeared* from the smoke run warns (a
 bench stopped reporting it), while a *new* column (e.g. ``realized_bytes``
 on its first appearance) is a plain note until it lands in the committed
@@ -40,6 +45,11 @@ _REL_TOL = 1e-6
 # be above the noise floor for its unit so microsecond jitter never warns
 _REGRESSION_FACTOR = 2.0
 _NOISE_FLOOR = {"s": 0.05, "ms": 50.0, "us": 50_000.0}
+# serving rows: latency keys eligible for the >2x duration tripwire (plain
+# `tok_per_s` etc. end in `_s` too, but are rates, not durations)
+_SERVING_LAT_KEY = re.compile(r"^(p\d+_(ms|s|us)|wall_s|latency_\w+)$")
+# serving rows: load-dependent byte watermarks — >2x threshold, not exact
+_SERVING_BYTES_KEY = re.compile(r"^peak_\w*bytes$")
 
 
 def _duration_unit(key: str, value: str) -> str | None:
@@ -56,10 +66,18 @@ def _duration_unit(key: str, value: str) -> str | None:
 
 
 def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
-    """True (and warn) when a scheduling_time duration regressed >2x."""
-    if not name.startswith("scheduling_time/"):
-        return False
-    if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
+    """True (and warn) when a duration metric regressed >2x.
+
+    Applies to every duration key of ``scheduling_time/`` rows and to the
+    request-latency keys (p50/p99/wall) of ``serving/`` rows.
+    """
+    if name.startswith("scheduling_time/"):
+        if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
+            return False
+    elif name.startswith("serving/"):
+        if not _SERVING_LAT_KEY.match(key):
+            return False
+    else:
         return False
     unit = _duration_unit(key, new)
     if unit is None or _duration_unit(key, old) != unit:
@@ -72,10 +90,24 @@ def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
     if fn <= _NOISE_FLOOR[unit] or fo <= 0:
         return False
     if fn > _REGRESSION_FACTOR * fo:
-        print(f"::warning::{name}: scheduling time {key} regressed "
+        kind = "latency" if name.startswith("serving/") else "scheduling time"
+        print(f"::warning::{name}: {kind} {key} regressed "
               f">{_REGRESSION_FACTOR:g}x: {old} -> {new}")
         return True
     return False
+
+
+def _check_bytes_regression(name: str, key: str, old: str, new: str) -> bool:
+    """True (and warn) when a serving byte watermark regressed >2x."""
+    try:
+        fo, fn = float(old), float(new)
+    except ValueError:
+        return False
+    if fo <= 0 or fn <= _REGRESSION_FACTOR * fo:
+        return False
+    print(f"::warning::{name}: {key} regressed >{_REGRESSION_FACTOR:g}x: "
+          f"{old} -> {new} bytes")
+    return True
 
 
 def _parse_derived(derived: str) -> dict[str, str]:
@@ -118,10 +150,15 @@ def main() -> None:
     for name in sorted(base_rows.keys() & new_rows.keys()):
         b, n = base_rows[name], new_rows[name]
         for key in sorted(b.keys() & n.keys()):
+            if name.startswith("serving/") and _SERVING_BYTES_KEY.match(key):
+                # load-dependent watermark: >2x threshold, not exact diff
+                if _check_bytes_regression(name, key, b[key], n[key]):
+                    warnings += 1
+                continue
             if not _deterministic(key) or _DURATION.match(b[key]) \
                     or _DURATION.match(n[key]):
                 # timing: exempt from exact diffing, but still tripwired
-                # against >2x scheduling-time regressions
+                # against >2x scheduling-time / serving-latency regressions
                 if _check_time_regression(name, key, b[key], n[key]):
                     warnings += 1
                 continue

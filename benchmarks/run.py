@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_scheduling_time  Fig. 13/T2  D&C + soft-budget ablation + engine/cache
   bench_roofline         (ours)      dry-run roofline table (§Roofline)
   bench_jaxpr_sched      (ours)      SERENITY-on-jaxpr liveness gains
+  bench_serving          (ours)      multi-tenant pool vs per-request arenas
 
 ``--smoke`` runs every module on tiny graph sizes with a single repetition
 (seconds, not minutes) so CI can exercise each entry point; ``--json PATH``
@@ -52,6 +53,7 @@ def main() -> None:
         bench_peak_memory,
         bench_roofline,
         bench_scheduling_time,
+        bench_serving,
     )
 
     modules = [
@@ -61,6 +63,7 @@ def main() -> None:
         bench_scheduling_time,
         bench_roofline,
         bench_jaxpr_sched,
+        bench_serving,
     ]
     if args.only:
         modules = [m for m in modules if m.__name__.endswith(args.only)]

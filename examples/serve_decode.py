@@ -1,15 +1,17 @@
-"""Batched serving example: prefill + greedy decode on the SERENITY
-arena-*realized* decode state.
+"""Multi-tenant serving example: a request queue decoding over leased,
+arena-planned KV state under one byte budget.
 
     PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
 
-The driver plans the decode-state arena with the paper's offset allocator,
-packs the initial KV/recurrent state into one buffer at the planned byte
-offsets, rebuilds the state from arena slices, and measures the realized
-footprint against the plan before decoding (see ``repro.launch.serve``,
-DESIGN.md §1/§6).  Uses the reduced (smoke) config of any assigned
-architecture so it runs on CPU; the identical driver serves the full config
-on a TPU mesh (launch/serve.py --mesh single).
+The driver plans each request's decode-state arena with the paper's offset
+allocator (KV caches pinned resident, per-step transients above), leases it
+from a budgeted ``repro.runtime.ArenaPool`` (admit / queue / reject against
+the joint co-residency extent), and continuously batches the decode across
+admitted requests — each request's state packed in its leased buffer at the
+planned byte offsets between steps (``repro.launch.serve``, DESIGN.md
+§1/§9).  Uses the reduced (smoke) config of any assigned architecture so it
+runs on CPU; the identical driver serves the full config on a TPU mesh
+(launch/serve.py --mesh single).
 """
 
 import sys

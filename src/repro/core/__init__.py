@@ -12,13 +12,25 @@ Public API:
                                                isomorphic-cell plan reuse
     rewrite_graph, annotate_inplace         -- identity rewriting + in-place
     plan_arena, plan_arena_best             -- offset allocation policies
+    plan_arena_regions                      -- resident-state + transient
+                                               two-region serving layout
+    plan_shared_arena, plan_coresidency     -- co-residency: K plans in one
+                                               buffer (multi-tenant pool)
     simulate_traffic                        -- Belady off-chip traffic model
     schedule                                -- end-to-end pipeline (Fig. 4)
     execute                                 -- run a schedule on the planned
                                                arena (realized footprint)
 """
 
-from repro.core.allocator import ArenaPlan, plan_arena, plan_arena_best
+from repro.core.allocator import (
+    ArenaPlan,
+    SharedArenaPlan,
+    plan_arena,
+    plan_arena_best,
+    plan_arena_regions,
+    plan_shared_arena,
+    resident_bytes,
+)
 from repro.core.budget import adaptive_budget_schedule
 from repro.core.executor import (
     ExecutionResult,
@@ -62,6 +74,7 @@ from repro.core.serenity import (
     OrderResult,
     SerenityResult,
     execute,
+    plan_coresidency,
     schedule,
     schedule_order,
 )
@@ -85,6 +98,7 @@ __all__ = [
     "SearchTimeout",
     "Segment",
     "SerenityResult",
+    "SharedArenaPlan",
     "SimResult",
     "TrafficResult",
     "adaptive_budget_schedule",
@@ -105,6 +119,10 @@ __all__ = [
     "partition_hierarchy",
     "plan_arena",
     "plan_arena_best",
+    "plan_arena_regions",
+    "plan_coresidency",
+    "plan_shared_arena",
+    "resident_bytes",
     "rewrite_graph",
     "run_reference",
     "schedule",

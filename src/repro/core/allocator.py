@@ -443,16 +443,34 @@ def plan_arena_best(
       ``policy`` name, and per-node byte offsets via
       :meth:`ArenaPlan.offset_of`.
     """
-    packers = [(pol, _packer_for(pol)) for pol in policies]
     items = _build_items(g, order, preplaced)
     peak = _interval_peak(items)
+    best_policy, best_water = _race_pack(items, policies, peak)
+    return ArenaPlan(
+        allocations=items,
+        arena_bytes=best_water,
+        policy=best_policy,
+        peak_bytes=peak,
+    )
+
+
+def _race_pack(
+    items: list[Allocation], policies: Sequence[str], peak: int
+) -> tuple[str, int]:
+    """Race the placement policies over ``items``; keep the tightest packing.
+
+    On return every item's ``offset`` holds the winning placement.  Stops as
+    soon as a policy matches ``peak`` (the interval lower bound — nothing
+    can beat it); falls back to the exhaustive permutation search on tiny
+    plans.  Returns ``(policy_name, watermark)``.
+    """
     best_policy: str | None = None
     best_water = 0
     best_offsets: list[int] = []
-    for pol, packer in packers:
+    for pol in policies:
         if pol == "greedy_by_size" and len(items) > _GREEDY_BY_SIZE_MAX:
             continue
-        water = packer(items)
+        water = _packer_for(pol)(items)
         if best_policy is None or water < best_water:
             best_policy, best_water = pol, water
             best_offsets = [it.offset for it in items]
@@ -465,11 +483,248 @@ def plan_arena_best(
             best_offsets = [it.offset for it in items]
     for it, off in zip(items, best_offsets):
         it.offset = off
+    return best_policy or "first_fit", best_water
+
+
+def plan_arena_regions(
+    g: Graph,
+    order: Sequence[int],
+    resident: Sequence[int],
+    preplaced: Sequence[int] = (),
+    policies: Sequence[str] = ("first_fit", "best_fit", "greedy_by_size"),
+) -> ArenaPlan:
+    """Two-region arena: ``resident`` tensors at the bottom, the rest on top.
+
+    Serving state (KV caches) must survive *between* schedule executions, so
+    its bytes can never be time-shared with the per-step transients — and a
+    leased state buffer should cover exactly the resident bytes, with the
+    transient scratch stacked above it (DESIGN.md §9).  ``resident`` node
+    ids are packed back-to-back in ``[0, P)`` (they all coexist, so the
+    cumulative layout is optimal); every other tensor is planned by the
+    usual policy race and shifted to ``[P, arena_bytes)``.
+
+    Every ``resident`` node must be a graph output (no consumers): a tensor
+    somebody reads *and frees* mid-schedule has no business being pinned.
+
+    Returns an :class:`ArenaPlan` whose ``meta``-free contract matches
+    :func:`plan_arena_best`; the resident extent is recoverable as
+    ``max(offset + size)`` over the resident allocations (==
+    ``sum(sizes)``).
+    """
+    res_set = set(resident)
+    for r in res_set:
+        if g.succs[r]:
+            raise ValueError(
+                f"resident node {r} has consumers {g.succs[r]}; only graph "
+                f"outputs (state tensors) can be pinned resident")
+    items = _build_items(g, order, preplaced)
+    res_items = [it for it in items if set(it.node_ids) & res_set]
+    for it in res_items:
+        if not set(it.node_ids) <= res_set:
+            raise ValueError(
+                f"alias chain {it.node_ids} mixes resident and transient "
+                f"members")
+    trans = [it for it in items if not (set(it.node_ids) & res_set)]
+    off = 0
+    for it in sorted(res_items, key=lambda a: a.node_ids):
+        it.offset = off
+        off += it.size
+    resident_extent = off
+    tpeak = _interval_peak(trans)
+    policy, twater = _race_pack(trans, policies, tpeak)
+    for it in trans:
+        it.offset += resident_extent
     return ArenaPlan(
         allocations=items,
-        arena_bytes=best_water,
-        policy=best_policy or "first_fit",
+        arena_bytes=resident_extent + twater,
+        policy=f"regions+{policy}",
+        peak_bytes=_interval_peak(items),
+    )
+
+
+def resident_bytes(plan: ArenaPlan) -> tuple[int, int]:
+    """(resident bytes, resident extent) of ``plan``'s persistent tensors.
+
+    A *persistent* allocation is one holding a graph output: its
+    ``t_free`` is the plan-wide maximum (``horizon + 1`` — see
+    ``_build_items``), so it survives the whole schedule.  The extent is
+    the byte span a lease buffer must cover to hold every persistent tensor
+    at its planned offset (== the bytes for a :func:`plan_arena_regions`
+    plan, where persistents pack at the bottom).
+    """
+    if not plan.allocations:
+        return 0, 0
+    mt = max(a.t_free for a in plan.allocations)
+    pers = [a for a in plan.allocations if a.t_free == mt]
+    return (sum(a.size for a in pers),
+            max(a.offset + a.size for a in pers))
+
+
+# ---------------------------------------------------------------------------
+# Co-residency: K admitted plans sharing one device buffer (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SharedArenaPlan:
+    """K member plans packed into one joint buffer.
+
+    ``members[i]`` is a re-packed copy of the i-th input plan: same
+    allocations, same lifetimes, but offsets are *absolute in the joint
+    buffer* (so ``members[i].offset_of(node)`` addresses the shared buffer
+    directly, and ``members[i].arena_bytes`` is that member's own byte
+    extent within it).  ``arena_bytes`` is the joint extent — what the
+    device reserves for all K requests together; ``sum_member_bytes`` is
+    what K standalone arenas would have reserved.
+    """
+
+    members: list[ArenaPlan]
+    arena_bytes: int             # joint extent (bytes the device reserves)
+    peak_bytes: int              # interval peak on the joint timeline
+    sum_member_bytes: int        # sum of the standalone members' extents
+    policy: str = "first_fit"
+    serialize: bool = True
+
+    @property
+    def saved_bytes(self) -> int:
+        return self.sum_member_bytes - self.arena_bytes
+
+    def fits(self, budget_bytes: int) -> bool:
+        return self.arena_bytes <= budget_bytes
+
+
+def plan_shared_arena(
+    plans: Sequence[ArenaPlan],
+    budget: int | None = None,
+    *,
+    serialize: bool = True,
+    policies: Sequence[str] = ("first_fit", "best_fit", "greedy_by_size"),
+) -> SharedArenaPlan:
+    """Overlap the non-concurrent slack of ``plans`` inside one buffer.
+
+    Each member plan packs one request's tensors over its own schedule
+    timeline; its *persistent* allocations (graph outputs — serving state
+    that must survive between steps) are live at every moment, while its
+    *transient* allocations live only inside the member's own schedule
+    window.  When the runtime executes admitted requests' steps serially
+    (one device, one stream — the pool's default), member i's transients
+    and member j's transients are never live at the same time, so they may
+    share addresses: the joint items are placed on one serial timeline
+    (member windows back-to-back, persistents spanning everything) and the
+    standard lifetime-aware packers do the rest.  The joint extent is
+    typically ``sum(persistent_i) + max-ish(transient_i)`` — strictly less
+    than ``sum(arena_bytes_i)`` whenever members have any transient slack,
+    which is the pool's headline memory win (DESIGN.md §9).
+
+    ``serialize=False`` models *batched* execution instead (every member's
+    step runs concurrently): member windows all start at time 0, so
+    cross-member sharing is disabled and the joint extent degrades to a
+    stacked layout — the accounting an execution mode that materializes all
+    members' transients at once must use.
+
+    Args:
+      plans: standalone member plans (e.g. from :func:`plan_arena_best` or
+        :func:`plan_arena_regions`).  Not mutated.
+      budget: optional byte budget; recorded via :meth:`SharedArenaPlan.fits`
+        by callers — this function never raises on overflow (admission is
+        the pool's decision, not the planner's).
+      serialize: see above.
+      policies: placement policies to race on the joint items.
+
+    Returns:
+      A :class:`SharedArenaPlan`; ``members[i]``'s offsets address the
+      joint buffer, so a member schedule can execute against the shared
+      buffer via ``execute_plan(..., arena=shared_buffer)`` unchanged.
+    """
+    del budget  # admission is the caller's decision; kept for signature docs
+    if not plans:
+        return SharedArenaPlan([], 0, 0, 0, serialize=serialize)
+    joint: list[Allocation] = []
+    owner: list[tuple[int, Allocation]] = []   # (member idx, original alloc)
+    persistent: list[Allocation] = []
+    base = 0
+    total = 0
+    for mi, plan in enumerate(plans):
+        if not plan.allocations:
+            continue
+        mt = max(a.t_free for a in plan.allocations)
+        horizon = mt - 1
+        for a in plan.allocations:
+            if a.t_free == mt:
+                ji = dataclasses.replace(a, offset=-1)   # times fixed below
+                persistent.append(ji)
+            else:
+                ji = dataclasses.replace(
+                    a,
+                    offset=-1,
+                    t_alloc=base + max(a.t_alloc, 0),
+                    t_free=base + a.t_free,
+                )
+            joint.append(ji)
+            owner.append((mi, a))
+        if serialize:
+            base += horizon + 1
+            total = base
+        else:
+            total = max(total, horizon + 1)
+    for ji in persistent:
+        ji.t_alloc = 0
+        ji.t_free = total + 1
+    pack_order = sorted(
+        range(len(joint)),
+        key=lambda i: (joint[i].t_alloc, -joint[i].size, owner[i][0],
+                       joint[i].node_ids),
+    )
+    ordered = [joint[i] for i in pack_order]
+    peak = _interval_peak(ordered)
+    policy, water = _race_pack(ordered, policies, peak)
+    sum_members = sum(p.arena_bytes for p in plans)
+    if water > sum_members:
+        # The joint race fragmented badly — fall back to a stacked layout:
+        # each member re-packed *alone* on the joint timeline (its
+        # persistents still span everything: a steady-state pool re-executes
+        # member schedules every step, so a member's transients may never
+        # reuse its own persistent bytes either), members placed
+        # back-to-back.  Kept only if actually tighter than the race.
+        race_offsets = [it.offset for it in joint]
+        by_member: dict[int, list[Allocation]] = {}
+        for (mi, _), ji in zip(owner, joint):
+            by_member.setdefault(mi, []).append(ji)
+        stacked_water = 0
+        offsets: list[tuple[Allocation, int]] = []
+        for mi in sorted(by_member):
+            items = sorted(by_member[mi],
+                           key=lambda a: (a.t_alloc, -a.size, a.node_ids))
+            _, extent = _race_pack(items, policies, _interval_peak(items))
+            offsets += [(it, stacked_water + it.offset) for it in items]
+            stacked_water += extent
+        if stacked_water < water:
+            for it, off in offsets:
+                it.offset = off
+            policy, water = "stacked", stacked_water
+        else:
+            for it, off in zip(joint, race_offsets):
+                it.offset = off
+    member_allocs: dict[int, list[Allocation]] = {i: [] for i in range(len(plans))}
+    for (mi, orig), ji in zip(owner, joint):
+        member_allocs[mi].append(
+            dataclasses.replace(orig, offset=ji.offset))
+    members = []
+    for mi, plan in enumerate(plans):
+        allocs = member_allocs[mi]
+        members.append(ArenaPlan(
+            allocations=allocs,
+            arena_bytes=max((a.offset + a.size for a in allocs), default=0),
+            policy="shared",
+            peak_bytes=plan.peak_bytes,
+        ))
+    return SharedArenaPlan(
+        members=members,
+        arena_bytes=water,
         peak_bytes=peak,
+        sum_member_bytes=sum_members,
+        policy=policy,
+        serialize=serialize,
     )
 
 

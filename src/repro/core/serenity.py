@@ -17,7 +17,12 @@ import dataclasses
 import time
 from typing import Sequence
 
-from repro.core.allocator import ArenaPlan, plan_arena_best
+from repro.core.allocator import (
+    ArenaPlan,
+    SharedArenaPlan,
+    plan_arena_best,
+    plan_shared_arena,
+)
 from repro.core.budget import BudgetSearchStats, adaptive_budget_schedule
 from repro.core.executor import ExecutionResult, ExecutorError, execute_plan
 from repro.core.graph import Graph, simulate_schedule
@@ -300,6 +305,32 @@ def schedule(
     if pc is not None:
         pc.put(g_in, cache_opts, result)
     return result
+
+
+def plan_coresidency(
+    graphs: Sequence[Graph],
+    budget: int | None = None,
+    *,
+    serialize: bool = True,
+    **schedule_kw,
+) -> tuple[SharedArenaPlan, list[SerenityResult]]:
+    """Schedule each graph, then co-plan all their arenas into one buffer.
+
+    The multi-tenant composition of the pipeline (DESIGN.md §9): each graph
+    gets its own optimal schedule and standalone arena plan via
+    :func:`schedule`, and :func:`~repro.core.allocator.plan_shared_arena`
+    overlaps the members' non-concurrent slack inside one joint buffer.
+    Each returned ``members[i]`` plan can execute against the shared buffer
+    directly (``execute_plan(res.graph, res.order, shared.members[i],
+    arena=buf)``).
+
+    Returns ``(shared_plan, per-graph SerenityResults)``; callers check
+    ``shared_plan.fits(budget)`` for admission decisions.
+    """
+    results = [schedule(g, **schedule_kw) for g in graphs]
+    shared = plan_shared_arena([r.arena for r in results], budget,
+                               serialize=serialize)
+    return shared, results
 
 
 def execute(

@@ -1,76 +1,158 @@
-"""Serving driver: batched prefill + greedy decode on a planned KV arena.
+"""Multi-tenant serving: request queue + budgeted arena pool + batched decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --requests 8 --prompt-len 32 --gen 16 --budget-mb 4
 
-SERENITY integration: before allocating the decode state, the server builds
-the serve-schedule dataflow graph (embed -> L x block -> logits per step,
-cache buffers live across the whole schedule) and runs the paper's
-linear-arena planner on it (DESIGN.md §1 "serving arena planner").  The
-plan is then *realized*, not just printed: the initial decode state is
-packed into one arena buffer at the planned byte offsets and handed to the
-decode loop as slices of that arena (JAX values are immutable, so each
-donated decode step carries the state forward from those slices), and the
-realized footprint — measured by executing the decode-state graph through
-``repro.core.executor`` — is reported against the planned bytes
-(DESIGN.md §6).
+SERENITY integration (DESIGN.md §1/§9): every request's decode state is
+arena-planned by the paper's machinery — KV caches pinned resident at the
+bottom of the plan (:func:`repro.core.allocator.plan_arena_regions`), the
+per-step transients (embed/attn/MLP activations, logits) stacked above —
+and the request then *leases* that plan from a budgeted
+:class:`repro.runtime.pool.ArenaPool`.  Admission charges the joint
+co-residency extent (:func:`repro.core.allocator.plan_shared_arena`):
+requests are admitted, queued FIFO, or rejected against one global device
+byte budget, and the admitted set's transient slack is shared, so the pool
+sustains far more concurrency than one-arena-per-request under the same
+budget (``benchmarks/bench_serving.py`` measures both).
+
+The decode loop is continuously batched: each server step advances every
+admitted request by one token, the batch composition re-forms as requests
+finish and queued requests take their bytes, and each request's KV state
+lives *packed in its leased arena buffer at the planned byte offsets*
+between steps (``pack_buffers``/``unpack_buffer``).  Two step modes:
+
+  ``serial``  (default) one jitted bsz=1 decode reused for every active
+              request, executed back-to-back — transients of distinct
+              requests are never live together, matching the pool's
+              ``overlap='serial'`` admission accounting.
+  ``vmap``    all active requests advance in one jitted+vmapped decode
+              call (per-request position vector); all members' transients
+              materialize at once, so admission must use ``overlap='none'``
+              accounting.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import Graph, kahn_schedule, plan_arena_best
-from repro.core.executor import execute_plan, pack_buffers, unpack_buffer
+from repro.core import Graph, kahn_schedule, plan_arena_regions
+from repro.core.allocator import resident_bytes
+from repro.core.executor import pack_buffers, unpack_buffer
 from repro.core.plancache import default_cache
 from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
 from repro.models.zoo import build_model
+from repro.runtime.pool import ArenaPool
 
 
-def plan_decode_arena(model, bsz: int, smax: int) -> dict:
-    """Arena-plan the decode state buffers with the SERENITY allocator.
+def _align4(n: int) -> int:
+    return -(-int(n) // 4) * 4
 
-    The plan is memoized in the content-addressed plan cache: every replica
-    serving the same (arch, batch, seq) shape — and every later request for
-    it in this process — reuses the first plan in O(graph hash).
+
+def decode_state_graph(model, bsz: int, smax: int) -> tuple[Graph, int]:
+    """The serve-schedule dataflow graph for one request's decode step.
+
+    Nodes 0..C-1 are the persistent KV-cache buffers (graph outputs: state
+    that survives between steps); above them the per-step transient chain —
+    embedding activation, per-layer attention + MLP activations, logits,
+    sampled token — each consumed by the next, so the arena planner can
+    time-share their bytes.  Returns ``(graph, n_cache_leaves)``; cache
+    node ids equal the ``jax.tree`` leaf order of ``make_cache_defs``,
+    which is what ``pack_decode_state`` relies on.
     """
     defs = model.make_cache_defs(bsz, smax)
     leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
     specs = []
-    # one graph node per persistent buffer; all live across the whole step
     for i, d in enumerate(leaves):
-        nbytes = int(np.prod(d.shape)) * np.dtype(d.dtype).itemsize
-        specs.append(dict(name=f"buf{i}", op="cache", size_bytes=nbytes,
+        nbytes = _align4(int(np.prod(d.shape)) * np.dtype(d.dtype).itemsize)
+        specs.append(dict(name=f"cache{i}", op="cache", size_bytes=nbytes,
                           preds=[]))
-    # transient per-step tensors (logits + hidden) chain off the caches
-    D, V = model.cfg.d_model, model.cfg.vocab_size
-    specs.append(dict(name="hidden", op="act", size_bytes=bsz * D * 2,
-                      preds=list(range(len(leaves)))))
-    specs.append(dict(name="logits", op="act", size_bytes=bsz * V * 4,
-                      preds=[len(specs) - 1]))
-    g = Graph.build(specs, name="decode_state")
+    cfg = model.cfg
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    prev = None
+
+    def chain(name, op, nbytes):
+        nonlocal prev
+        specs.append(dict(name=name, op=op, size_bytes=_align4(nbytes),
+                          preds=[] if prev is None else [prev]))
+        prev = len(specs) - 1
+
+    chain("embed_out", "act", bsz * D * 4)
+    for li in range(cfg.n_layers):
+        chain(f"l{li}.attn", "act", bsz * D * 4)
+        chain(f"l{li}.mlp", "act", bsz * F * 4)
+        chain(f"l{li}.out", "act", bsz * D * 4)
+    chain("logits", "act", bsz * V * 4)
+    chain("token", "act", bsz * 4)
+    return Graph.build(specs, name="decode_state"), len(leaves)
+
+
+def plan_decode_arena(model, bsz: int, smax: int) -> dict:
+    """Arena-plan one request's decode state with the SERENITY allocator.
+
+    The KV caches are pinned resident at the bottom of the arena (they
+    persist between steps, so their bytes can never be time-shared) and the
+    per-step transients are planned above them
+    (:func:`~repro.core.allocator.plan_arena_regions`).  The plan is
+    memoized in the content-addressed plan cache: every replica serving the
+    same (arch, batch, seq) shape — and every later request for it in this
+    process — reuses the first plan in O(graph hash).
+    """
+    g, n_cache = decode_state_graph(model, bsz, smax)
     pc = default_cache()
-    cache_opts = ("serve.plan_decode_arena",)
+    cache_opts = ("serve.plan_decode_arena", 2)   # 2: regions-layout schema
     out = pc.get(g, cache_opts)
     if out is None:
         order = kahn_schedule(g).order
-        plan = plan_arena_best(g, order)
-        naive = sum(s["size_bytes"] for s in specs)
+        # resident: the KV caches and the sampled token — everything the
+        # request carries between steps (the token node also keeps the
+        # logits buffer transient: it is the logits' consumer)
+        plan = plan_arena_regions(
+            g, order, resident=[*range(n_cache), len(g) - 1])
+        naive = sum(g.sizes)
+        pers, extent = resident_bytes(plan)
         out = {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
                "peak_bytes": plan.peak_bytes, "policy": plan.policy,
                "frag_ratio": plan.frag_ratio,
-               "n_buffers": len(specs), "plan": plan,
+               "persistent_bytes": pers, "resident_extent": extent,
+               "transient_bytes": plan.arena_bytes - extent,
+               "n_buffers": len(g), "n_cache": n_cache, "plan": plan,
                "graph": g, "order": order}
         pc.put(g, cache_opts, out)
     return out
+
+
+def pack_decode_state(plan: dict, cache, arena=None):
+    """Pack a decode-state pytree into (the resident region of) an arena.
+
+    The cache leaves land at their planned byte offsets; the returned uint8
+    buffer covers the plan's resident extent (the persistent region — the
+    transient region above it exists only during a step and is never
+    materialized per request).  Pass ``arena`` to reuse a leased buffer
+    (donated to the jitted pack).
+    """
+    leaves, _ = jax.tree.flatten(cache)
+    if arena is None:
+        arena = jnp.zeros(plan["resident_extent"], jnp.uint8)
+    return pack_buffers(plan["plan"], dict(enumerate(leaves)), arena=arena)
+
+
+def unpack_decode_state(plan: dict, arena, defs_like):
+    """Rebuild the decode-state pytree from its planned arena offsets."""
+    leaves, treedef = jax.tree.flatten(defs_like)
+    apl = plan["plan"]
+    rebuilt = [unpack_buffer(arena, apl, i, leaf.shape, leaf.dtype)
+               for i, leaf in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, rebuilt)
 
 
 def realize_decode_state(plan: dict, cache):
@@ -82,21 +164,284 @@ def realize_decode_state(plan: dict, cache):
     materialized at the plan's offsets rather than ad-hoc per-buffer
     allocations.  Returns (arena, rebuilt_cache).
     """
-    leaves, treedef = jax.tree.flatten(cache)
-    apl = plan["plan"]
-    arena = pack_buffers(apl, dict(enumerate(leaves)))
-    rebuilt = [unpack_buffer(arena, apl, i, leaf.shape, leaf.dtype)
-               for i, leaf in enumerate(leaves)]
-    return arena, jax.tree.unflatten(treedef, rebuilt)
+    arena = pack_decode_state(plan, cache)
+    return arena, unpack_decode_state(plan, arena, cache)
+
+
+# ---------------------------------------------------------------------------
+# Request-queue server with continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through submit -> admit -> decode."""
+
+    rid: int
+    prompt: np.ndarray               # (P,) int32 token ids
+    max_new: int
+    submit_s: float = 0.0
+    admit_s: float = 0.0
+    done_s: float = 0.0
+    tokens: list = dataclasses.field(default_factory=list)
+    rejected: bool = False
+    # runtime state while admitted
+    lease: object = None
+    arena: object = None             # leased uint8 buffer holding the KV state
+    t: int = 0                       # decode position (cache_len)
+    last_tok: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submit_s
+
+
+class DecodeServer:
+    """Continuous-batching decode server over a budgeted arena pool.
+
+    Each :meth:`step` (one scheduler tick):
+
+      1. admits queued requests the pool now has bytes for (prefill fills
+         their KV cache, which is packed into the leased arena),
+      2. advances every admitted request by one decode token — the *batch*
+         is the admitted set, re-formed every tick as requests finish,
+      3. releases finished requests' leases (their warm buffers go to the
+         pool LRU; the freed bytes admit the queue head).
+
+    Between ticks every request's KV state lives packed in its leased
+    arena buffer at the planned byte offsets.
+    """
+
+    def __init__(self, model, params, pool: ArenaPool, *, smax: int,
+                 rules=None, step_mode: str = "serial"):
+        if step_mode not in ("serial", "vmap"):
+            raise ValueError(f"unknown step_mode {step_mode!r}")
+        if step_mode == "vmap" and pool.overlap == "serial":
+            raise ValueError(
+                "step_mode='vmap' materializes every active request's "
+                "transients at once; the pool must use overlap='none' "
+                "admission accounting")
+        self.model = model
+        self.params = params
+        self.pool = pool
+        self.smax = smax
+        self.step_mode = step_mode
+        self.rules = rules
+        self._prefill = jax.jit(make_prefill_step(model, rules))
+        self._decode = jax.jit(make_decode_step(model, rules))
+        self._decode_many = None      # built lazily (jit of the vmapped step)
+        self._plan = plan_decode_arena(model, 1, smax)
+        # register our regions plan with the pool once; submits reuse the
+        # key (no per-request graph re-fingerprinting)
+        self._key, _ = pool.plan(self._plan["graph"], self._plan["order"],
+                                 plan=self._plan["plan"])
+        self._tickets: dict[int, Request] = {}
+        self.active: list[Request] = []
+        self.done: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def warm(self, n_buffers: int = 1) -> None:
+        """Startup warming: pre-plan + pre-allocate arenas for this shape."""
+        for _ in range(n_buffers):
+            self.pool.warm(self._plan["graph"], key=self._key)
+
+    def submit(self, req: Request) -> None:
+        req.submit_s = time.perf_counter()
+        # the pool holds *our* regions plan under self._key, so lease
+        # buffers, admission accounting and the state pack/unpack all
+        # address one set of offsets
+        ticket = self.pool.submit(self._plan["graph"], key=self._key)
+        if ticket.rejected:
+            req.rejected = True
+            req.done_s = req.submit_s
+            self.done.append(req)
+            return
+        self._tickets[ticket.rid] = req
+
+    def _start(self, ticket) -> None:
+        req = self._tickets.pop(ticket.rid)
+        req.admit_s = time.perf_counter()
+        req.lease = ticket.lease
+        P = len(req.prompt)
+        cache = self.model.init_cache(1, self.smax)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if self.model.cfg.is_encoder_decoder:
+            batch["frames"] = jax.random.normal(
+                jax.random.PRNGKey(req.rid), (1, P, self.model.cfg.d_model),
+                jnp.float32)
+        logits, cache = self._prefill(self.params, cache, batch)
+        req.last_tok = int(jnp.argmax(logits, -1)[0])
+        req.tokens.append(req.last_tok)
+        req.t = P
+        req.arena = pack_decode_state(self._plan, cache,
+                                      arena=ticket.lease.buffer)
+        ticket.lease.buffer = None    # ownership moved to the request
+        self.active.append(req)
+
+    # -- decode ------------------------------------------------------------
+
+    def _cache_defs(self):
+        return self.model.make_cache_defs(1, self.smax)
+
+    def _step_serial(self) -> None:
+        for req in self.active:
+            cache = unpack_decode_state(self._plan, req.arena,
+                                        self._cache_defs())
+            tok = jnp.full((1, 1), req.last_tok, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(req.t))
+            req.last_tok = int(jnp.argmax(logits, -1)[0])
+            req.tokens.append(req.last_tok)
+            req.t += 1
+            req.arena = pack_decode_state(self._plan, cache, arena=req.arena)
+
+    def _step_vmap(self) -> None:
+        if self._decode_many is None:
+            decode = make_decode_step(self.model, self.rules)
+
+            def many(params, caches, toks, ts):
+                return jax.vmap(
+                    lambda c, tok, t: decode(params, c, tok, t),
+                    in_axes=(0, 0, 0))(caches, toks, ts)
+
+            self._decode_many = jax.jit(many)
+        defs = self._cache_defs()
+        caches = [unpack_decode_state(self._plan, r.arena, defs)
+                  for r in self.active]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+        toks = jnp.asarray([[[r.last_tok]] for r in self.active], jnp.int32)
+        ts = jnp.asarray([r.t for r in self.active], jnp.int32)
+        logits, new = self._decode_many(self.params, stacked, toks, ts)
+        next_toks = np.asarray(jnp.argmax(logits, -1)).reshape(-1)
+        for i, req in enumerate(self.active):
+            req.last_tok = int(next_toks[i])
+            req.tokens.append(req.last_tok)
+            req.t += 1
+            cache_i = jax.tree.map(lambda x, i=i: x[i], new)
+            req.arena = pack_decode_state(self._plan, cache_i, arena=req.arena)
+
+    def step(self) -> int:
+        """One scheduler tick; returns the number of active requests."""
+        for ticket in self.pool.poll():
+            self._start(ticket)
+        if self.active:
+            if self.step_mode == "serial":
+                self._step_serial()
+            else:
+                self._step_vmap()
+        still = []
+        for req in self.active:
+            if len(req.tokens) >= req.max_new:
+                req.done_s = time.perf_counter()
+                req.lease.buffer = req.arena   # warm buffer back to the pool
+                req.arena = None
+                self.pool.release(req.lease)
+                self.done.append(req)
+            else:
+                still.append(req)
+        self.active = still
+        return len(self.active)
+
+    def run(self, requests: Sequence[Request], *,
+            max_steps: int = 100_000) -> dict:
+        """Drive all ``requests`` to completion; returns serving metrics."""
+        t0 = time.perf_counter()
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self.active or self._tickets) and steps < max_steps:
+            waiting = len(self._tickets)
+            if not self.step() and self._tickets and \
+                    len(self._tickets) == waiting and \
+                    not self.pool.leases and \
+                    not self.pool.pending_admissions:
+                # nothing active, nothing held or pending in the pool, and
+                # the queue did not move: it can never drain (an admission
+                # bug) — fail loudly instead of busy-spinning to max_steps
+                raise RuntimeError(
+                    f"serving stalled: {waiting} request(s) queued, none "
+                    f"active, none admissible (pool reserved "
+                    f"{self.pool.reserved_bytes} of "
+                    f"{self.pool.budget_bytes} budget bytes)")
+            steps += 1
+        jax.block_until_ready(self.params)
+        wall = time.perf_counter() - t0
+        served = [r for r in self.done if not r.rejected]
+        lat = sorted(r.latency_s for r in served) or [0.0]
+        n_tok = sum(len(r.tokens) for r in served)
+        st = self.pool.stats
+        return {
+            "n_requests": len(requests),
+            "n_served": len(served),
+            "n_rejected": sum(r.rejected for r in self.done),
+            "n_tokens": n_tok,
+            "wall_s": wall,
+            "tok_per_s": n_tok / max(wall, 1e-9),
+            "p50_ms": 1e3 * float(np.percentile(lat, 50)),
+            "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+            "steps": steps,
+            "max_concurrent": st.max_concurrent,
+            "peak_reserved_bytes": st.peak_reserved_bytes,
+            "budget_bytes": self.pool.budget_bytes,
+            "warm_hits": st.warm_hits,
+            "plan_hits": st.plan_hits,
+            "arena_bytes": self._plan["arena_bytes"],
+            "persistent_bytes": self._plan["persistent_bytes"],
+            "transient_bytes": self._plan["transient_bytes"],
+        }
+
+
+def make_pool(budget_bytes: int, *, step_mode: str = "serial",
+              pooled: bool = True, max_warm: int = 4) -> ArenaPool:
+    """Pool whose admission accounting matches the server's step mode."""
+    overlap = "serial" if (pooled and step_mode == "serial") else "none"
+    return ArenaPool(
+        budget_bytes,
+        overlap=overlap,
+        max_warm=max_warm,
+        alloc_fn=lambda n: jnp.zeros(n, jnp.uint8),
+    )
+
+
+def run_server(model, params, requests, *, smax: int, budget_bytes: int,
+               step_mode: str = "serial", pooled: bool = True,
+               rules=None, warm: int = 0) -> dict:
+    """Build a pool + server, serve ``requests``, return metrics."""
+    pool = make_pool(budget_bytes, step_mode=step_mode, pooled=pooled)
+    server = DecodeServer(model, params, pool, smax=smax, rules=rules,
+                          step_mode=step_mode)
+    if warm:
+        server.warm(warm)
+    return server.run(requests)
+
+
+def synth_requests(n: int, prompt_len: int, gen: int, vocab: int,
+                   seed: int = 0) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
+                max_new=gen)
+        for i in range(n)
+    ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--budget-mb", type=float, default=0.0,
+                    help="global arena budget; 0 = 4x one request's arena")
+    ap.add_argument("--step-mode", choices=("serial", "vmap"),
+                    default="serial")
+    ap.add_argument("--no-pool", action="store_true",
+                    help="naive one-arena-per-request admission baseline")
+    ap.add_argument("--warm", type=int, default=2,
+                    help="arenas to pre-plan/pre-allocate at startup")
     ap.add_argument("--mesh", choices=("none", "single", "multi"),
                     default="none")
     ap.add_argument("--seed", type=int, default=0)
@@ -106,22 +451,18 @@ def main() -> None:
     model = build_model(cfg)
     smax = args.prompt_len + args.gen
 
-    # ---- SERENITY arena plan for the decode state -------------------------
-    plan = plan_decode_arena(model, args.batch, smax)
+    plan = plan_decode_arena(model, 1, smax)
     pc_stats = default_cache().stats
-    print(f"[serve] decode-state arena: {plan['arena_bytes']/1e6:.2f} MB "
-          f"across {plan['n_buffers']} buffers "
-          f"(policy={plan['policy']}, "
-          f"arena/peak={plan['frag_ratio']:.3f}, "
-          f"naive sum {plan['naive_bytes']/1e6:.2f} MB; plan cache "
+    print(f"[serve] decode-state arena/request: "
+          f"{plan['arena_bytes']/1e6:.2f} MB "
+          f"({plan['persistent_bytes']/1e6:.2f} MB KV state + "
+          f"{plan['transient_bytes']/1e6:.2f} MB step transients, "
+          f"policy={plan['policy']}, naive sum "
+          f"{plan['naive_bytes']/1e6:.2f} MB; plan cache "
           f"hits={pc_stats.hits} misses={pc_stats.misses})")
-    # execute the decode-state graph against the plan: the realized
-    # footprint is measured from alloc/free events, not estimated
-    # (execute_plan is strict — it raises if realized diverges from planned)
-    ex = execute_plan(plan["graph"], plan["order"], plan["plan"], inputs=None)
-    print(f"[serve] realized arena: live-byte peak "
-          f"{ex.realized_peak_bytes/1e6:.2f} MB == planned peak, extent "
-          f"{ex.realized_arena_bytes/1e6:.2f} MB == planned arena")
+
+    budget = int(args.budget_mb * 1e6) if args.budget_mb else \
+        4 * plan["arena_bytes"]
 
     mesh = rules = None
     if args.mesh != "none":
@@ -129,46 +470,22 @@ def main() -> None:
         rules = rules_for_mesh(mesh)
 
     params = model.init(jax.random.PRNGKey(args.seed))
-    # decode state starts as slices of the planned arena buffer
-    state_arena, cache = realize_decode_state(
-        plan, model.init_cache(args.batch, smax))
-    print(f"[serve] decode state initialized from a "
-          f"{state_arena.nbytes/1e6:.2f} MB planned arena buffer")
-    prefill = jax.jit(make_prefill_step(model, rules))
-    decode = jax.jit(make_decode_step(model, rules), donate_argnums=(1,))
-
-    key = jax.random.PRNGKey(args.seed + 1)
-    batch = {
-        "tokens": jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, cfg.vocab_size
-        )
-    }
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32
-        )
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, cache, batch)
-    tok = jnp.argmax(logits, -1)[:, None]
-    t_prefill = time.perf_counter() - t0
-
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        t = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, cache, tok, t)
-        tok = jnp.argmax(logits, -1)[:, None]
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
-          f"{t_prefill*1e3:.1f} ms; {args.gen} decode steps in "
-          f"{t_decode*1e3:.1f} ms "
-          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.1f} tok/s)")
-    print(f"[serve] sample generation (first row): {np.asarray(gen)[0][:16]}")
+    reqs = synth_requests(args.requests, args.prompt_len, args.gen,
+                          cfg.vocab_size, args.seed + 1)
+    metrics = run_server(model, params, reqs, smax=smax,
+                         budget_bytes=budget, step_mode=args.step_mode,
+                         pooled=not args.no_pool, rules=rules,
+                         warm=args.warm)
+    print(f"[serve] {metrics['n_served']}/{metrics['n_requests']} requests "
+          f"({metrics['n_rejected']} rejected), {metrics['n_tokens']} tokens "
+          f"in {metrics['wall_s']:.2f} s "
+          f"({metrics['tok_per_s']:.1f} tok/s)")
+    print(f"[serve] latency p50 {metrics['p50_ms']:.0f} ms / "
+          f"p99 {metrics['p99_ms']:.0f} ms; concurrency "
+          f"{metrics['max_concurrent']} under "
+          f"{metrics['budget_bytes']/1e6:.2f} MB budget "
+          f"(peak reserved {metrics['peak_reserved_bytes']/1e6:.2f} MB; "
+          f"warm hits {metrics['warm_hits']})")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,20 @@
 from repro.runtime.fault import FaultTolerantLoop, StepTimer
+from repro.runtime.pool import (
+    ArenaPool,
+    Lease,
+    LeaseError,
+    PoolError,
+    PoolStats,
+    Ticket,
+)
 
-__all__ = ["FaultTolerantLoop", "StepTimer"]
+__all__ = [
+    "ArenaPool",
+    "FaultTolerantLoop",
+    "Lease",
+    "LeaseError",
+    "PoolError",
+    "PoolStats",
+    "StepTimer",
+    "Ticket",
+]

@@ -1,0 +1,336 @@
+"""Multi-tenant arena pool: budgeted leases of pre-planned serving arenas.
+
+One edge device, one byte budget, many concurrent requests — the regime
+where per-inference footprint is the binding constraint.  The pool turns
+the single-request plan machinery (scheduler → arena offsets) into
+admission control (DESIGN.md §9):
+
+  * every request *leases* a pre-planned arena for its (graph-hash, shape);
+    repeat shapes skip planning (plan LRU) *and* allocation (warm-buffer
+    LRU);
+  * admission charges the request's plan against the global budget via
+    :func:`~repro.core.allocator.plan_shared_arena`: with the default
+    ``overlap='serial'`` the joint extent overlaps the members'
+    non-concurrent transient slack, so K requests reserve far less than K
+    standalone arenas;
+  * a request that fits is **admitted**, one that would overflow is
+    **queued** (FIFO, head-of-line order preserved), and one whose own
+    arena can never fit the budget is **rejected** outright.
+
+The pool is a synchronous scheduler-side object: one serving loop drives
+``submit`` / ``poll`` / ``release``; it is not thread-safe by design.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+from repro.core.allocator import (
+    ArenaPlan,
+    SharedArenaPlan,
+    plan_arena_best,
+    plan_shared_arena,
+    resident_bytes,
+)
+from repro.core.graph import Graph
+from repro.core.plancache import labeled_fingerprint
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+class LeaseError(PoolError):
+    """Lease lifecycle misuse (double release, foreign lease)."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Counters over the pool's lifetime (bytes fields in bytes)."""
+
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    released: int = 0
+    plan_hits: int = 0           # planning skipped (plan LRU)
+    warm_hits: int = 0           # buffer allocation skipped (warm LRU)
+    evictions: int = 0           # warm buffers dropped by the LRU cap
+    peak_reserved_bytes: int = 0
+    max_concurrent: int = 0
+    peak_queued: int = 0
+
+
+@dataclasses.dataclass
+class Lease:
+    """An admitted request's hold on planned arena bytes.
+
+    ``plan`` is the standalone member plan (offsets local to this lease's
+    own address space); ``buffer``, when the pool allocates physical
+    buffers, covers ``resident_extent`` bytes — the persistent (state)
+    region of the plan, which is what must survive between steps.  The
+    transient region above it is accounted (and shared across members by
+    admission) but never materialized per lease.
+    """
+
+    rid: int
+    key: str
+    plan: ArenaPlan
+    arena_bytes: int             # standalone extent (naive reserve)
+    persistent_bytes: int
+    resident_extent: int
+    buffer: object | None = None
+    _released: bool = dataclasses.field(default=False, repr=False)
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Tracks one submitted request through admit / queue / reject."""
+
+    rid: int
+    key: str
+    lease: Lease | None = None
+    rejected: bool = False
+    reason: str = ""
+
+    @property
+    def admitted(self) -> bool:
+        return self.lease is not None
+
+
+class ArenaPool:
+    """Budgeted pool of pre-planned arena leases (DESIGN.md §9).
+
+    Args:
+      budget_bytes: the global device-memory budget all admitted leases
+        must fit under (joint extent, not naive sum — see ``overlap``).
+      overlap: admission accounting mode.  ``'serial'`` (default) charges
+        the :func:`plan_shared_arena` joint extent — members' transient
+        slack is shared, matching a runtime that executes admitted steps
+        back-to-back on one stream.  ``'none'`` charges the naive sum of
+        standalone extents (one arena per request) — the baseline an
+        execution mode that materializes every member's transients at once
+        must use.
+      max_warm: released lease buffers kept warm per pool (LRU); a repeat
+        shape leases without planning or allocating.
+      planner: ``planner(graph, order) -> ArenaPlan``; defaults to
+        :func:`plan_arena_best` over the graph's deterministic topo order.
+      alloc_fn: ``alloc_fn(nbytes) -> buffer`` for physical lease buffers
+        (the serving driver passes a jnp uint8 allocator).  ``None`` keeps
+        the pool accounting-only (``Lease.buffer is None``).
+    """
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        *,
+        overlap: str = "serial",
+        max_warm: int = 4,
+        max_plans: int = 64,
+        planner: Callable[[Graph, Sequence[int] | None], ArenaPlan] | None = None,
+        alloc_fn: Callable[[int], object] | None = None,
+    ):
+        if overlap not in ("serial", "none"):
+            raise PoolError(f"unknown overlap mode {overlap!r}")
+        self.budget_bytes = int(budget_bytes)
+        self.overlap = overlap
+        self.max_warm = max_warm
+        self._planner = planner
+        self._alloc_fn = alloc_fn
+        self._plans: collections.OrderedDict[str, ArenaPlan] = \
+            collections.OrderedDict()
+        self._max_plans = max_plans
+        self._warm: collections.OrderedDict[int, tuple[str, object]] = \
+            collections.OrderedDict()          # wid -> (key, buffer)
+        self._wid = itertools.count()
+        self._rid = itertools.count()
+        self._members: list[Lease] = []
+        self._queue: collections.deque[tuple[Ticket, ArenaPlan]] = \
+            collections.deque()
+        self._admitted_since_poll: list[Ticket] = []
+        self.stats = PoolStats()
+
+    # -- planning ----------------------------------------------------------
+
+    def plan(self, graph: Graph, order: Sequence[int] | None = None,
+             *, key: str | None = None,
+             plan: ArenaPlan | None = None) -> tuple[str, ArenaPlan]:
+        """Plan (or fetch) the arena for ``graph``; returns ``(key, plan)``.
+
+        ``key`` defaults to the graph's labeled content fingerprint, so two
+        byte-identical decode-state graphs share one plan.  Pass ``plan``
+        to register a pre-built plan under the key (the serving driver
+        hands in its regions-layout decode plan, so the pool's accounting,
+        the lease buffers and the state pack/unpack all address the *same*
+        offsets).
+        """
+        if key is None:
+            key = labeled_fingerprint(graph)
+        cached = self._plans.get(key)
+        if cached is not None:
+            self._plans.move_to_end(key)
+            self.stats.plan_hits += 1
+            return key, cached
+        if plan is None:
+            if self._planner is not None:
+                plan = self._planner(graph, order)
+            else:
+                plan = plan_arena_best(
+                    graph, graph.topo_order() if order is None else order)
+        self._plans[key] = plan
+        while len(self._plans) > self._max_plans:
+            self._plans.popitem(last=False)
+        return key, plan
+
+    def warm(self, graph: Graph, order: Sequence[int] | None = None,
+             *, key: str | None = None, plan: ArenaPlan | None = None) -> str:
+        """Pre-plan ``graph`` and pre-allocate a warm buffer for its shape.
+
+        Startup warming: a later ``submit`` for the same key skips both the
+        planning and the allocation.  Returns the plan key.
+        """
+        key, plan = self.plan(graph, order, key=key, plan=plan)
+        if self._alloc_fn is not None:
+            _, extent = resident_bytes(plan)
+            self._put_warm(key, self._alloc_fn(extent))
+        return key
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, graph: Graph, order: Sequence[int] | None = None,
+               *, key: str | None = None,
+               plan: ArenaPlan | None = None) -> Ticket:
+        """Request a lease: admit now, queue, or reject outright.
+
+        Returns a :class:`Ticket`; ``ticket.lease`` is set immediately when
+        the request fits the remaining budget and nothing is queued ahead
+        of it, ``ticket.rejected`` when the plan alone can never fit.
+        """
+        self.stats.submitted += 1
+        key, plan = self.plan(graph, order, key=key, plan=plan)
+        ticket = Ticket(rid=next(self._rid), key=key)
+        # reject iff the request could not be admitted even into an EMPTY
+        # pool — evaluated with the same accounting `_fits` uses, so a
+        # queued request is always eventually admissible (no queue deadlock)
+        alone = self._joint_extent([plan])
+        if alone > self.budget_bytes:
+            ticket.rejected = True
+            ticket.reason = (
+                f"plan needs {alone} bytes alone; budget is "
+                f"{self.budget_bytes}")
+            self.stats.rejected += 1
+            return ticket
+        self._queue.append((ticket, plan))
+        self.stats.peak_queued = max(self.stats.peak_queued, len(self._queue))
+        self._drain()
+        return ticket
+
+    def release(self, lease: Lease) -> None:
+        """Return a lease's bytes to the pool and drain the queue."""
+        if lease._released:
+            raise LeaseError(f"lease {lease.rid} ({lease.key}) already "
+                             f"released (double free)")
+        try:
+            self._members.remove(lease)
+        except ValueError:
+            raise LeaseError(
+                f"lease {lease.rid} ({lease.key}) is not held by this pool"
+            ) from None
+        lease._released = True
+        self.stats.released += 1
+        if lease.buffer is not None:
+            self._put_warm(lease.key, lease.buffer)
+            lease.buffer = None
+        self._drain()
+
+    def poll(self) -> list[Ticket]:
+        """Tickets newly admitted since the last poll, in FIFO order."""
+        out = self._admitted_since_poll
+        self._admitted_since_poll = []
+        return out
+
+    @property
+    def pending_admissions(self) -> int:
+        """Admitted tickets not yet collected by :meth:`poll`."""
+        return len(self._admitted_since_poll)
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def leases(self) -> tuple[Lease, ...]:
+        return tuple(self._members)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    @property
+    def reserved_bytes(self) -> int:
+        """Joint bytes the current admitted set charges to the budget."""
+        return self._joint_extent([m.plan for m in self._members])
+
+    def shared_plan(self) -> SharedArenaPlan:
+        """Co-residency plan of the currently admitted members."""
+        return plan_shared_arena([m.plan for m in self._members],
+                                 serialize=self.overlap == "serial")
+
+    def _joint_extent(self, plans: list[ArenaPlan]) -> int:
+        if not plans:
+            return 0
+        if self.overlap == "none":
+            return sum(p.arena_bytes for p in plans)
+        return plan_shared_arena(plans).arena_bytes
+
+    def _fits(self, plan: ArenaPlan) -> bool:
+        joint = self._joint_extent([m.plan for m in self._members] + [plan])
+        return joint <= self.budget_bytes
+
+    def _drain(self) -> None:
+        # FIFO with head-of-line blocking: later (smaller) requests never
+        # jump an earlier one still waiting for bytes
+        while self._queue and self._fits(self._queue[0][1]):
+            ticket, plan = self._queue.popleft()
+            self._admit(ticket, plan)
+
+    def _admit(self, ticket: Ticket, plan: ArenaPlan) -> None:
+        pbytes, extent = resident_bytes(plan)
+        buffer = self._take_warm(ticket.key)
+        if buffer is None and self._alloc_fn is not None:
+            buffer = self._alloc_fn(extent)
+        lease = Lease(
+            rid=ticket.rid,
+            key=ticket.key,
+            plan=plan,
+            arena_bytes=plan.arena_bytes,
+            persistent_bytes=pbytes,
+            resident_extent=extent,
+            buffer=buffer,
+        )
+        self._members.append(lease)
+        ticket.lease = lease
+        self._admitted_since_poll.append(ticket)
+        self.stats.admitted += 1
+        self.stats.max_concurrent = max(self.stats.max_concurrent,
+                                        len(self._members))
+        self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
+                                             self.reserved_bytes)
+
+    # -- warm-buffer LRU ---------------------------------------------------
+
+    def _put_warm(self, key: str, buffer: object) -> None:
+        if buffer is None:
+            return
+        self._warm[next(self._wid)] = (key, buffer)
+        while len(self._warm) > self.max_warm:
+            self._warm.popitem(last=False)
+            self.stats.evictions += 1
+
+    def _take_warm(self, key: str):
+        for wid, (k, buf) in self._warm.items():
+            if k == key:
+                del self._warm[wid]
+                self.stats.warm_hits += 1
+                return buf
+        return None

@@ -14,6 +14,11 @@ def pytest_addoption(parser):
         "--runslow", action="store_true", default=False,
         help="also run tests marked slow (long model/kernel/distribution runs)",
     )
+    parser.addoption(
+        "--engines", default="python,numpy,auto",
+        help="comma-separated DP engines the differential pipeline tests "
+             "cross-check (CI runs one engine per matrix job)",
+    )
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,322 @@
+"""Cross-module differential fuzzing of the full pipeline (DESIGN.md §6/§8).
+
+Every prior layer is spot-checked in isolation; this suite drives random
+DAGs through scheduler × rewriter × allocator × executor *as one pipeline*
+and cross-checks every redundant path against every other:
+
+  * ``dp_schedule``: ``bnb=True`` vs ``bnb=False`` vs brute force (on
+    graphs small enough), across the engine set (``--engines``), must all
+    report the same optimal peak — and every returned order must replay to
+    that peak through ``simulate_schedule``;
+  * with and without ``rewrite_graph`` / ``annotate_inplace``: the
+    rewritten variants go through the same agreement checks;
+  * through ``plan_arena_best`` and the arena executor: the realized
+    live-byte peak/extent must equal the plan's (``strict=True`` asserts
+    it; we re-assert explicitly), and the arena-backed outputs must be
+    bit-for-bit the plain dict-interpreter's (``run_reference``);
+  * ``plan_shared_arena`` co-residency: members of a joint plan must be
+    address-disjoint wherever their joint lifetimes overlap, and each
+    member must execute strictly against one shared buffer.
+
+A fixed 50-seed corpus runs in tier-1 under a wall-clock cap;
+hypothesis-driven variants (random seeds, deeper graphs) ride behind
+``--runslow``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Graph,
+    annotate_inplace,
+    brute_force_schedule,
+    dp_schedule,
+    execute_plan,
+    plan_arena_best,
+    plan_shared_arena,
+    rewrite_graph,
+    run_reference,
+    simulate_schedule,
+)
+
+N_SEEDS = 50
+BRUTE_MAX = 12          # brute-force oracle bound (node count)
+CORPUS_TIME_CAP_S = 240.0
+_sample_times: list[float] = []
+
+
+@pytest.fixture(scope="module")
+def engines(request) -> list[str]:
+    return [e.strip()
+            for e in request.config.getoption("--engines").split(",")
+            if e.strip()]
+
+
+# ---------------------------------------------------------------------------
+# Seeded random-DAG generator: sizes, fan-in patterns, concat/conv motifs
+# ---------------------------------------------------------------------------
+
+
+def random_pipeline_graph(seed: int, max_nodes: int = 14) -> Graph:
+    """A random executable DAG exercising every pipeline feature.
+
+    Sizes are float32-aligned (executor requirement).  Motifs are inserted
+    with calibrated probabilities so the corpus reliably contains the
+    rewriter's patterns (``concat -> conv``, ``concat -> depthconv`` with
+    aligned branch shares) and in-place-eligible elementwise chains, plus
+    plain concats, accumulating adds and multi-fan-in convs that must
+    survive rewriting untouched.
+    """
+    rng = np.random.default_rng(seed)
+    n_target = int(rng.integers(6, max_nodes + 1))
+    specs: list[dict] = []
+
+    def size() -> int:
+        return 4 * int(rng.integers(1, 33))
+
+    def pick(k: int) -> list[int]:
+        return sorted(int(x) for x in
+                      rng.choice(len(specs), size=k, replace=False))
+
+    for i in range(int(rng.integers(1, 3))):
+        specs.append(dict(name=f"in{i}", op="input", size_bytes=size(),
+                          preds=[]))
+    while len(specs) < n_target:
+        i = len(specs)
+        r = rng.random()
+        if r < 0.18 and i >= 2:
+            # concat -> conv motif (rewriter: accumulating partial convs)
+            preds = pick(int(rng.integers(2, min(3, i) + 1)))
+            csize = sum(specs[p]["size_bytes"] for p in preds)
+            specs.append(dict(name=f"cc{i}", op="concat", size_bytes=csize,
+                              preds=preds))
+            specs.append(dict(name=f"k{i}", op="conv", size_bytes=size(),
+                              preds=[len(specs) - 1]))
+        elif r < 0.30 and i >= 2:
+            # concat -> depthconv motif with equal-size branches, so the
+            # rewriter's kernel-wise shares stay float32-aligned
+            k = int(rng.integers(2, min(3, i) + 1))
+            b = size()
+            srcs = pick(k)
+            branch_ids = []
+            for j, s in enumerate(srcs):
+                specs.append(dict(name=f"b{i}.{j}", op="conv", size_bytes=b,
+                                  preds=[s]))
+                branch_ids.append(len(specs) - 1)
+            specs.append(dict(name=f"cd{i}", op="concat", size_bytes=k * b,
+                              preds=branch_ids))
+            specs.append(dict(name=f"dw{i}", op="depthconv",
+                              size_bytes=4 * k * int(rng.integers(1, 17)),
+                              preds=[len(specs) - 1]))
+        elif r < 0.52:
+            # elementwise chain link; same size => in-place eligible when
+            # the pred has no other consumer (bias toward the newest
+            # non-input node so the corpus reliably marks in-place chains)
+            non_input = [j for j in range(i)
+                         if specs[j]["op"] != "input"]
+            if non_input and rng.random() < 0.7:
+                p = non_input[-1]
+            else:
+                p = int(rng.integers(0, i))
+            op = str(rng.choice(["relu", "bn", "sigmoid", "tanh"]))
+            specs.append(dict(name=f"e{i}", op=op,
+                              size_bytes=specs[p]["size_bytes"], preds=[p]))
+        elif r < 0.66 and i >= 2:
+            # accumulating add (in-place-annotatable when one operand dies)
+            preds = pick(int(rng.integers(2, min(3, i) + 1)))
+            s = specs[preds[0]]["size_bytes"] if rng.random() < 0.7 else size()
+            specs.append(dict(name=f"a{i}", op="add", size_bytes=s,
+                              preds=preds))
+        elif r < 0.76 and i >= 2:
+            # plain concat the rewriter must leave alone (multi-consumer
+            # or no conv behind it)
+            preds = pick(int(rng.integers(2, min(3, i) + 1)))
+            csize = sum(specs[p]["size_bytes"] for p in preds)
+            specs.append(dict(name=f"pc{i}", op="concat", size_bytes=csize,
+                              preds=preds))
+        else:
+            # generic fan-in op
+            preds = pick(int(rng.integers(1, min(3, i) + 1)))
+            specs.append(dict(name=f"c{i}", op="conv", size_bytes=size(),
+                              preds=preds))
+    return Graph.build(specs, name=f"fuzz{seed}")
+
+
+def _variants(g: Graph):
+    rw, report = rewrite_graph(g)
+    ip, n_ip = annotate_inplace(rw)
+    out = [("raw", g)]
+    if report.total:
+        out.append(("rewritten", rw))
+    if n_ip:
+        out.append(("inplace", ip))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The per-sample differential check
+# ---------------------------------------------------------------------------
+
+
+def check_sample(g: Graph, engines: list[str]) -> None:
+    results = {}
+    for eng in engines:
+        for bnb in (True, False):
+            r = dp_schedule(g, engine=eng, bnb=bnb)
+            assert r.exact, (g.name, eng, bnb)
+            sim = simulate_schedule(g, r.order)
+            assert sim.peak_bytes == r.peak_bytes, (
+                f"{g.name}: engine={eng} bnb={bnb} order does not replay "
+                f"to its reported peak")
+            results[(eng, bnb)] = r
+    peaks = {r.peak_bytes for r in results.values()}
+    assert len(peaks) == 1, (
+        f"{g.name}: engines/bnb disagree on the optimal peak: "
+        f"{sorted((k, r.peak_bytes) for k, r in results.items())}")
+    peak = peaks.pop()
+    if len(g) <= BRUTE_MAX:
+        assert brute_force_schedule(g).peak_bytes == peak, (
+            f"{g.name}: DP peak {peak} != brute-force optimum")
+
+    order = results[(engines[0], True)].order
+    plan = plan_arena_best(g, order)
+    assert plan.arena_bytes >= plan.peak_bytes
+    ex = execute_plan(g, order, plan, inputs=None, strict=True)
+    assert ex.realized_peak_bytes == plan.peak_bytes
+    assert ex.realized_arena_bytes == plan.arena_bytes
+    ref = run_reference(g)
+    assert set(ex.outputs) == set(ref)
+    for name, val in ref.items():
+        np.testing.assert_array_equal(
+            np.asarray(ex.outputs[name]), np.asarray(val),
+            err_msg=f"{g.name}: arena output {name!r} diverges from the "
+                    f"dict-storage reference")
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_differential_corpus(seed, engines):
+    t0 = time.perf_counter()
+    g = random_pipeline_graph(seed)
+    for _tag, variant in _variants(g):
+        check_sample(variant, engines)
+    _sample_times.append(time.perf_counter() - t0)
+
+
+def test_corpus_exercises_every_motif():
+    """The fixed corpus must actually hit the rewriter and in-place paths."""
+    n_conv = n_dw = n_ip = 0
+    for seed in range(N_SEEDS):
+        g = random_pipeline_graph(seed)
+        rw, report = rewrite_graph(g)
+        _, marked = annotate_inplace(rw)
+        n_conv += report.n_concat_conv > 0
+        n_dw += report.n_concat_depthconv > 0
+        n_ip += marked > 0
+    assert n_conv >= 5, f"only {n_conv} corpus samples hit concat->conv"
+    assert n_dw >= 5, f"only {n_dw} corpus samples hit concat->depthconv"
+    assert n_ip >= 10, f"only {n_ip} corpus samples mark in-place ops"
+
+
+def test_corpus_under_time_cap():
+    # runs after the corpus (pytest executes a module in definition order);
+    # guards tier-1 runtime — the corpus must stay a smoke-scale suite
+    assert len(_sample_times) in (0, N_SEEDS)
+    assert sum(_sample_times) < CORPUS_TIME_CAP_S, (
+        f"differential corpus took {sum(_sample_times):.1f}s "
+        f"(cap {CORPUS_TIME_CAP_S}s)")
+
+
+# ---------------------------------------------------------------------------
+# Co-residency differential: joint plans are sound and executable
+# ---------------------------------------------------------------------------
+
+
+def _joint_windows(plans):
+    """(member, alloc, joint t_alloc, joint t_free) on the serial timeline,
+    replicating plan_shared_arena's classification."""
+    out = []
+    base = 0
+    horizons = []
+    for mi, p in enumerate(plans):
+        mt = max(a.t_free for a in p.allocations)
+        horizons.append(mt - 1)
+    total = sum(h + 1 for h in horizons)
+    for mi, p in enumerate(plans):
+        mt = max(a.t_free for a in p.allocations)
+        for a in p.allocations:
+            if a.t_free == mt:
+                out.append((mi, a, 0, total + 1))
+            else:
+                out.append((mi, a, base + max(a.t_alloc, 0), base + a.t_free))
+        base += horizons[mi] + 1
+    return out
+
+
+@pytest.mark.parametrize("seed", [3, 11, 29])
+def test_shared_arena_differential(seed, engines):
+    import jax.numpy as jnp
+
+    graphs = [random_pipeline_graph(seed + 100 * i) for i in range(3)]
+    planned = []
+    for g in graphs:
+        order = dp_schedule(g, engine=engines[0]).order
+        planned.append((g, order, plan_arena_best(g, order)))
+    shared = plan_shared_arena([p for _, _, p in planned])
+    assert shared.arena_bytes <= shared.sum_member_bytes
+    assert len(shared.members) == len(graphs)
+
+    # members' joint offsets: overlapping joint lifetimes => disjoint bytes
+    wins = _joint_windows([m for m in shared.members])
+    for i in range(len(wins)):
+        mi, a, s0, e0 = wins[i]
+        assert a.offset >= 0
+        assert a.offset + a.size <= shared.arena_bytes
+        for j in range(i + 1, len(wins)):
+            mj, b, s1, e1 = wins[j]
+            if s0 < e1 and s1 < e0:          # joint lifetimes overlap
+                disjoint = (a.offset + a.size <= b.offset
+                            or b.offset + b.size <= a.offset)
+                assert disjoint, (
+                    f"members {mi}/{mj}: allocations {a.node_ids} and "
+                    f"{b.node_ids} overlap in time and bytes")
+
+    # every member executes strictly against ONE shared buffer
+    buf = jnp.zeros(-(-shared.arena_bytes // 4), jnp.float32)
+    for (g, order, _), member in zip(planned, shared.members):
+        ref = run_reference(g)
+        ex = execute_plan(g, order, member, inputs=None, arena=buf,
+                          strict=True)
+        for name, val in ref.items():
+            np.testing.assert_array_equal(np.asarray(ex.outputs[name]),
+                                          np.asarray(val))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis variants (--runslow): random seeds, deeper graphs
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:            # hypothesis is a test extra; the fixed
+    pass                       # corpus above still runs without it
+else:
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_differential_hypothesis(seed, engines):
+        g = random_pipeline_graph(seed)
+        for _tag, variant in _variants(g):
+            check_sample(variant, engines)
+
+    @pytest.mark.slow
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_differential_hypothesis_deep(seed, engines):
+        g = random_pipeline_graph(seed, max_nodes=22)
+        check_sample(g, engines)

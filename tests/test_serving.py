@@ -1,0 +1,352 @@
+"""Direct tests for the serving stack: plan_decode_arena, decode-state
+pack/unpack, the budgeted ArenaPool, and the continuous-batching server.
+
+`launch/serve.py` previously had no dedicated test file; everything here is
+tier-1 (tiny smoke configs, a handful of tokens).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import Graph, plan_shared_arena
+from repro.core.allocator import resident_bytes
+from repro.runtime.pool import ArenaPool, LeaseError, PoolError
+
+
+# ---------------------------------------------------------------------------
+# Synthetic decode-state-shaped graphs (no jax needed for pool tests)
+# ---------------------------------------------------------------------------
+
+
+def state_graph(n_cache: int = 3, cache_bytes: int = 400,
+                transient_bytes: int = 1200, name: str = "state") -> Graph:
+    """``n_cache`` persistent buffers + a two-node transient chain."""
+    specs = [dict(name=f"s{i}", op="cache", size_bytes=cache_bytes, preds=[])
+             for i in range(n_cache)]
+    specs.append(dict(name="h", op="act", size_bytes=transient_bytes // 2,
+                      preds=[]))
+    specs.append(dict(name="l", op="act", size_bytes=transient_bytes,
+                      preds=[len(specs) - 1]))
+    specs.append(dict(name="tok", op="act", size_bytes=4,
+                      preds=[len(specs) - 1]))
+    return Graph.build(specs, name=name)
+
+
+# ---------------------------------------------------------------------------
+# ArenaPool: admission, queueing, LRU, lease lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestArenaPool:
+    def test_admission_at_exactly_budget(self):
+        g = state_graph()
+        probe = ArenaPool(1 << 40)
+        probe.submit(g)
+        probe.submit(g)
+        exactly_two = probe.reserved_bytes     # joint extent of two members
+        pool = ArenaPool(exactly_two)
+        assert pool.submit(g).admitted
+        assert pool.submit(g).admitted         # exactly-budget: admits
+        assert pool.reserved_bytes == exactly_two
+        # one byte less: the second member must queue (it fits an empty
+        # pool, so it is queued — not rejected — and drains on release)
+        tight = ArenaPool(exactly_two - 1)
+        t1, t2 = tight.submit(g), tight.submit(g)
+        assert t1.admitted
+        assert not t2.admitted and not t2.rejected
+        assert tight.queue_len == 1
+
+    def test_reject_when_plan_can_never_fit(self):
+        pool = ArenaPool(16)
+        t = pool.submit(state_graph())
+        assert t.rejected and "budget" in t.reason
+        assert pool.stats.rejected == 1 and pool.queue_len == 0
+
+    def test_queue_drains_fifo(self):
+        g = state_graph()
+        probe = ArenaPool(1 << 40)
+        probe.submit(g)
+        probe.submit(g)
+        per_two = probe.reserved_bytes     # joint extent of two members
+        pool = ArenaPool(per_two)
+        tickets = [pool.submit(g) for _ in range(5)]
+        admitted = [t.admitted for t in tickets]
+        assert admitted == [True, True, False, False, False]
+        pool.poll()
+        order = []
+        while any(not t.admitted for t in tickets):
+            lease = next(t.lease for t in tickets if t.admitted
+                         and t.lease in pool.leases)
+            pool.release(lease)
+            order += [t.rid for t in pool.poll()]
+        # FIFO: rids admitted strictly in submission order
+        assert order == sorted(order)
+
+    def test_head_of_line_blocking(self):
+        big = state_graph(n_cache=8, name="big")
+        small = state_graph(n_cache=1, name="small")
+        probe = ArenaPool(1 << 40)
+        big_alone = probe._joint_extent([probe.plan(big)[1]])
+        # budget fits (big) alone, or (small + small), but not (small + big)
+        pool = ArenaPool(big_alone)
+        first_small = pool.submit(small)
+        assert first_small.admitted
+        t_big = pool.submit(big)       # fits an empty pool: queues, no reject
+        assert not t_big.rejected and not t_big.admitted
+        t_small2 = pool.submit(small)  # would fit right now, but the queued
+        assert not t_small2.admitted   # big head must not be jumped
+        pool.release(first_small.lease)
+        assert t_big.admitted          # head admitted first...
+        assert not t_small2.admitted   # ...and small2 still waits behind it
+        pool.release(t_big.lease)
+        assert t_small2.admitted
+
+    def test_reject_consistent_with_admission_accounting(self):
+        # the reject predicate must use the same accounting as admission:
+        # a queued request is always admissible into an empty pool, in both
+        # overlap modes (otherwise the queue deadlocks behind it)
+        g = state_graph()
+        for overlap in ("serial", "none"):
+            probe = ArenaPool(1 << 40, overlap=overlap)
+            alone = probe._joint_extent([probe.plan(g)[1]])
+            fits = ArenaPool(alone, overlap=overlap)
+            assert fits.submit(g).admitted
+            never = ArenaPool(alone - 1, overlap=overlap)
+            t1 = never.submit(g)
+            t2 = never.submit(g)
+            assert t1.rejected and t2.rejected
+            assert never.queue_len == 0
+
+    def test_lease_double_free_raises(self):
+        pool = ArenaPool(1 << 40)
+        t = pool.submit(state_graph())
+        pool.release(t.lease)
+        with pytest.raises(LeaseError, match="double free"):
+            pool.release(t.lease)
+
+    def test_foreign_lease_raises(self):
+        pool_a = ArenaPool(1 << 40)
+        pool_b = ArenaPool(1 << 40)
+        t = pool_a.submit(state_graph())
+        with pytest.raises(LeaseError):
+            pool_b.release(t.lease)
+
+    def test_plan_lru_and_warm_buffer_lru(self):
+        alloc_log = []
+
+        def alloc(n):
+            alloc_log.append(n)
+            return bytearray(n)
+
+        pool = ArenaPool(1 << 40, max_warm=2, alloc_fn=alloc)
+        g = state_graph()
+        t1 = pool.submit(g)
+        assert pool.stats.plan_hits == 0 and len(alloc_log) == 1
+        pool.release(t1.lease)
+        t2 = pool.submit(g)            # plan AND buffer reused
+        assert pool.stats.plan_hits == 1
+        assert pool.stats.warm_hits == 1
+        assert len(alloc_log) == 1
+        pool.release(t2.lease)
+        # eviction: warm capacity 2, three distinct shapes released
+        for i in range(3):
+            t = pool.submit(state_graph(cache_bytes=404 + 4 * i,
+                                        name=f"shape{i}"))
+            pool.release(t.lease)
+        assert pool.stats.evictions >= 1
+
+    def test_warm_skips_planning_and_allocation(self):
+        allocs = []
+        pool = ArenaPool(1 << 40, alloc_fn=lambda n: allocs.append(n)
+                         or bytearray(n))
+        g = state_graph()
+        pool.warm(g)
+        n_allocs = len(allocs)
+        t = pool.submit(g)
+        assert t.admitted
+        assert pool.stats.plan_hits == 1       # planning skipped
+        assert pool.stats.warm_hits == 1       # allocation skipped
+        assert len(allocs) == n_allocs
+
+    def test_lease_buffer_covers_resident_extent(self):
+        pool = ArenaPool(1 << 40, alloc_fn=lambda n: bytearray(n))
+        t = pool.submit(state_graph())
+        lease = t.lease
+        pbytes, extent = resident_bytes(lease.plan)
+        assert lease.persistent_bytes == pbytes == 3 * 400 + 4
+        assert len(lease.buffer) == extent == lease.resident_extent
+
+    def test_overlap_modes(self):
+        g = state_graph()
+        serial = ArenaPool(1 << 40)
+        naive = ArenaPool(1 << 40, overlap="none")
+        for _ in range(3):
+            serial.submit(g)
+            naive.submit(g)
+        # serial shares the transient slack; naive stacks full arenas
+        assert serial.reserved_bytes < naive.reserved_bytes
+        sh = serial.shared_plan()
+        assert sh.arena_bytes == serial.reserved_bytes
+        assert naive.reserved_bytes == 3 * naive.leases[0].arena_bytes
+        with pytest.raises(PoolError):
+            ArenaPool(1, overlap="bogus")
+
+
+# ---------------------------------------------------------------------------
+# plan_decode_arena + decode-state pack/unpack (jax/model-based)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    jax = pytest.importorskip("jax")
+    import repro.configs as configs
+    from repro.models.zoo import build_model
+
+    cfg = configs.smoke("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestPlanDecodeArena:
+    def test_plan_shape_and_regions_layout(self, smoke_model):
+        _, model, _ = smoke_model
+        from repro.launch.serve import plan_decode_arena
+
+        plan = plan_decode_arena(model, 1, 8)
+        assert plan["policy"].startswith("regions+")
+        assert plan["persistent_bytes"] + plan["transient_bytes"] \
+            == plan["arena_bytes"]
+        assert plan["arena_bytes"] < plan["naive_bytes"]
+        # caches pinned at the bottom: every cache offset < resident extent
+        apl = plan["plan"]
+        for i in range(plan["n_cache"]):
+            assert apl.offset_of(i) + plan["graph"].sizes[i] \
+                <= plan["resident_extent"]
+        # transients live strictly above the resident region (the final
+        # token node is resident state too — it feeds the next step)
+        for nid in range(plan["n_cache"], len(plan["graph"]) - 1):
+            assert apl.offset_of(nid) >= plan["resident_extent"]
+
+    def test_plan_cache_hit(self, smoke_model):
+        _, model, _ = smoke_model
+        from repro.core.plancache import default_cache
+        from repro.launch.serve import plan_decode_arena
+
+        p1 = plan_decode_arena(model, 1, 16)
+        before = default_cache().stats.hits
+        p2 = plan_decode_arena(model, 1, 16)
+        assert default_cache().stats.hits == before + 1
+        assert p2["plan"] is p1["plan"]       # zero-copy replay
+        p3 = plan_decode_arena(model, 1, 24)  # different shape: new plan
+        assert p3["arena_bytes"] != p1["arena_bytes"]
+
+    def test_pack_unpack_round_trip(self, smoke_model):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+
+        _, model, _ = smoke_model
+        from repro.launch.serve import (
+            pack_decode_state,
+            plan_decode_arena,
+            realize_decode_state,
+            unpack_decode_state,
+        )
+
+        smax = 8
+        plan = plan_decode_arena(model, 1, smax)
+        cache = model.init_cache(1, smax)
+        # fill with recognizable values
+        key = jax.random.PRNGKey(42)
+        cache = jax.tree.map(
+            lambda x: jax.random.normal(key, x.shape, jnp.float32
+                                        ).astype(x.dtype), cache)
+        arena, rebuilt = realize_decode_state(plan, cache)
+        assert arena.dtype == jnp.uint8
+        assert arena.shape[0] == plan["resident_extent"]
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # a second pack into the same (donated) buffer round-trips too
+        arena2 = pack_decode_state(plan, rebuilt, arena=arena)
+        again = unpack_decode_state(plan, arena2, cache)
+        for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(again)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_decode_plan_coresidency_beats_sum(self, smoke_model):
+        _, model, _ = smoke_model
+        from repro.launch.serve import plan_decode_arena
+
+        plan = plan_decode_arena(model, 1, 8)
+        sh = plan_shared_arena([plan["plan"]] * 4)
+        assert sh.arena_bytes < sh.sum_member_bytes
+        # joint ~= K * persistent + shared transient overlay
+        assert sh.arena_bytes >= 4 * plan["persistent_bytes"]
+        assert sh.arena_bytes <= 4 * plan["persistent_bytes"] \
+            + 4 * plan["transient_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# The continuous-batching server
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeServer:
+    GEN = 3
+    PROMPT = 4
+
+    def _run(self, smoke_model, n_req, budget_factor, step_mode="serial",
+             pooled=True):
+        _, model, params = smoke_model
+        from repro.launch.serve import (
+            plan_decode_arena,
+            run_server,
+            synth_requests,
+        )
+
+        smax = self.PROMPT + self.GEN
+        plan = plan_decode_arena(model, 1, smax)
+        budget = int(budget_factor * plan["arena_bytes"])
+        reqs = synth_requests(n_req, self.PROMPT, self.GEN,
+                              model.cfg.vocab_size, seed=3)
+        m = run_server(model, params, reqs, smax=smax, budget_bytes=budget,
+                       step_mode=step_mode, pooled=pooled, warm=1)
+        return reqs, m
+
+    def test_all_requests_complete(self, smoke_model):
+        reqs, m = self._run(smoke_model, n_req=4, budget_factor=10)
+        assert m["n_served"] == 4 and m["n_rejected"] == 0
+        for r in reqs:
+            assert len(r.tokens) == self.GEN
+            assert r.done_s >= r.submit_s
+        assert m["n_tokens"] == 4 * self.GEN
+
+    def test_tight_budget_queues_and_completes(self, smoke_model):
+        reqs, m = self._run(smoke_model, n_req=4, budget_factor=1.0)
+        assert m["n_served"] == 4
+        assert m["max_concurrent"] < 4      # someone had to wait
+        assert m["peak_reserved_bytes"] <= m["budget_bytes"]
+
+    def test_vmap_mode_matches_serial(self, smoke_model):
+        reqs_s, _ = self._run(smoke_model, n_req=3, budget_factor=10,
+                              step_mode="serial")
+        reqs_v, _ = self._run(smoke_model, n_req=3, budget_factor=10,
+                              step_mode="vmap")
+        assert [r.tokens for r in reqs_s] == [r.tokens for r in reqs_v]
+
+    def test_vmap_requires_naive_accounting(self, smoke_model):
+        _, model, params = smoke_model
+        from repro.launch.serve import DecodeServer, make_pool
+
+        pool = make_pool(1 << 30, step_mode="serial", pooled=True)
+        with pytest.raises(ValueError, match="overlap='none'"):
+            DecodeServer(model, params, pool, smax=8, step_mode="vmap")
+
+    def test_pooled_concurrency_beats_naive(self, smoke_model):
+        _, m_naive = self._run(smoke_model, n_req=5, budget_factor=1.5,
+                               pooled=False)
+        _, m_pool = self._run(smoke_model, n_req=5, budget_factor=1.5,
+                              pooled=True)
+        assert m_pool["max_concurrent"] > m_naive["max_concurrent"]
