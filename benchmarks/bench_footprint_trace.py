@@ -6,9 +6,10 @@ from __future__ import annotations
 import time
 
 from repro.core import (
+    PlanConfig,
     kahn_schedule,
+    plan,
     plan_arena,
-    schedule,
     simulate_schedule,
 )
 from repro.graphs import swiftnet_cell
@@ -20,10 +21,10 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     t0 = time.perf_counter()
     # cache=False: this row times cold scheduling — an earlier bench module
     # may already have primed the process-wide plan cache with this graph
-    base = schedule(g, rewrite=False, state_quota=4000,
-                    compute_baselines=False, cache=False)
-    rew = schedule(g, rewrite=True, state_quota=4000,
-                   compute_baselines=False, cache=False)
+    base = plan(g, PlanConfig(rewrite=False, state_quota=4000,
+                              compute_baselines=False), cache=False)
+    rew = plan(g, PlanConfig(rewrite=True, state_quota=4000,
+                             compute_baselines=False), cache=False)
     kahn = kahn_schedule(g)
     dt = (time.perf_counter() - t0) * 1e6
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import kahn_schedule, schedule, simulate_traffic
+from repro.core import PlanConfig, kahn_schedule, plan, simulate_traffic
 from repro.graphs import BENCHMARK_GRAPHS
 
 CAPS_KB = (64, 128, 192, 256, 320, 448, 640, 1024, 2048, 4096)
@@ -26,8 +26,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     for name, fn in graphs:
         g = fn()
         kahn = kahn_schedule(g)
-        ser = schedule(g, rewrite=True, state_quota=4000,
-                       compute_baselines=False)
+        ser = plan(g, PlanConfig(rewrite=True, state_quota=4000,
+                                 compute_baselines=False))
         t0 = time.perf_counter()
         rows = []
         for cap in caps:

@@ -16,6 +16,13 @@ actually executing the rewritten schedule against the planned arena
 (``repro.core.executor``); asserted equal to ``peak_bytes``, so the
 reported footprint is what the device observes, not an estimate
 (DESIGN.md §6).
+
+PR 6 additions: all planning goes through ``plan(g, PlanConfig(...))``,
+and the ``pareto_*`` rows trace the recomputation frontier (DESIGN.md
+§10): for each randwire cell, the peaks reachable by cloning cheap
+producers under a FLOPs budget, as ``flops_ratio:peak_bytes`` points.
+``best_peak`` must sit at or below the exact no-recompute optimum — the
+rows are deterministic, so any drift trips ``diff_baseline.py``.
 """
 
 from __future__ import annotations
@@ -24,11 +31,12 @@ import time
 
 from repro.core import (
     PlanCache,
+    PlanConfig,
     execute_plan,
     kahn_schedule,
+    plan,
     plan_arena,
     plan_arena_best,
-    schedule,
 )
 from repro.graphs import BENCHMARK_GRAPHS, darts_network, randwire_network
 
@@ -42,8 +50,10 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         g = fn()
         t0 = time.perf_counter()
         # cache=False: the row's us_per_call times cold scheduling
-        base = schedule(g, rewrite=False, state_quota=4000, cache=False)
-        rew = schedule(g, rewrite=True, state_quota=4000, cache=False)
+        base = plan(g, PlanConfig(rewrite=False, state_quota=4000),
+                    cache=False)
+        rew = plan(g, PlanConfig(rewrite=True, state_quota=4000),
+                   cache=False)
         dt = (time.perf_counter() - t0) * 1e6
         kahn_peak = base.baseline_peaks["kahn"]
         kahn_arena = plan_arena_best(g, kahn_schedule(g).order).arena_bytes
@@ -91,7 +101,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     for name, fn in nets:
         g = fn()
         t0 = time.perf_counter()
-        rew = schedule(g, rewrite=True, cache=PlanCache())
+        rew = plan(g, PlanConfig(rewrite=True), cache=PlanCache())
         dt = (time.perf_counter() - t0) * 1e6
         assert rew.exact, f"{name}: full network fell back from the exact DP"
         kahn_peak = rew.baseline_peaks["kahn"]
@@ -107,6 +117,33 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             f"arena_peak_ratio={rew.arena.frag_ratio:.4f};"
             f"policy={rew.arena.policy};"
             f"seg_cache_hits={rew.seg_cache_hits};exact={int(rew.exact)}",
+        ))
+
+    # recomputation Pareto rows (PR 6): the peak-vs-FLOPs frontier on the
+    # randwire cells, where cloning cheap multi-consumer producers buys
+    # peak below the exact no-recompute optimum.  smoke bounds the beam
+    # rounds so CI stays fast; the frontier points it does reach are
+    # prefixes of the full run's and stay deterministic either way.
+    recomp = [("randwire_cifar10", 1), ("randwire_cifar100", 3)] if smoke \
+        else [("randwire_cifar10", 6), ("randwire_cifar100", 6)]
+    for name, rounds in recomp:
+        g = BENCHMARK_GRAPHS[name]()
+        t0 = time.perf_counter()
+        res = plan(g, PlanConfig(rewrite=True, recompute=True,
+                                 flops_budget=1.3, recompute_rounds=rounds,
+                                 state_quota=4000), cache=False)
+        dt = (time.perf_counter() - t0) * 1e6
+        rr = res.recompute_report
+        frontier = "|".join(f"{fr:.3f}x:{pk}" for fr, pk, _ in rr.frontier)
+        ex = execute_plan(res.graph, res.order, res.arena, inputs=None)
+        assert res.peak_bytes <= rr.base_peak_bytes, (
+            f"{name}: recompute plan worse than its own base")
+        csv_rows.append((
+            f"peak_memory/pareto_{name}", dt,
+            f"base_peak={rr.base_peak_bytes};best_peak={res.peak_bytes};"
+            f"flops_ratio={rr.flops_ratio:.3f};n_clones={rr.n_clones};"
+            f"frontier={frontier};"
+            f"realized_bytes={ex.realized_peak_bytes}",
         ))
 
     gmean = lambda xs: (

@@ -31,11 +31,12 @@ import time
 from repro.core import (
     Graph,
     PlanCache,
+    PlanConfig,
     SearchTimeout,
     dp_schedule,
     kahn_schedule,
+    plan,
     plan_arena_best,
-    schedule,
 )
 from repro.core.allocator import _plan_arena_reference
 from repro.graphs import (
@@ -158,8 +159,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     ]
     for nname, gn in nets:
         pc = PlanCache()
-        res, dt = _time(lambda: schedule(gn, cache=pc,
-                                         compute_baselines=False))
+        res, dt = _time(lambda: plan(
+            gn, PlanConfig(compute_baselines=False), cache=pc))
         assert res.exact, f"{nname}: beam/heuristic fallback in full network"
         assert dt < 60.0, f"{nname}: {dt:.1f}s breaks the one-minute budget"
         results[f"fullnet_{nname}"] = f"{dt:.2f}s"
@@ -174,8 +175,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
 
     # --- plan cache: cold pipeline vs warm content-addressed hit ----------
     pc = PlanCache()
-    cold_res, t_cold = _time(lambda: schedule(gw, cache=pc))
-    warm_res, t_warm = _best_of(lambda: schedule(gw, cache=pc), 5)
+    cold_res, t_cold = _time(lambda: plan(gw, cache=pc))
+    warm_res, t_warm = _best_of(lambda: plan(gw, cache=pc), 5)
     assert warm_res.order == cold_res.order
     cache_speedup = t_cold / max(t_warm, 1e-12)
     results["cache_speedup"] = f"{cache_speedup:.0f}x"
@@ -251,24 +252,22 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         ablation["dp_only"] = "N/A(quota)"
 
     # (1)+(2) divide and conquer, exact per segment
-    _, dt = _time(lambda: schedule(
-        g, rewrite=False, adaptive_budget=False, state_quota=None,
-        compute_baselines=False, exact_threshold=10**9, cache=False,
-    ))
+    _, dt = _time(lambda: plan(g, PlanConfig(
+        rewrite=False, adaptive_budget=False, state_quota=None,
+        compute_baselines=False, exact_threshold=10**9,
+    ), cache=False))
     ablation["dp_dc"] = f"{dt:.2f}s"
 
     # (1)+(2)+(3) + budgeting
-    _, dt = _time(lambda: schedule(
-        g, rewrite=False, state_quota=4000, compute_baselines=False,
-        cache=False,
-    ))
+    _, dt = _time(lambda: plan(g, PlanConfig(
+        rewrite=False, state_quota=4000, compute_baselines=False,
+    ), cache=False))
     ablation["dp_dc_budget"] = f"{dt:.2f}s"
 
     # with rewriting (more nodes, paper: 7.2h -> 111.9s)
-    _, dt = _time(lambda: schedule(
-        g, rewrite=True, state_quota=4000, compute_baselines=False,
-        cache=False,
-    ))
+    _, dt = _time(lambda: plan(g, PlanConfig(
+        rewrite=True, state_quota=4000, compute_baselines=False,
+    ), cache=False))
     ablation["dp_dc_budget_rw"] = f"{dt:.2f}s"
 
     csv_rows.append((
@@ -282,10 +281,9 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         graphs = graphs[:2]
     for name, fn in graphs:
         gg = fn()
-        res, dt = _time(lambda: schedule(
-            gg, rewrite=True, state_quota=4000, compute_baselines=False,
-            cache=False,
-        ))
+        res, dt = _time(lambda: plan(gg, PlanConfig(
+            rewrite=True, state_quota=4000, compute_baselines=False,
+        ), cache=False))
         csv_rows.append((
             f"scheduling_time/{name}", dt * 1e6,
             f"seconds={dt:.3f};nodes={len(res.graph)}",

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.core import PlanCache, plan_shared_arena, schedule
+from repro.core import PlanCache, plan, plan_shared_arena
 
 
 def _coresidency_rows(csv_rows: list, smoke: bool) -> dict:
@@ -36,7 +36,7 @@ def _coresidency_rows(csv_rows: list, smoke: bool) -> dict:
     out = {}
     for name in names:
         g = BENCHMARK_GRAPHS[name]()
-        res = schedule(g, cache=PlanCache())
+        res = plan(g, cache=PlanCache())
         t0 = time.perf_counter()
         sh = plan_shared_arena([res.arena] * k)
         dt = (time.perf_counter() - t0) * 1e6

@@ -12,7 +12,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import execute, schedule
+from repro.core import PlanConfig, execute, plan
 from repro.core.jax_bridge import serenity_transform
 from repro.graphs import swiftnet_cell
 
@@ -20,8 +20,8 @@ from repro.graphs import swiftnet_cell
 def main() -> None:
     # -- 1/2: the paper's pipeline on an edge-style NAS cell ----------------
     g = swiftnet_cell("A")
-    plain = schedule(g, rewrite=False)
-    rew = schedule(g, rewrite=True)
+    plain = plan(g, PlanConfig(rewrite=False))
+    rew = plan(g, PlanConfig(rewrite=True))
     kahn = plain.baseline_peaks["kahn"]
     print(f"SwiftNet cell A ({len(g)} nodes)")
     print(f"  TFLite-order peak : {kahn/1024:8.1f} KB")

@@ -5,14 +5,14 @@ traffic sweep (Figs. 8, 10, 11).
     PYTHONPATH=src python examples/schedule_edge_network.py
 """
 
-from repro.core import schedule, simulate_traffic
+from repro.core import PlanConfig, plan, simulate_traffic
 from repro.graphs import BENCHMARK_GRAPHS
 
 
 def main() -> None:
     for name, fn in BENCHMARK_GRAPHS.items():
         g = fn()
-        res = schedule(g, rewrite=True, state_quota=4000)
+        res = plan(g, PlanConfig(rewrite=True, state_quota=4000))
         kahn = res.baseline_peaks["kahn"]
         print(f"\n=== {name} ({len(g)} nodes -> {len(res.graph)} after "
               f"rewriting, {len(res.segments)} segments)")

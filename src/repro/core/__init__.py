@@ -8,18 +8,22 @@ Public API:
     adaptive_budget_schedule                -- Algorithm 2
     partition, partition_hierarchy          -- divide & conquer (flat and
     find_separators                            nested segment tree)
-    schedule_order                          -- hierarchical exact order with
-                                               isomorphic-cell plan reuse
+    plan, PlanConfig, Plan                  -- THE planning entry point:
+                                               rewrite [+ recompute] + order
+                                               + arena in one call (Fig. 4)
     rewrite_graph, annotate_inplace         -- identity rewriting + in-place
+    rematerialize                           -- recompute-clone expansion
+                                               (peak-vs-FLOPs frontier)
     plan_arena, plan_arena_best             -- offset allocation policies
     plan_arena_regions                      -- resident-state + transient
                                                two-region serving layout
     plan_shared_arena, plan_coresidency     -- co-residency: K plans in one
                                                buffer (multi-tenant pool)
     simulate_traffic                        -- Belady off-chip traffic model
-    schedule                                -- end-to-end pipeline (Fig. 4)
     execute                                 -- run a schedule on the planned
                                                arena (realized footprint)
+    schedule, schedule_order                -- deprecated kwarg shims onto
+                                               plan()/PlanConfig
 """
 
 from repro.core.allocator import (
@@ -62,7 +66,16 @@ from repro.core.plancache import (
     translate_order,
     wl_colors,
 )
-from repro.core.rewriter import RewriteReport, annotate_inplace, rewrite_graph
+from repro.core.rewriter import (
+    RecomputeReport,
+    RewriteReport,
+    annotate_inplace,
+    graph_flops,
+    node_flops,
+    recompute_provenance,
+    rematerialize,
+    rewrite_graph,
+)
 from repro.core.scheduler import (
     NoSolutionError,
     ScheduleResult,
@@ -72,8 +85,11 @@ from repro.core.scheduler import (
 )
 from repro.core.serenity import (
     OrderResult,
+    Plan,
+    PlanConfig,
     SerenityResult,
     execute,
+    plan,
     plan_coresidency,
     schedule,
     schedule_order,
@@ -91,8 +107,11 @@ __all__ = [
     "NoSolutionError",
     "OrderResult",
     "PartitionNode",
+    "Plan",
     "PlanCache",
+    "PlanConfig",
     "RealizedTracker",
+    "RecomputeReport",
     "RewriteReport",
     "ScheduleResult",
     "SearchTimeout",
@@ -112,16 +131,21 @@ __all__ = [
     "execute",
     "execute_plan",
     "find_separators",
+    "graph_flops",
     "labeled_fingerprint",
     "greedy_schedule",
     "kahn_schedule",
+    "node_flops",
     "partition",
     "partition_hierarchy",
+    "plan",
     "plan_arena",
     "plan_arena_best",
     "plan_arena_regions",
     "plan_coresidency",
     "plan_shared_arena",
+    "recompute_provenance",
+    "rematerialize",
     "resident_bytes",
     "rewrite_graph",
     "run_reference",

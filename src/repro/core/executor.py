@@ -126,16 +126,30 @@ def _blend(xs, n: int):
     return acc / len(xs)
 
 
+def _sig(nd: Node) -> int:
+    """The node id keying the positional signature.
+
+    Recompute clones (``repro.core.rewriter.rematerialize``) carry their
+    original's id as ``recompute_sig`` metadata; using it here makes a
+    clone compute bit-for-bit the same value as the node it rematerializes,
+    for every op — the executor-side half of the recompute contract.
+    """
+    for k, v in nd.meta:
+        if k == "recompute_sig":
+            return int(v)
+    return nd.id
+
+
 def _default_op(nd: Node, xs, n: int):
     acc = _blend(xs, n)
     acc = jnp.tanh(acc + 0.25 * jnp.roll(acc, 1))
-    return 0.9 * acc + _ramp(nd.id, n)
+    return 0.9 * acc + _ramp(_sig(nd), n)
 
 
 def _partial_conv_contrib(nd: Node, branch_xs, n: int):
     """The per-branch accumulation step of a rewritten partial conv."""
     t = _blend(branch_xs, n)
-    return 0.4 * jnp.tanh(t + 0.25 * jnp.roll(t, 1)) + 0.1 * _ramp(nd.id, n)
+    return 0.4 * jnp.tanh(t + 0.25 * jnp.roll(t, 1)) + 0.1 * _ramp(_sig(nd), n)
 
 
 def _split_accum(nd: Node, invals):

@@ -35,8 +35,28 @@ from repro.core.executor import RealizedTracker, _from_bytes, _to_bytes
 from repro.core.graph import Graph, simulate_schedule
 from repro.core.heuristics import kahn_schedule
 from repro.core.plancache import PlanCache, resolve as _resolve_cache
-from repro.core.serenity import schedule_order
+from repro.core.serenity import (
+    PlanConfig,
+    _warn_deprecated,
+    plan as serenity_plan,
+)
 from repro.kernels.arena import arena_write
+
+
+def jaxpr_config(state_quota: int = 4000,
+                 on_timeout: str = "adaptive") -> PlanConfig:
+    """The default :class:`PlanConfig` for jaxpr scheduling.
+
+    Jaxpr graphs are planned without the paper's graph rewrites — equation
+    node ids must survive verbatim so the reordered jaxpr can be rebuilt —
+    and without heuristic baselines (the bridge computes its own traced /
+    Kahn candidates).
+    """
+    return PlanConfig(rewrite=False, inplace=False, compute_baselines=False,
+                      state_quota=state_quota, on_timeout=on_timeout)
+
+
+_UNSET = object()
 
 
 def _aval_bytes(aval) -> int:
@@ -123,26 +143,28 @@ class JaxprScheduleReport:
         return self.realized_bytes == self.optimal_peak
 
 
-def schedule_jaxpr(closed, *, state_quota: int = 4000,
-                   beam_fallback: bool = True,
-                   cache: "PlanCache | bool | None" = True):
+def schedule_jaxpr(closed, *, state_quota=_UNSET, beam_fallback=_UNSET,
+                   cache: "PlanCache | bool | None" = True,
+                   config: PlanConfig | None = None):
     """Reorder the equations of ``closed`` into a memory-optimal order.
 
     Equation orders are memoized in the content-addressed plan cache keyed
-    on the lifted graph, so re-tracing the same function (every ``jit``
-    refresh, every serving replica warm-up) schedules in O(graph hash).
+    on the lifted graph plus the serialized config, so re-tracing the same
+    function (every ``jit`` refresh, every serving replica warm-up)
+    schedules in O(graph hash).
 
     Args:
       closed: the ``ClosedJaxpr`` to reorder.
-      state_quota: maximum DP signatures per search level before a cell's
-        exact search aborts (deterministic timeout).
-      beam_fallback: with ``True`` (default), a cell that exhausts its
-        quota falls back to the Algorithm 2 budget meta-search and, if even
-        that capitulates, to a bounded per-cell beam (the ``state_quota``
-        best signatures per level) — the report's ``exact`` flag records
-        whether any fallback produced the order.  With ``False`` the
-        timeout propagates as :class:`~repro.core.scheduler.SearchTimeout`.
-      cache: plan-cache handle/boolean as in :func:`repro.core.schedule`.
+      cache: plan-cache handle/boolean as in :func:`repro.core.plan`.
+      config: planning knobs (:func:`jaxpr_config` defaults when ``None``):
+        the DP runs under ``config.state_quota`` and
+        ``config.on_timeout='adaptive'`` falls back to the Algorithm 2
+        budget meta-search and a bounded per-cell beam on quota exhaustion
+        (the report's ``exact`` flag records whether any fallback produced
+        the order) while ``'raise'`` propagates
+        :class:`~repro.core.scheduler.SearchTimeout`.
+      state_quota / beam_fallback: deprecated kwarg shims (warn once);
+        mapped onto ``config`` — passing both styles is an error.
 
     Returns:
       ``(new_closed, report)``: the same jaxpr with equations permuted into
@@ -151,11 +173,25 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
       Kahn / chosen orders plus the offset-allocator watermark
       (``arena_bytes``, bytes) of the chosen order.
     """
+    if state_quota is not _UNSET or beam_fallback is not _UNSET:
+        if config is not None:
+            raise TypeError("schedule_jaxpr: pass either config= or the "
+                            "legacy state_quota=/beam_fallback= kwargs, "
+                            "not both")
+        _warn_deprecated(
+            "schedule_jaxpr(state_quota=..., beam_fallback=...)",
+            "schedule_jaxpr(closed, config=jaxpr_config(...))")
+        config = jaxpr_config(
+            state_quota=4000 if state_quota is _UNSET else state_quota,
+            on_timeout="adaptive"
+            if (beam_fallback is _UNSET or beam_fallback) else "raise")
+    elif config is None:
+        config = jaxpr_config()
     g, eqn_nodes = jaxpr_to_graph(closed)
     node_to_eqn = {n: i for i, n in enumerate(eqn_nodes)}
 
     pc = _resolve_cache(cache)
-    cache_opts = ("jax_bridge.schedule_jaxpr", state_quota, beam_fallback)
+    cache_opts = ("jax_bridge.schedule_jaxpr", config.cache_key())
     cached = pc.get(g, cache_opts) if pc is not None else None
     if cached is not None:
         (best_peak, best_order, exact, orig_peak, kahn_peak, arena) = cached
@@ -167,26 +203,23 @@ def schedule_jaxpr(closed, *, state_quota: int = 4000,
         kahn = kahn_schedule(g)
 
         # hierarchical divide and conquer + branch-and-bound DP per cell
-        # (the same search serenity.schedule runs); isomorphic cells replay
-        # through the plan cache; with beam_fallback the per-cell timeout
-        # policy is meta-search-then-beam, otherwise timeouts propagate
-        res = schedule_order(
-            g, state_quota=state_quota, cache=pc,
-            on_timeout="adaptive" if beam_fallback else "raise")
+        # (the same search serenity.plan runs); isomorphic cells replay
+        # through the plan cache
+        res = serenity_plan(g, config, cache=pc if pc is not None else False)
         exact = res.exact
-        res_peak = simulate_schedule(g, res.order).peak_bytes
 
         candidates = [
             (orig.peak_bytes, orig_order),
             (kahn.peak_bytes, kahn.order),
-            (res_peak, res.order),
+            (res.peak_bytes, res.order),
         ]
         best_peak, best_order = min(candidates, key=lambda c: c[0])
         orig_peak, kahn_peak = orig.peak_bytes, kahn.peak_bytes
         # realized memory plan for the chosen order: XLA's buffer assigner
         # honours program order, so this is the arena the runtime reserves
         # (the full plan rides the cache so compile_scheduled never replans)
-        arena = plan_arena_best(g, best_order)
+        arena = (res.arena if best_order is res.order
+                 else plan_arena_best(g, best_order))
         if pc is not None:
             pc.put(g, cache_opts,
                    (best_peak, list(best_order), exact, orig_peak, kahn_peak,
@@ -317,9 +350,10 @@ def _build_arena_program(closed, g: Graph, order, plan: ArenaPlan):
     return run, bypassed
 
 
-def compile_scheduled(fn: Callable, *, state_quota: int = 4000,
+def compile_scheduled(fn: Callable, *, state_quota=_UNSET,
                       cache: "PlanCache | bool | None" = True,
                       assert_equiv: bool = True, atol: float = 1e-5,
+                      config: PlanConfig | None = None,
                       ) -> Callable:
     """Jit ``fn`` with its equations reordered *and executed through the
     planned arena*: every threadable intermediate is read and written as a
@@ -349,7 +383,18 @@ def compile_scheduled(fn: Callable, *, state_quota: int = 4000,
 
     Returns the wrapped callable; ``wrapped.report`` holds the
     :class:`JaxprScheduleReport` of the most recent compilation.
+    ``state_quota`` is a deprecated kwarg shim (warns once) mapped onto
+    ``config``; :func:`jaxpr_config` builds the default.
     """
+    if state_quota is not _UNSET:
+        if config is not None:
+            raise TypeError("compile_scheduled: pass either config= or the "
+                            "legacy state_quota= kwarg, not both")
+        _warn_deprecated("compile_scheduled(state_quota=...)",
+                         "compile_scheduled(fn, config=jaxpr_config(...))")
+        config = jaxpr_config(state_quota=state_quota)
+    elif config is None:
+        config = jaxpr_config()
     compiled: dict[Any, tuple] = {}
 
     def wrapped(*args, **kwargs):
@@ -361,8 +406,7 @@ def compile_scheduled(fn: Callable, *, state_quota: int = 4000,
             # one trace yields both the jaxpr and the output tree structure
             closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
                 *args, **kwargs)
-            _, report = schedule_jaxpr(closed, state_quota=state_quota,
-                                       cache=cache)
+            _, report = schedule_jaxpr(closed, config=config, cache=cache)
             g, _ = jaxpr_to_graph(closed)
             plan = report.arena_plan or plan_arena_best(g, report.order)
             run, bypassed = _build_arena_program(closed, g, report.order,

@@ -27,7 +27,7 @@ This module therefore addresses cached plans by a canonical graph hash:
     processes.  Cached plans are shared objects: treat them as immutable.
 
 The default process-wide cache is wired through
-:func:`repro.core.serenity.schedule`, :mod:`repro.core.jax_bridge` and
+:func:`repro.core.serenity.plan`, :mod:`repro.core.jax_bridge` and
 ``repro.launch.serve``; set the ``REPRO_PLANCACHE_DIR`` environment variable
 to also persist plans across processes.
 """
@@ -179,7 +179,7 @@ def translate_order(src: Graph, dst: Graph, order: list[int]) -> list[int] | Non
 # Bump whenever the *shape* of cached payloads changes (new plan fields,
 # different tuple layouts...): folded into every options key, so stale disk
 # entries from older code become clean misses instead of poison.
-SCHEMA_VERSION = 4   # 4: SerenityResult exactness fields + segment plans
+SCHEMA_VERSION = 5   # 5: PlanConfig-keyed plans, recompute-expanded graphs
 
 
 def _options_key(options: Any) -> str:

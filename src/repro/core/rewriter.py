@@ -25,8 +25,9 @@ a report of the applied matches.
 from __future__ import annotations
 
 import dataclasses
+import math
 
-from repro.core.graph import Graph, Node
+from repro.core.graph import Graph, Node, simulate_schedule
 
 
 @dataclasses.dataclass
@@ -312,3 +313,282 @@ def annotate_inplace(
     if n_marked == 0:
         return g, 0
     return _rebuild(specs, name=g.name), n_marked
+
+
+# ---------------------------------------------------------------------------
+# Rematerialization: trade FLOPs for peak (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# Ops a recompute clone may never replicate: inputs are caller-owned storage,
+# and the rewriter's alias-chain ops (accumulators, views) reuse their
+# predecessors' buffers — a clone would need its own alias chain and the
+# single-consumer alias invariant forbids it anyway.
+RECOMPUTE_EXCLUDED_OPS = frozenset({
+    "input", "concat_view", "partial_conv", "partial_depthconv",
+})
+
+
+def _spec_flops(spec: dict, size_of) -> int:
+    """Surrogate FLOPs of one node spec (``size_of(id) -> bytes``).
+
+    Weightless ops (elementwise, views, adds, concats) cost one op per
+    output element.  For weighted ops the true MAC count is estimated as
+    the geometric mean ``sqrt(weights * in_elems * out_elems)`` — exact
+    for 1x1 convolutions (``px*cin*cout``) and within a small constant
+    factor for kxk/depthwise kernels (DESIGN.md §10).  Units are abstract
+    "surrogate FLOPs"; only ratios of them are ever consumed.
+    """
+    out = max(spec["size_bytes"] // 4, 1)
+    w = spec.get("weight_bytes", 0) // 4
+    if w <= 0:
+        return out
+    ins = max(sum(size_of(p) for p in spec["preds"]) // 4, 1)
+    return max(out, math.isqrt(w * ins * out))
+
+
+def node_flops(g: Graph, u: int) -> int:
+    """Surrogate FLOPs of node ``u`` (see :func:`graph_flops`)."""
+    nd = g.nodes[u]
+    if nd.op == "input":
+        return 0
+    spec = dict(size_bytes=nd.size_bytes, weight_bytes=nd.weight_bytes,
+                preds=nd.preds)
+    return _spec_flops(spec, lambda p: g.sizes[p])
+
+
+def graph_flops(g: Graph) -> int:
+    """Total surrogate FLOPs of ``g`` (inputs cost nothing)."""
+    return sum(node_flops(g, u) for u in range(len(g)))
+
+
+@dataclasses.dataclass
+class RecomputeReport:
+    """What :func:`rematerialize` did to a graph.
+
+    ``frontier`` is the peak-vs-FLOPs Pareto frontier over every clone set
+    the beam search evaluated: ``(flops_ratio, peak_bytes, n_clones)``
+    tuples sorted by ratio, starting at the no-recompute base point
+    ``(1.0, base_peak, 0)`` and strictly decreasing in peak.  Peaks are
+    bounded-search upper bounds (any frontier point is achievable by a
+    real schedule; the true optimum of that clone set can only be lower).
+    """
+
+    n_steps: int = 0                 # beam steps applied on the chosen path
+    n_clones: int = 0                # recompute nodes emitted
+    extra_flops: int = 0             # surrogate FLOPs added by the clones
+    base_flops: int = 0              # surrogate FLOPs of the input graph
+    base_peak_bytes: int = 0         # bounded-search peak of the base graph
+    peak_bytes: int = 0              # bounded-search peak of the chosen graph
+    n_evals: int = 0                 # clone sets evaluated by the search
+    cloned: list[str] = dataclasses.field(default_factory=list)
+    frontier: tuple[tuple[float, int, int], ...] = ()
+
+    @property
+    def flops_ratio(self) -> float:
+        """Expanded-graph FLOPs as a multiple of the base graph's."""
+        if self.base_flops <= 0:
+            return 1.0
+        return (self.base_flops + self.extra_flops) / self.base_flops
+
+
+def recompute_provenance(nd: Node) -> tuple[str, int] | None:
+    """``(original name, original id)`` when ``nd`` is a recompute clone."""
+    meta = dict(nd.meta)
+    if "recompute_of" not in meta:
+        return None
+    return str(meta["recompute_of"]), int(meta["recompute_sig"])
+
+
+def _clone_out(g: Graph, u: int, n_clone: int) -> Graph:
+    """One rematerialization step: clone ``u`` for its last ``n_clone``
+    consumers (by node id — a proxy for topological position).
+
+    Each clone is a fresh node with the same op/size/weights reading the
+    same predecessors; its consumer's pred edge is rewired onto it.  After
+    the step ``u``'s output dies at its earliest remaining consumer instead
+    of staying live across all of them.  Clones append at the end, so every
+    original node keeps its id — provenance ids stay valid and the step
+    composes (a clone, having one consumer, is itself never a candidate,
+    but cloning ``u`` makes ``u``'s predecessors multi-consumer, which is
+    how chains unroll back to an anchor over successive steps).
+    """
+    specs: list[dict] = []
+    for nd in g.nodes:
+        specs.append(
+            dict(
+                name=nd.name,
+                op=nd.op,
+                size_bytes=nd.size_bytes,
+                preds=list(nd.preds),
+                alias_preds=set(nd.alias_preds),
+                weight_bytes=nd.weight_bytes,
+                meta=dict(nd.meta),
+            )
+        )
+    cons = sorted(g.succs[u])
+    root = specs[u]["meta"].get("recompute_of", specs[u]["name"])
+    sig = specs[u]["meta"].get("recompute_sig", u)
+    for c in cons[len(cons) - n_clone:]:
+        ci = len(specs)
+        specs.append(
+            dict(
+                name=f"{root}.rc{ci}",
+                op=specs[u]["op"],
+                size_bytes=specs[u]["size_bytes"],
+                preds=list(specs[u]["preds"]),
+                alias_preds=set(),
+                weight_bytes=specs[u]["weight_bytes"],
+                meta={**specs[u]["meta"],
+                      "recompute_of": root, "recompute_sig": sig},
+            )
+        )
+        specs[c]["preds"] = [ci if p == u else p for p in specs[c]["preds"]]
+    return _rebuild(specs, name=g.name)
+
+
+def rematerialize(
+    g: Graph,
+    *,
+    flops_budget: float = 1.3,
+    beam_width: int = 4,
+    max_rounds: int = 6,
+    eval_quota: int = 800,
+    inplace: bool = True,
+) -> tuple[Graph, RecomputeReport]:
+    """Expand ``g`` with recompute clones that lower its schedulable peak.
+
+    The planner-side half of rematerialization.  A *step* picks a
+    multi-consumer node and gives some of its consumers their own clone —
+    a fresh node with the same op/size/weights reading the same
+    predecessors — so the original's output dies early instead of staying
+    live across all consumers.  The scheduler needs no new machinery: it
+    simply orders the expanded DAG (each clone right before its consumer,
+    if that is where the optimum lies).
+
+    Which steps actually help is decided *empirically*, not by a static
+    score: a small beam search applies candidate steps and evaluates each
+    resulting graph with a bounded beam DP
+    (:func:`~repro.core.scheduler.dp_schedule` with ``on_quota='beam'``),
+    keeping the ``beam_width`` lowest-peak states per round.  Scheduler
+    feedback is essential — a clone can *raise* the exact peak (it extends
+    its predecessors' liveness and can break in-place eligibility), which
+    no liveness heuristic reliably predicts.  Because every evaluation is
+    a real schedule, each frontier point is an achievable upper bound.
+
+    Clones carry provenance metadata — ``recompute_of`` (the root original
+    node's name) and ``recompute_sig`` (its id in the pre-expansion
+    graph) — which the executor uses to give a clone the *same* surrogate
+    value function as its original, so expanded-graph outputs stay
+    bit-equal to the no-recompute reference.
+
+    Args:
+      g: graph to expand (typically post-``rewrite_graph``, pre-
+        ``annotate_inplace`` — cloning changes consumer counts and hence
+        in-place eligibility, so the in-place pass must rerun after).
+      flops_budget: cap on expanded/base surrogate-FLOPs ratio (≥ 1.0);
+        the search never applies a step that would exceed it.
+      beam_width: states kept per beam round.
+      max_rounds: beam rounds (clone steps on the deepest path).
+      eval_quota: DP state quota per evaluation; higher is tighter but
+        slower.  Evaluation cost is roughly
+        ``beam_width * candidates * max_rounds`` bounded-DP runs.
+      inplace: evaluate candidate graphs with in-place annotation applied
+        (must match how the final graph will be scheduled).
+
+    Returns:
+      ``(expanded graph, RecomputeReport)`` — the input graph object
+      itself when no clone set within budget lowers the evaluated peak.
+      The report's ``frontier`` has the full peak-vs-FLOPs Pareto
+      frontier; the returned graph is the frontier's lowest-peak point.
+    """
+    from repro.core.scheduler import dp_schedule
+
+    base_flops = graph_flops(g)
+
+    def _peak(gx: Graph) -> int:
+        gi = annotate_inplace(gx)[0] if inplace else gx
+        res = dp_schedule(gi, state_quota=eval_quota, on_quota="beam")
+        return simulate_schedule(gi, res.order).peak_bytes
+
+    def _key(gx: Graph) -> tuple:
+        # A clone set's identity: which original node each clone recomputes
+        # and which consumers it feeds — invariant to discovery order.
+        ks = []
+        for i in range(len(g.nodes), len(gx.nodes)):
+            sig = dict(gx.nodes[i].meta)["recompute_sig"]
+            ks.append((sig, tuple(sorted(gx.succs[i]))))
+        return tuple(sorted(ks))
+
+    report = RecomputeReport(base_flops=base_flops)
+    base_peak = _peak(g)
+    report.base_peak_bytes = base_peak
+    report.n_evals = 1
+
+    # beam state: (eval peak, extra flops, steps applied, graph)
+    beam: list[tuple[int, int, int, Graph]] = [(base_peak, 0, 0, g)]
+    evaluated = list(beam)
+    seen = {_key(g)}
+    for _round in range(max_rounds):
+        grown: list[tuple[int, int, int, Graph]] = []
+        for _, extra, steps, bg in beam:
+            for u in range(len(bg.nodes)):
+                nd = bg.nodes[u]
+                n_cons = len(bg.succs[u])
+                if (n_cons < 2 or nd.op in RECOMPUTE_EXCLUDED_OPS
+                        or nd.alias_preds):
+                    continue
+                fl = node_flops(bg, u)
+                # two step shapes: peel the single farthest consumer, or
+                # clone out all but the first — intermediate splits are
+                # reachable by composing peels across rounds
+                for n_clone in {1, n_cons - 1}:
+                    extra2 = extra + fl * n_clone
+                    if (base_flops + extra2) / base_flops > flops_budget:
+                        continue
+                    gx = _clone_out(bg, u, n_clone)
+                    k = _key(gx)
+                    if k in seen:
+                        continue
+                    seen.add(k)
+                    report.n_evals += 1
+                    grown.append((_peak(gx), extra2, steps + 1, gx))
+        if not grown:
+            break
+        grown.sort(key=lambda s: (s[0], s[1]))
+        beam = grown[:beam_width]
+        evaluated.extend(beam)
+
+    # Pareto frontier over evaluated states: sort by FLOPs, keep strictly
+    # decreasing peaks.  The base point always leads, so a state only
+    # appears if it beats the no-recompute peak.
+    evaluated.sort(key=lambda s: (s[1], s[0]))
+    frontier: list[tuple[float, int, int]] = []
+    best_peak = None
+    winner: tuple[int, int, int, Graph] | None = None
+    for st in evaluated:
+        if best_peak is not None and st[0] >= best_peak:
+            continue
+        best_peak = st[0]
+        ratio = (base_flops + st[1]) / base_flops if base_flops else 1.0
+        frontier.append((ratio, st[0], len(st[3].nodes) - len(g.nodes)))
+        winner = st
+    report.frontier = tuple(frontier)
+
+    if winner is None or winner[3] is g:
+        report.peak_bytes = base_peak
+        return g, report
+    peak, extra, steps, gw = winner
+    report.peak_bytes = peak
+    report.extra_flops = extra
+    report.n_steps = steps
+    report.n_clones = len(gw.nodes) - len(g.nodes)
+    report.cloned = sorted(
+        {recompute_provenance(nd)[0]
+         for nd in gw.nodes[len(g.nodes):]})
+    gw = _rebuild(
+        [dict(name=nd.name, op=nd.op, size_bytes=nd.size_bytes,
+              preds=list(nd.preds), alias_preds=set(nd.alias_preds),
+              weight_bytes=nd.weight_bytes, meta=dict(nd.meta))
+         for nd in gw.nodes],
+        name=f"{g.name}+rc{report.n_clones}")
+    return gw, report

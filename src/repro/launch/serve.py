@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import Graph, kahn_schedule, plan_arena_regions
+from repro.core import Graph, PlanConfig, plan
 from repro.core.allocator import resident_bytes
 from repro.core.executor import pack_buffers, unpack_buffer
 from repro.core.plancache import default_cache
@@ -109,24 +109,30 @@ def plan_decode_arena(model, bsz: int, smax: int) -> dict:
     """
     g, n_cache = decode_state_graph(model, bsz, smax)
     pc = default_cache()
-    cache_opts = ("serve.plan_decode_arena", 2)   # 2: regions-layout schema
+    cache_opts = ("serve.plan_decode_arena", 3)   # 3: PlanConfig-planned
     out = pc.get(g, cache_opts)
     if out is None:
-        order = kahn_schedule(g).order
         # resident: the KV caches and the sampled token — everything the
         # request carries between steps (the token node also keeps the
-        # logits buffer transient: it is the logits' consumer)
-        plan = plan_arena_regions(
-            g, order, resident=[*range(n_cache), len(g) - 1])
+        # logits buffer transient: it is the logits' consumer).  The Kahn
+        # scheduler is deliberate: decode state is dozens of *isolated*
+        # persistent buffers, which the exact DP models as an exponential
+        # bitmask space with nothing to gain over the greedy order.
+        cfg = PlanConfig(
+            rewrite=False, inplace=False, scheduler="kahn",
+            resident=(*range(n_cache), len(g) - 1),
+            compute_baselines=False)
+        res = plan(g, cfg, cache=pc)
+        apl = res.arena
         naive = sum(g.sizes)
-        pers, extent = resident_bytes(plan)
-        out = {"arena_bytes": plan.arena_bytes, "naive_bytes": naive,
-               "peak_bytes": plan.peak_bytes, "policy": plan.policy,
-               "frag_ratio": plan.frag_ratio,
+        pers, extent = resident_bytes(apl)
+        out = {"arena_bytes": apl.arena_bytes, "naive_bytes": naive,
+               "peak_bytes": apl.peak_bytes, "policy": apl.policy,
+               "frag_ratio": apl.frag_ratio,
                "persistent_bytes": pers, "resident_extent": extent,
-               "transient_bytes": plan.arena_bytes - extent,
-               "n_buffers": len(g), "n_cache": n_cache, "plan": plan,
-               "graph": g, "order": order}
+               "transient_bytes": apl.arena_bytes - extent,
+               "n_buffers": len(g), "n_cache": n_cache, "plan": apl,
+               "graph": g, "order": res.order}
         pc.put(g, cache_opts, out)
     return out
 

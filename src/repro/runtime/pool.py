@@ -31,12 +31,18 @@ from typing import Callable, Sequence
 from repro.core.allocator import (
     ArenaPlan,
     SharedArenaPlan,
-    plan_arena_best,
     plan_shared_arena,
     resident_bytes,
 )
 from repro.core.graph import Graph
 from repro.core.plancache import labeled_fingerprint
+from repro.core.serenity import PlanConfig, plan as serenity_plan
+
+# Default lease planning: pack the caller's order (or the deterministic topo
+# order) as-is — pool members arrive pre-scheduled, so the pool only needs
+# arena offsets, not a DP search.
+_LEASE_CONFIG = PlanConfig(rewrite=False, inplace=False,
+                           compute_baselines=False)
 
 
 class PoolError(RuntimeError):
@@ -116,7 +122,8 @@ class ArenaPool:
       max_warm: released lease buffers kept warm per pool (LRU); a repeat
         shape leases without planning or allocating.
       planner: ``planner(graph, order) -> ArenaPlan``; defaults to
-        :func:`plan_arena_best` over the graph's deterministic topo order.
+        :func:`repro.core.serenity.plan` packing the graph's deterministic
+        topo order (arena offsets only — no DP search).
       alloc_fn: ``alloc_fn(nbytes) -> buffer`` for physical lease buffers
         (the serving driver passes a jnp uint8 allocator).  ``None`` keeps
         the pool accounting-only (``Lease.buffer is None``).
@@ -177,8 +184,10 @@ class ArenaPool:
             if self._planner is not None:
                 plan = self._planner(graph, order)
             else:
-                plan = plan_arena_best(
-                    graph, graph.topo_order() if order is None else order)
+                plan = serenity_plan(
+                    graph, _LEASE_CONFIG,
+                    order=graph.topo_order() if order is None else order,
+                    cache=False).arena
         self._plans[key] = plan
         while len(self._plans) > self._max_plans:
             self._plans.popitem(last=False)

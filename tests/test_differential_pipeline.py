@@ -16,7 +16,12 @@ and cross-checks every redundant path against every other:
     bit-for-bit the plain dict-interpreter's (``run_reference``);
   * ``plan_shared_arena`` co-residency: members of a joint plan must be
     address-disjoint wherever their joint lifetimes overlap, and each
-    member must execute strictly against one shared buffer.
+    member must execute strictly against one shared buffer;
+  * recompute-expanded graphs (PR 6): ``rematerialize``'s search output
+    and force-expanded clone graphs go through the same agreement checks
+    (DP == brute-force oracle on small graphs, arena executor bit-equal
+    to the reference), and an expanded graph's outputs must be bit-equal
+    to the *unexpanded* graph's.
 
 A fixed 50-seed corpus runs in tier-1 under a wall-clock cap;
 hypothesis-driven variants (random seeds, deeper graphs) ride behind
@@ -38,10 +43,12 @@ from repro.core import (
     execute_plan,
     plan_arena_best,
     plan_shared_arena,
+    rematerialize,
     rewrite_graph,
     run_reference,
     simulate_schedule,
 )
+from repro.core.rewriter import RECOMPUTE_EXCLUDED_OPS, _clone_out
 
 N_SEEDS = 50
 BRUTE_MAX = 12          # brute-force oracle bound (node count)
@@ -154,6 +161,12 @@ def _variants(g: Graph):
         out.append(("rewritten", rw))
     if n_ip:
         out.append(("inplace", ip))
+    # recompute expansion at fuzz-scale search bounds: when the beam finds
+    # a clone set that lowers the peak, the expanded graph must pass every
+    # check the others do
+    rm, rrep = rematerialize(rw, max_rounds=2, beam_width=2, eval_quota=200)
+    if rrep.n_clones:
+        out.append(("remat", rm))
     return out
 
 
@@ -219,6 +232,38 @@ def test_corpus_exercises_every_motif():
     assert n_conv >= 5, f"only {n_conv} corpus samples hit concat->conv"
     assert n_dw >= 5, f"only {n_dw} corpus samples hit concat->depthconv"
     assert n_ip >= 10, f"only {n_ip} corpus samples mark in-place ops"
+
+
+def test_forced_clone_differential(engines):
+    """Force one clone step onto eligible fuzz graphs (no search, so the
+    corpus covers clones even where they don't lower the peak): the
+    expanded graph must pass the full differential check — engines/bnb/
+    brute-force agreement plus arena execution — and its outputs must be
+    bit-equal to the *unexpanded* graph's."""
+    n = 0
+    for seed in range(N_SEEDS):
+        g = random_pipeline_graph(seed, max_nodes=10)
+        cands = [u for u in range(len(g))
+                 if len(g.succs[u]) >= 2
+                 and g.nodes[u].op not in RECOMPUTE_EXCLUDED_OPS
+                 and not g.nodes[u].alias_preds]
+        if not cands:
+            continue
+        u = max(cands, key=lambda v: len(g.succs[v]))
+        gx = _clone_out(g, u, 1)
+        assert len(gx) == len(g) + 1
+        ref, refx = run_reference(g), run_reference(gx)
+        assert set(ref) == set(refx)
+        for name, val in ref.items():
+            np.testing.assert_array_equal(
+                np.asarray(refx[name]), np.asarray(val),
+                err_msg=f"{g.name}: clone of node {u} changed output "
+                        f"{name!r}")
+        check_sample(gx, engines)
+        n += 1
+        if n >= 12:
+            break
+    assert n >= 8, f"only {n} fuzz graphs had a clonable node"
 
 
 def test_corpus_under_time_cap():

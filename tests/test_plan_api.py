@@ -1,0 +1,251 @@
+"""The PlanConfig planning surface (DESIGN.md §10): config semantics,
+deprecation shims, and clone-aware plan caching.
+
+What PR 6 must keep true forever:
+
+  * ``PlanConfig`` is frozen, validated, and name-keyed — its
+    ``cache_key()`` can never positionally alias two different configs;
+  * every legacy entry point (``schedule``, ``schedule_order``, legacy
+    kwargs on ``execute`` / ``plan_coresidency`` / ``schedule_jaxpr``)
+    warns ``DeprecationWarning`` exactly once per process, maps onto the
+    same ``PlanConfig`` a direct caller would write, and lands on the
+    *same* cache entry as the equivalent ``plan`` call;
+  * recompute-expanded plans round-trip the two-tier plan cache — memory
+    LRU and disk pickle — with their clones' provenance intact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core import Graph, PlanCache, PlanConfig, execute, plan
+from repro.core.rewriter import recompute_provenance
+from repro.core.serenity import (
+    _legacy_schedule_config,
+    _reset_deprecation_warnings,
+    plan_coresidency,
+    schedule,
+    schedule_order,
+)
+from repro.graphs import BENCHMARK_GRAPHS, randwire_graph
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warnings():
+    # each test sees the once-per-process warning machinery from scratch
+    _reset_deprecation_warnings()
+    yield
+    _reset_deprecation_warnings()
+
+
+def _diamond() -> Graph:
+    return Graph.build([
+        dict(name="x", op="input", size_bytes=64, preds=[]),
+        dict(name="a", op="conv", size_bytes=128, preds=[0]),
+        dict(name="b", op="conv", size_bytes=32, preds=[0]),
+        dict(name="y", op="add", size_bytes=32, preds=[1, 2]),
+    ], name="diamond")
+
+
+# ---------------------------------------------------------------------------
+# PlanConfig semantics
+# ---------------------------------------------------------------------------
+
+
+def test_planconfig_is_frozen():
+    cfg = PlanConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.state_quota = 5
+    assert cfg.replace(state_quota=5).state_quota == 5
+    assert cfg.state_quota == 20_000          # original untouched
+
+
+@pytest.mark.parametrize("bad", [
+    dict(scheduler="topological"),
+    dict(on_timeout="retry"),
+    dict(flops_budget=0.5),
+])
+def test_planconfig_validates(bad):
+    with pytest.raises(ValueError):
+        PlanConfig(**bad)
+
+
+def test_planconfig_cache_key_is_name_keyed():
+    a, b = PlanConfig(), PlanConfig()
+    assert a.cache_key() == b.cache_key()
+    assert a.replace(state_quota=99).cache_key() != a.cache_key()
+    # name-keyed: every field appears as a (name, value) pair, so two
+    # different fields can never positionally alias each other
+    names = [k for k, _ in PlanConfig().cache_key()]
+    assert names == sorted(names)
+    assert set(names) == {f.name for f in dataclasses.fields(PlanConfig)}
+
+
+def test_planconfig_resident_coerced_hashable():
+    cfg = PlanConfig(resident=[0, 1, 2])      # list in, tuple out
+    assert cfg.resident == (0, 1, 2)
+    hash(cfg.cache_key())                     # cache keys must be hashable
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn once, same config, same plan, same cache entry
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_shim_warns_exactly_once():
+    g = _diamond()
+    with pytest.warns(DeprecationWarning, match="serenity.plan"):
+        schedule(g, cache=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # a second warning would raise
+        schedule(g, cache=False)
+
+
+def test_schedule_order_shim_warns_and_orders():
+    g = _diamond()
+    with pytest.warns(DeprecationWarning):
+        res = schedule_order(g, state_quota=4000)
+    assert res.exact
+    direct = plan(g, PlanConfig(rewrite=False, inplace=False,
+                                state_quota=4000), cache=False)
+    assert list(res.order) == list(direct.order)
+
+
+def test_schedule_shim_hits_same_cache_entry_as_plan():
+    g = randwire_graph(seed=3, n=12)
+    pc = PlanCache()
+    with pytest.warns(DeprecationWarning):
+        legacy = schedule(g, state_quota=4000, cache=pc)
+    direct = plan(g, _legacy_schedule_config(state_quota=4000), cache=pc)
+    assert direct is legacy                   # zero-copy cache hit
+    assert pc.stats.hits >= 1
+
+
+def test_legacy_none_quota_passes_through():
+    # schedule(state_quota=None) historically meant "unlimited", not the
+    # default — the shim must not round it to 20_000
+    cfg = _legacy_schedule_config(state_quota=None)
+    assert cfg.state_quota is None
+
+
+def test_execute_legacy_kwargs_warn_and_conflict():
+    g = _diamond()
+    with pytest.warns(DeprecationWarning, match="execute"):
+        ex = execute(g, rewrite=False, cache=False)
+    assert ex.realized_matches_plan
+    with pytest.raises(TypeError):
+        execute(g, config=PlanConfig(), rewrite=False, cache=False)
+
+
+def test_plan_coresidency_legacy_kwargs_warn_and_conflict():
+    gs = [_diamond(), _diamond()]
+    with pytest.warns(DeprecationWarning, match="plan_coresidency"):
+        shared, results = plan_coresidency(gs, rewrite=False, cache=False)
+    assert len(results) == 2
+    assert shared.arena_bytes <= shared.sum_member_bytes
+    with pytest.raises(TypeError):
+        plan_coresidency(gs, config=PlanConfig(), rewrite=False, cache=False)
+
+
+def test_jaxpr_shim_warns_and_matches_config_call():
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    from repro.core.jax_bridge import jaxpr_config, schedule_jaxpr
+
+    def f(x):
+        return jnp.sum(jnp.tanh(x) * 2.0 + jnp.cos(x))
+
+    closed = jax.make_jaxpr(f)(jnp.ones((8, 8), jnp.float32))
+    with pytest.warns(DeprecationWarning, match="schedule_jaxpr"):
+        _, legacy = schedule_jaxpr(closed, state_quota=2000, cache=False)
+    _, direct = schedule_jaxpr(closed, config=jaxpr_config(state_quota=2000),
+                               cache=False)
+    assert legacy.order == direct.order
+    assert legacy.optimal_peak == direct.optimal_peak
+
+
+# ---------------------------------------------------------------------------
+# Config-keyed caching: different configs miss, recompute plans round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_different_configs_get_different_entries():
+    g = randwire_graph(seed=3, n=12)
+    pc = PlanCache()
+    p1 = plan(g, PlanConfig(rewrite=False), cache=pc)
+    p2 = plan(g, PlanConfig(rewrite=True), cache=pc)
+    assert p1 is not p2                       # distinct entries, not aliased
+    hits0 = pc.stats.hits
+    assert plan(g, PlanConfig(rewrite=False), cache=pc) is p1
+    assert plan(g, PlanConfig(rewrite=True), cache=pc) is p2
+    assert pc.stats.hits == hits0 + 2
+
+
+def test_recompute_plan_survives_cache_roundtrip(tmp_path):
+    g = BENCHMARK_GRAPHS["randwire_cifar10"]()
+    cfg = PlanConfig(rewrite=True, recompute=True, recompute_rounds=1,
+                     state_quota=4000)
+    pc = PlanCache(disk_dir=str(tmp_path))
+    cold = plan(g, cfg, cache=pc)
+    assert cold.recompute_report is not None
+    clones = [(i, recompute_provenance(nd))
+              for i, nd in enumerate(cold.graph.nodes)
+              if recompute_provenance(nd) is not None]
+    assert clones, "randwire_cifar10 round 1 must emit at least one clone"
+
+    # memory tier: zero-copy identity
+    assert plan(g, cfg, cache=pc) is cold
+
+    # disk tier: a fresh process-equivalent cache unpickles the same plan,
+    # clones and provenance intact
+    pc2 = PlanCache(disk_dir=str(tmp_path))
+    warm = plan(g, cfg, cache=pc2)
+    assert pc2.stats.disk_hits == 1
+    assert list(warm.order) == list(cold.order)
+    assert warm.peak_bytes == cold.peak_bytes
+    assert warm.pareto_frontier == cold.pareto_frontier
+    for i, prov in clones:
+        nd = warm.graph.nodes[i]
+        assert recompute_provenance(nd) == prov
+        assert nd.preds == cold.graph.nodes[i].preds
+
+    # the recompute config is part of the key: the no-recompute plan is a
+    # different entry with a different (clone-free) graph
+    base = plan(g, cfg.replace(recompute=False), cache=pc2)
+    assert len(base.graph) < len(cold.graph)
+
+
+# ---------------------------------------------------------------------------
+# The in-tree API lint actually catches what it claims to
+# ---------------------------------------------------------------------------
+
+
+def test_lint_regexes_flag_deprecated_calls_only():
+    import importlib.util
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "lint_plan_api", root / "tools" / "lint_plan_api.py")
+    lint = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(lint)
+
+    flagged = ["res = schedule(g, rewrite=True)",
+               "order = schedule_order(g).order",
+               "schedule_jaxpr(closed, beam_fallback=False)"]
+    clean = ["res = dp_schedule(g, state_quota=100)",
+             "k = kahn_schedule(g)",
+             "Kahn's schedule (always feasible)",
+             "re-schedule (paper Fig. 9)",
+             "p = plan(g, PlanConfig(rewrite=True))"]
+    for line in flagged:
+        assert lint._DEPRECATED_CALL.search(line) or \
+            lint._DEPRECATED_KWARG.search(line), line
+    for line in clean:
+        assert not lint._DEPRECATED_CALL.search(line), line
+        assert not lint._DEPRECATED_KWARG.search(line), line
+    # and the tree is clean right now
+    assert lint.main() == 0

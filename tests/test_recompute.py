@@ -1,0 +1,202 @@
+"""Rematerialization (DESIGN.md §10): FLOPs model, clone mechanics, and
+the peak-vs-FLOPs trade on the paper graphs.
+
+The acceptance bar for PR 6, asserted here at CI-scale search bounds: on
+the RandWire cells the recompute planner must reach a peak *strictly
+below the exact no-recompute optimum* (>=10% on at least one graph)
+within a 1.3x FLOPs budget, the executor must realize exactly the
+planned bytes, and the expanded graph's outputs must be bit-equal to the
+no-recompute reference.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import Graph, PlanConfig, execute_plan, plan, run_reference
+from repro.core.rewriter import (
+    RECOMPUTE_EXCLUDED_OPS,
+    _clone_out,
+    graph_flops,
+    node_flops,
+    recompute_provenance,
+    rematerialize,
+)
+from repro.graphs import BENCHMARK_GRAPHS
+
+
+# ---------------------------------------------------------------------------
+# Surrogate FLOPs model
+# ---------------------------------------------------------------------------
+
+
+def test_node_flops_exact_for_1x1_conv():
+    # 1x1 conv over px=16 pixels, cin=8 -> cout=4: true MACs = px*cin*cout
+    px, cin, cout = 16, 8, 4
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=4 * px * cin, preds=[]),
+        dict(name="y", op="conv", size_bytes=4 * px * cout,
+             weight_bytes=4 * cin * cout, preds=[0]),
+    ], name="conv1x1")
+    assert node_flops(g, 1) == px * cin * cout
+    assert node_flops(g, 0) == 0               # inputs cost nothing
+    assert graph_flops(g) == px * cin * cout
+
+
+def test_weightless_op_costs_output_elements():
+    g = Graph.build([
+        dict(name="x", op="input", size_bytes=256, preds=[]),
+        dict(name="r", op="relu", size_bytes=256, preds=[0]),
+    ], name="ew")
+    assert node_flops(g, 1) == 64              # 256 bytes / 4 per element
+
+
+# ---------------------------------------------------------------------------
+# Clone mechanics and provenance
+# ---------------------------------------------------------------------------
+
+
+def _fanout_graph() -> Graph:
+    return Graph.build([
+        dict(name="x", op="input", size_bytes=64, preds=[]),
+        dict(name="u", op="conv", size_bytes=512, weight_bytes=64,
+             preds=[0]),
+        dict(name="c1", op="conv", size_bytes=64, preds=[1]),
+        dict(name="c2", op="conv", size_bytes=64, preds=[1]),
+        dict(name="c3", op="conv", size_bytes=64, preds=[1]),
+        dict(name="y", op="add", size_bytes=64, preds=[2, 3, 4]),
+    ], name="fanout")
+
+
+def test_clone_out_rewires_and_tags_provenance():
+    g = _fanout_graph()
+    gx = _clone_out(g, 1, 2)                   # clone u for c2, c3
+    assert len(gx) == len(g) + 2
+    # originals keep their ids, names and preds
+    for i, nd in enumerate(g.nodes):
+        assert gx.nodes[i].name == nd.name
+        assert gx.nodes[i].op == nd.op
+    # u keeps its earliest consumer; the clones feed the last two
+    assert sorted(gx.succs[1]) == [2]
+    for ci in (len(g), len(g) + 1):
+        nd = gx.nodes[ci]
+        assert recompute_provenance(nd) == ("u", 1)
+        assert nd.op == "conv" and nd.size_bytes == 512
+        assert nd.preds == g.nodes[1].preds
+    assert tuple(gx.nodes[3].preds) == (len(g),)
+    assert tuple(gx.nodes[4].preds) == (len(g) + 1,)
+    assert recompute_provenance(gx.nodes[1]) is None
+
+
+def test_clone_of_clone_keeps_root_provenance():
+    g = _fanout_graph()
+    gx = _clone_out(g, 1, 2)
+    # cloning u again (it still feeds c1 plus nothing else -> make its pred
+    # multi-consumer instead): clone the *input* and check root naming
+    gy = _clone_out(gx, 0, 1)
+    clone = gy.nodes[len(gx)]
+    assert recompute_provenance(clone) == ("x", 0)
+    # a clone's own provenance propagates when the clone itself is cloned
+    gz = _clone_out(gx, len(g), 1)
+    assert recompute_provenance(gz.nodes[len(gx)]) == ("u", 1)
+
+
+def test_clone_outputs_bit_equal_original():
+    g = _fanout_graph()
+    gx = _clone_out(g, 1, 2)
+    ref, refx = run_reference(g), run_reference(gx)
+    assert set(ref) == set(refx)               # same output nodes
+    for name, val in ref.items():
+        np.testing.assert_array_equal(np.asarray(refx[name]),
+                                      np.asarray(val))
+
+
+# ---------------------------------------------------------------------------
+# The search: budget respected, no-gain graphs untouched
+# ---------------------------------------------------------------------------
+
+
+def test_rematerialize_budget_one_is_identity():
+    g = _fanout_graph()
+    out, rep = rematerialize(g, flops_budget=1.0)
+    assert out is g and rep.n_clones == 0
+    assert rep.frontier == ((1.0, rep.base_peak_bytes, 0),)
+    assert rep.peak_bytes == rep.base_peak_bytes
+
+
+def test_rematerialize_chain_graph_untouched():
+    # a pure chain has no multi-consumer node: nothing to clone
+    g = Graph.build(
+        [dict(name="x", op="input", size_bytes=64, preds=[])]
+        + [dict(name=f"c{i}", op="conv", size_bytes=64, preds=[i])
+           for i in range(4)],
+        name="chain")
+    out, rep = rematerialize(g)
+    assert out is g and rep.n_evals == 1
+
+
+def test_rematerialize_respects_flops_budget():
+    for budget in (1.05, 1.3):
+        g = BENCHMARK_GRAPHS["randwire_cifar10"]()
+        _, rep = rematerialize(g, flops_budget=budget, max_rounds=1)
+        assert rep.flops_ratio <= budget + 1e-9
+        for ratio, _, _ in rep.frontier:
+            assert ratio <= budget + 1e-9
+
+
+def test_excluded_ops_never_cloned():
+    g = BENCHMARK_GRAPHS["randwire_cifar100"]()
+    gx, rep = rematerialize(g, max_rounds=2, beam_width=2)
+    for nd in gx.nodes[len(g):]:
+        assert nd.op not in RECOMPUTE_EXCLUDED_OPS
+        assert recompute_provenance(nd) is not None
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: below the exact no-recompute optimum on the paper graphs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,rounds,min_gain", [
+    ("randwire_cifar10", 1, 0.05),
+    ("randwire_cifar100", 3, 0.10),
+])
+def test_recompute_beats_exact_baseline(name, rounds, min_gain):
+    g = BENCHMARK_GRAPHS[name]()
+    base = plan(g, PlanConfig(rewrite=True, state_quota=4000), cache=False)
+    assert base.exact, f"{name}: no-recompute baseline must be exact"
+
+    res = plan(g, PlanConfig(rewrite=True, recompute=True,
+                             recompute_rounds=rounds, state_quota=4000),
+               cache=False)
+    rep = res.recompute_report
+    assert rep is not None and rep.n_clones > 0
+    # strictly below the *exact* optimum of the unexpanded graph, by at
+    # least the per-graph bar, within the FLOPs budget
+    assert res.peak_bytes < base.peak_bytes
+    assert res.peak_bytes <= (1 - min_gain) * base.peak_bytes, (
+        f"{name}: {res.peak_bytes} vs exact base {base.peak_bytes} "
+        f"(< {min_gain:.0%} gain)")
+    assert rep.flops_ratio <= 1.3 + 1e-9
+
+    # the frontier is monotone: ratios increase, peaks strictly decrease,
+    # starting at the no-recompute base point
+    assert res.pareto_frontier[0] == (1.0, rep.base_peak_bytes, 0)
+    ratios = [p[0] for p in res.pareto_frontier]
+    peaks = [p[1] for p in res.pareto_frontier]
+    assert ratios == sorted(ratios)
+    assert all(a > b for a, b in zip(peaks, peaks[1:]))
+
+    # executor realizes exactly the planned bytes on the expanded graph
+    ex = execute_plan(res.graph, res.order, res.arena, inputs=None,
+                      strict=True)
+    assert ex.realized_peak_bytes == res.arena.peak_bytes
+
+    # and the outputs are bit-equal to the no-recompute reference
+    ref = run_reference(base.graph)
+    assert set(ref) == set(ex.outputs)
+    for out_name, val in ref.items():
+        np.testing.assert_array_equal(
+            np.asarray(ex.outputs[out_name]), np.asarray(val),
+            err_msg=f"{name}: recompute output {out_name!r} diverges")

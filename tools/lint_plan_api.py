@@ -1,0 +1,80 @@
+"""API tripwire: the PlanConfig surface is the only way to plan.
+
+    python tools/lint_plan_api.py
+
+``serenity.plan(graph, PlanConfig(...))`` is the planning entry point
+(DESIGN.md §10).  The legacy entry points — ``schedule(...)``,
+``schedule_order(...)`` — and the legacy per-call kwargs
+(``beam_fallback=``, planning ``**schedule_kw`` on ``execute`` /
+``plan_coresidency``) survive only as deprecation shims for out-of-tree
+callers.  In-tree code must not use them: this lint greps ``src``,
+``benchmarks`` and ``examples`` and fails the build on any hit, so a
+deprecated call can never creep back in behind the shims' warnings.
+
+``tests`` are exempt (they exercise the shims on purpose), as are the two
+modules that *define* the shims.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples")
+# the shims have to name themselves; everything else goes through plan()
+ALLOWLIST = {
+    "src/repro/core/serenity.py",
+    "src/repro/core/jax_bridge.py",
+}
+
+# a *call* of a deprecated entry point: the name not preceded by an
+# identifier character or a dot (so `dp_schedule(`, `kahn_schedule(` and
+# attribute access stay legal) and glued to its paren (so prose like
+# "Kahn's schedule (always feasible)" in docstrings doesn't trip)
+_DEPRECATED_CALL = re.compile(
+    r"(?<![A-Za-z0-9_.])(schedule|schedule_order)\(")
+# kwargs that only exist on the deprecated surface
+_DEPRECATED_KWARG = re.compile(r"(?<![A-Za-z0-9_])beam_fallback\s*=")
+
+
+def _code_lines(path: pathlib.Path):
+    """Yield (lineno, line) with comment tails stripped.
+
+    Line-based on purpose: a lint that needs the AST to explain itself has
+    already lost the "greppable" property this tripwire is for.  Comment
+    stripping is naive (a ``#`` inside a string literal truncates the
+    line), which can only *hide* a violation inside such a string — and a
+    deprecated call smuggled into a string is not a call.
+    """
+    for i, raw in enumerate(path.read_text().splitlines(), 1):
+        yield i, raw.split("#", 1)[0]
+
+
+def main() -> int:
+    errors = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel in ALLOWLIST:
+                continue
+            for lineno, line in _code_lines(path):
+                m = _DEPRECATED_CALL.search(line)
+                if m and not line.lstrip().startswith("def "):
+                    errors.append(
+                        f"{rel}:{lineno}: calls deprecated `{m.group(1)}(`"
+                        f" — use serenity.plan(graph, PlanConfig(...))")
+                if _DEPRECATED_KWARG.search(line):
+                    errors.append(
+                        f"{rel}:{lineno}: deprecated kwarg `beam_fallback=`"
+                        f" — use PlanConfig(on_timeout=...)")
+    for e in errors:
+        print(f"::error::{e}")
+    n_files = sum(len(list((ROOT / d).rglob("*.py"))) for d in SCAN_DIRS)
+    print(f"lint_plan_api: {n_files} files scanned, {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
