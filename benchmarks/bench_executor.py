@@ -1,0 +1,189 @@
+"""Wall-clock executor benchmark: us/step across execution strategies.
+
+For each paper cell (and the stacked >=200-node full networks in the
+non-smoke run) the same ``(graph, order, plan)`` triple is executed five
+ways and timed end to end (fresh arena per call — the serving steady
+state; min over repetitions):
+
+  ``eager_slice_us``  slice-per-node Python loop, one arena op dispatch per
+                      read/write (the pre-fusion hot path)
+  ``eager_fused_us``  fused alias-chain loop (DESIGN.md §11): chain members
+                      forward values in registers, one store — a single
+                      chain-kernel launch for contiguous elementwise runs —
+                      per region
+  ``jit_slice_us``    the slice-per-node program traced once into XLA
+                      (cached on the plan), arena donated
+  ``jit_fused_us``    the fused program, same whole-program jit — the fused
+                      executor's fast path
+  ``ref_jit_us``      ``jax.jit(reference_fn(g))``: the unscheduled
+                      baseline, XLA plans the memory
+
+Every timed strategy is first verified: eager paths bit-equal to
+``run_reference`` and realized peak/extent == planned.  The acceptance
+gate of the fused-execution PR is asserted here: on at least one paper
+cell the fused executor (steady-state jit) must run **>= 2x** faster than
+the slice-per-node hot path (``fused_speedup = eager_slice_us /
+jit_fused_us``).
+
+A second section drives the continuous-batching decode server
+(``repro.launch.serve``) over a smoke model in both step modes and
+reports per-token service time — ``executor/decode_serial`` vs
+``executor/decode_vmap`` (the bucketed arena->arena batched program).
+
+Rows land in ``BENCH_baseline.json``; ``diff_baseline.py`` tripwires the
+``executor/`` duration columns at >2x with a unit-aware noise floor and
+exact-diffs the fusion-coverage counts (``n_regions``/``max_chain``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import PlanConfig, compile_plan, plan, reference_fn, run_reference
+
+_REGRESSION_GATE = 2.0
+
+
+def _bench_us(fn, reps: int) -> float:
+    import jax
+
+    jax.block_until_ready(fn())          # warm (trace + compile)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _graph_rows(csv_rows: list, smoke: bool) -> dict:
+    import jax
+
+    from repro.graphs import BENCHMARK_GRAPHS, darts_network, randwire_network
+
+    cases = [("darts_imagenet_cell", BENCHMARK_GRAPHS["darts_imagenet_cell"])]
+    if not smoke:
+        cases += [(n, BENCHMARK_GRAPHS[n])
+                  for n in ("swiftnet_cell_c", "randwire_cifar10")]
+        cases += [
+            ("randwire_net_32x8", lambda: randwire_network(n_cells=8, n=32)),
+            ("darts_net_x6", lambda: darts_network(n_cells=6)),
+        ]
+    reps = 3 if smoke else 5
+    speedups: dict[str, float] = {}
+    for name, mk in cases:
+        res = plan(mk(), PlanConfig(), cache=False)
+        g, order, apl = res.graph, res.order, res.arena
+        prog_s = compile_plan(g, order, apl, fuse=False)
+        prog_f = compile_plan(g, order, apl, fuse=True)
+
+        # correctness first: both eager paths bit-equal to the reference,
+        # realized footprint identical to the plan
+        ref = run_reference(g)
+        for prog, tag in ((prog_s, "slice"), (prog_f, "fused")):
+            r = prog.run()
+            assert r.realized_matches_plan, f"{name}/{tag}: footprint diverged"
+            for k, v in ref.items():
+                np.testing.assert_array_equal(
+                    np.asarray(v), np.asarray(r.outputs[k]),
+                    err_msg=f"{name}/{tag}: output {k} != run_reference")
+
+        ext = prog_s.resolve_ext(None)
+        rows = {
+            "eager_slice": _bench_us(lambda: prog_s.run().outputs, reps),
+            "eager_fused": _bench_us(lambda: prog_f.run().outputs, reps),
+            "jit_slice": _bench_us(lambda: prog_s.run(jit=True).outputs,
+                                   reps),
+            "jit_fused": _bench_us(lambda: prog_f.run(jit=True).outputs,
+                                   reps),
+        }
+        rfn = jax.jit(reference_fn(g))
+        rows["ref_jit"] = _bench_us(lambda: rfn(ext), reps)
+        speedup = rows["eager_slice"] / rows["jit_fused"]
+        speedups[name] = speedup
+        max_chain = max(len(r) for r in prog_f.regions)
+        csv_rows.append((
+            f"executor/step_{name}", rows["jit_fused"],
+            f"eager_slice_us={rows['eager_slice']:.0f};"
+            f"eager_fused_us={rows['eager_fused']:.0f};"
+            f"jit_slice_us={rows['jit_slice']:.0f};"
+            f"jit_fused_us={rows['jit_fused']:.0f};"
+            f"ref_jit_us={rows['ref_jit']:.0f};"
+            f"fused_speedup={speedup:.2f};"
+            f"n_nodes={len(order)};n_regions={prog_f.n_regions};"
+            f"n_fused={prog_f.n_fused_nodes};max_chain={max_chain};"
+            f"arena_bytes={apl.arena_bytes}",
+        ))
+    cells = [n for n in speedups if not n.endswith(("_32x8", "_x6"))]
+    best = max(speedups[n] for n in cells)
+    assert best >= _REGRESSION_GATE, (
+        f"fused executor gate: expected >= {_REGRESSION_GATE}x over the "
+        f"slice-per-node hot path on at least one paper cell, best was "
+        f"{best:.2f}x ({ {n: round(speedups[n], 2) for n in cells} })")
+    return speedups
+
+
+def _decode_rows(csv_rows: list, smoke: bool) -> dict:
+    import jax
+
+    import repro.configs as configs
+    from repro.launch.serve import (
+        plan_decode_arena,
+        run_server,
+        synth_requests,
+    )
+    from repro.models.zoo import build_model
+
+    cfg = dataclasses.replace(configs.smoke("llama3.2-1b"),
+                              name="llama3.2-1b-exec-bench",
+                              vocab_size=4096)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_req, prompt, gen = (4, 8, 4) if smoke else (8, 16, 8)
+    smax = prompt + gen
+    dplan = plan_decode_arena(model, 1, smax)
+    budget = 16 * dplan["arena_bytes"]    # roomy: measure decode, not queueing
+
+    out = {}
+    for mode in ("serial", "vmap"):
+        # one throwaway run absorbs the prefill/decode jit tracing
+        run_server(model, params,
+                   synth_requests(2, prompt, gen, cfg.vocab_size, seed=1),
+                   smax=smax, budget_bytes=budget, step_mode=mode, warm=1)
+        reqs = synth_requests(n_req, prompt, gen, cfg.vocab_size, seed=7)
+        m = run_server(model, params, reqs, smax=smax, budget_bytes=budget,
+                       step_mode=mode, warm=2)
+        assert m["n_served"] == n_req and m["n_rejected"] == 0
+        tok_us = m["wall_s"] / max(m["n_tokens"], 1) * 1e6
+        out[mode] = tok_us
+        csv_rows.append((
+            f"executor/decode_{mode}", m["wall_s"] * 1e6,
+            f"tok_us={tok_us:.0f};n_tokens={m['n_tokens']};"
+            f"tok_per_s={m['tok_per_s']:.1f};steps={m['steps']};"
+            f"max_concurrent={m['max_concurrent']};"
+            f"peak_reserved_bytes={m['peak_reserved_bytes']};"
+            f"arena_bytes={m['arena_bytes']}",
+        ))
+    return out
+
+
+def run(csv_rows: list, smoke: bool = False) -> dict:
+    speedups = _graph_rows(csv_rows, smoke)
+    decode = _decode_rows(csv_rows, smoke)
+    return {
+        "fused_speedups": speedups,
+        "decode_tok_us": decode,
+        "gate": _REGRESSION_GATE,
+    }
+
+
+if __name__ == "__main__":
+    rows: list = []
+    summary = run(rows, smoke=True)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(summary)

@@ -14,7 +14,10 @@ request-latency percentiles (``p50_ms``/``p99_ms``/``wall_s``) are
 tripwired at >2x with the unit-aware noise floor, and the load-dependent
 peak-bytes columns (``peak_reserved_bytes``) warn on a >2x regression
 instead of exact-diffing (admission timing may legitimately shift them a
-little; doubling means the pool stopped sharing).  Metric keys present only on one side are never treated as
+little; doubling means the pool stopped sharing).  ``executor/`` rows are
+tripwired on every duration column (``*_us`` step times) with a lower,
+per-step noise floor, while their fusion-coverage counts
+(``n_regions``/``n_fused``/``max_chain``) stay exact-diffed.  Metric keys present only on one side are never treated as
 value regressions: a key that *disappeared* from the smoke run warns (a
 bench stopped reporting it), while a *new* column (e.g. ``realized_bytes``
 on its first appearance) is a plain note until it lands in the committed
@@ -45,6 +48,9 @@ _REL_TOL = 1e-6
 # be above the noise floor for its unit so microsecond jitter never warns
 _REGRESSION_FACTOR = 2.0
 _NOISE_FLOOR = {"s": 0.05, "ms": 50.0, "us": 50_000.0}
+# executor rows measure single steps (tens of microseconds and up), so the
+# scheduling-time floor would mask every real regression: use a lower one
+_NOISE_FLOOR_EXEC = {"s": 0.0005, "ms": 0.5, "us": 500.0}
 # serving rows: latency keys eligible for the >2x duration tripwire (plain
 # `tok_per_s` etc. end in `_s` too, but are rates, not durations)
 _SERVING_LAT_KEY = re.compile(r"^(p\d+_(ms|s|us)|wall_s|latency_\w+)$")
@@ -68,12 +74,18 @@ def _duration_unit(key: str, value: str) -> str | None:
 def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
     """True (and warn) when a duration metric regressed >2x.
 
-    Applies to every duration key of ``scheduling_time/`` rows and to the
+    Applies to every duration key of ``scheduling_time/`` and ``executor/``
+    rows (the latter with a per-step noise floor) and to the
     request-latency keys (p50/p99/wall) of ``serving/`` rows.
     """
+    floor = _NOISE_FLOOR
     if name.startswith("scheduling_time/"):
         if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
             return False
+    elif name.startswith("executor/"):
+        if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
+            return False
+        floor = _NOISE_FLOOR_EXEC
     elif name.startswith("serving/"):
         if not _SERVING_LAT_KEY.match(key):
             return False
@@ -87,10 +99,11 @@ def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
         fn = float(new.rstrip("smu"))
     except ValueError:
         return False
-    if fn <= _NOISE_FLOOR[unit] or fo <= 0:
+    if fn <= floor[unit] or fo <= 0:
         return False
     if fn > _REGRESSION_FACTOR * fo:
-        kind = "latency" if name.startswith("serving/") else "scheduling time"
+        kind = "latency" if name.startswith("serving/") else \
+            "step time" if name.startswith("executor/") else "scheduling time"
         print(f"::warning::{name}: {kind} {key} regressed "
               f">{_REGRESSION_FACTOR:g}x: {old} -> {new}")
         return True

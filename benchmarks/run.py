@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_roofline         (ours)      dry-run roofline table (§Roofline)
   bench_jaxpr_sched      (ours)      SERENITY-on-jaxpr liveness gains
   bench_serving          (ours)      multi-tenant pool vs per-request arenas
+  bench_executor         (ours)      us/step: slice-per-node vs fused vs jit
+                                     executors + serial vs batched decode
 
 ``--smoke`` runs every module on tiny graph sizes with a single repetition
 (seconds, not minutes) so CI can exercise each entry point; ``--json PATH``
@@ -47,6 +49,7 @@ def main() -> None:
     if _ROOT not in sys.path:
         sys.path.insert(0, _ROOT)
     from benchmarks import (
+        bench_executor,
         bench_footprint_trace,
         bench_jaxpr_sched,
         bench_offchip_traffic,
@@ -64,6 +67,7 @@ def main() -> None:
         bench_roofline,
         bench_jaxpr_sched,
         bench_serving,
+        bench_executor,
     ]
     if args.only:
         modules = [m for m in modules if m.__name__.endswith(args.only)]

@@ -39,8 +39,11 @@ from repro.core.budget import adaptive_budget_schedule
 from repro.core.executor import (
     ExecutionResult,
     ExecutorError,
+    PlanProgram,
     RealizedTracker,
+    compile_plan,
     execute_plan,
+    reference_fn,
     run_reference,
 )
 from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
@@ -67,9 +70,11 @@ from repro.core.plancache import (
     wl_colors,
 )
 from repro.core.rewriter import (
+    FusedRegion,
     RecomputeReport,
     RewriteReport,
     annotate_inplace,
+    fuse_alias_chains,
     graph_flops,
     node_flops,
     recompute_provenance,
@@ -101,6 +106,7 @@ __all__ = [
     "BASELINES",
     "ExecutionResult",
     "ExecutorError",
+    "FusedRegion",
     "Graph",
     "GraphError",
     "Node",
@@ -110,6 +116,7 @@ __all__ = [
     "Plan",
     "PlanCache",
     "PlanConfig",
+    "PlanProgram",
     "RealizedTracker",
     "RecomputeReport",
     "RewriteReport",
@@ -125,12 +132,14 @@ __all__ = [
     "annotate_inplace",
     "brute_force_schedule",
     "canonical_hash",
+    "compile_plan",
     "default_cache",
     "dfs_schedule",
     "dp_schedule",
     "execute",
     "execute_plan",
     "find_separators",
+    "fuse_alias_chains",
     "graph_flops",
     "labeled_fingerprint",
     "greedy_schedule",
@@ -145,6 +154,7 @@ __all__ = [
     "plan_coresidency",
     "plan_shared_arena",
     "recompute_provenance",
+    "reference_fn",
     "rematerialize",
     "resident_bytes",
     "rewrite_graph",

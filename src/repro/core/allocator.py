@@ -110,6 +110,16 @@ class ArenaPlan:
                     index[nid] = a
             self._index = index
 
+    def __getstate__(self):
+        # derived caches: the offset index is cheap to rebuild, and compiled
+        # executor programs (repro.core.executor.compile_plan memoizes them
+        # on the plan) hold jitted closures that must never hit the plan
+        # cache's pickled disk tier
+        state = dict(self.__dict__)
+        state.pop("_index", None)
+        state.pop("_programs", None)
+        return state
+
     @property
     def frag_ratio(self) -> float:
         """arena_bytes / peak_bytes — 1.0 means a fragmentation-free packing."""

@@ -32,10 +32,23 @@ Alongside values, execution *measures* the arena (realized, not estimated):
 ``strict=True`` (default) asserts both equalities — the realized-vs-planned
 invariant of DESIGN.md §6.
 
+Execution has two granularities (DESIGN.md §11): the default
+*slice-per-node* path issues one arena read per predecessor and one write
+per node — maximally transparent, every dataflow edge round-trips through
+the arena — and the *fused* path (``fuse=True``) executes each in-place
+alias chain (:func:`repro.core.rewriter.fuse_alias_chains`) as one region:
+the running value is forwarded in registers between chain members and the
+chain's shared slice is written once (a single Pallas launch /
+``dynamic_update_slice`` for pure-elementwise tails).  Both paths are
+bit-equal to ``run_reference`` and realize the same planned footprint.
+
 Public entry points
 -------------------
 run_reference(g, inputs)                   -> {output name: value}
+reference_fn(g)                            -> jit-able unscheduled baseline
 execute_plan(g, order, plan, inputs, ...)  -> ExecutionResult
+compile_plan(g, order, plan, ...)          -> PlanProgram (precompiled,
+                                              memoized on the plan)
 RealizedTracker                            -- the measurement machinery
 pack_buffers / unpack_buffer               -- move real (shaped, dtyped)
                                               tensors in/out of a planned
@@ -53,7 +66,14 @@ import numpy as np
 
 from repro.core.allocator import ArenaPlan
 from repro.core.graph import Graph, Node
-from repro.kernels.arena import arena_accum, arena_read, arena_write
+from repro.core.rewriter import FusedRegion, fuse_alias_chains
+from repro.kernels.arena import (
+    arena_accum,
+    arena_chain_write,
+    arena_read,
+    arena_write,
+)
+from repro.kernels.arena.elemwise import ELEMWISE_FNS
 
 
 class ExecutorError(ValueError):
@@ -64,24 +84,10 @@ class ExecutorError(ValueError):
 # Surrogate numerics: deterministic per-op value functions on flat float32
 # ---------------------------------------------------------------------------
 
-# unary elementwise ops (the in-place-eligible set plus synonyms); each maps
-# an (n,) vector to an (n,) vector element-by-element, so aliasing the input
-# buffer is semantics-preserving
-_ELEMWISE: dict[str, Callable] = {
-    "relu": lambda x: jnp.maximum(x, 0.0),
-    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
-    "bn": lambda x: 1.05 * x - 0.02,
-    "batchnorm": lambda x: 1.05 * x - 0.02,
-    "sigmoid": jax.nn.sigmoid,
-    "tanh": jnp.tanh,
-    "gelu": jax.nn.gelu,
-    "silu": jax.nn.silu,
-    "bias_add": lambda x: x + 0.05,
-    "scale": lambda x: 0.9 * x,
-    "dropout": lambda x: x,          # deterministic (inference) semantics
-    "identity": lambda x: x,
-    "cast_inplace": lambda x: x,
-}
+# unary elementwise ops (the in-place-eligible set plus synonyms); the
+# canonical table lives in repro.kernels.arena.elemwise so the fused chain
+# kernels apply the exact same jnp callables (bit-equality by construction)
+_ELEMWISE: dict[str, Callable] = ELEMWISE_FNS
 
 OpFn = Callable[[Node, list, int], "jnp.ndarray"]
 
@@ -299,6 +305,35 @@ class RealizedTracker:
 # ---------------------------------------------------------------------------
 
 
+def reference_fn(g: Graph,
+                 registry: Mapping[str, OpFn] | None = None) -> Callable:
+    """A jit-able closure computing ``g``'s reference outputs.
+
+    Returns ``fn(ext_vals) -> tuple`` mapping a tuple of input-node values
+    (input-node id order, flat float32) to the tuple of exit-node values,
+    with every intermediate held as its own array — no arena, XLA plans the
+    memory.  This is the *unscheduled jit* baseline of
+    ``benchmarks/bench_executor.py``; :func:`run_reference` wraps it.
+    """
+    order = list(g.topo_order())
+    nds = g.nodes
+    elems = {u: _elems(g.sizes[u], nds[u].name) for u in order}
+
+    def fn(ext_vals):
+        env: dict[int, jnp.ndarray] = {}
+        it = iter(ext_vals)
+        for u in order:
+            nd = nds[u]
+            if nd.op == "input":
+                env[u] = _fit(next(it), elems[u])
+            else:
+                env[u] = node_value(nd, [env[p] for p in nd.preds],
+                                    elems[u], registry)
+        return tuple(env[u] for u in g.exits())
+
+    return fn
+
+
 def run_reference(g: Graph, inputs=None, *,
                   registry: Mapping[str, OpFn] | None = None
                   ) -> dict[str, "jnp.ndarray"]:
@@ -308,16 +343,10 @@ def run_reference(g: Graph, inputs=None, *,
     array (no arena).  Returns ``{node name: flat f32 value}`` for the graph
     outputs (nodes with no consumers).
     """
-    env: dict[int, jnp.ndarray] = {}
     ext = _resolve_inputs(g, inputs)
-    for u in g.topo_order():
-        nd = g.nodes[u]
-        n = _elems(nd.size_bytes, nd.name)
-        if nd.op == "input":
-            env[u] = _fit(ext[u], n)
-        else:
-            env[u] = node_value(nd, [env[p] for p in nd.preds], n, registry)
-    return {g.nodes[u].name: env[u] for u in g.exits()}
+    vals = tuple(ext[u] for u in input_nodes(g))
+    outs = reference_fn(g, registry)(vals)
+    return {g.nodes[u].name: v for u, v in zip(g.exits(), outs)}
 
 
 @dataclasses.dataclass
@@ -337,11 +366,317 @@ class ExecutionResult:
     planned_arena_bytes: int
     order: list[int]
     impl: str
+    fused: bool = False
+    n_regions: int = 0
 
     @property
     def realized_matches_plan(self) -> bool:
         return (self.realized_peak_bytes == self.planned_peak_bytes
                 and self.realized_arena_bytes == self.planned_arena_bytes)
+
+
+class PlanProgram:
+    """A precompiled executable for one ``(graph, order, plan)`` triple.
+
+    Everything derivable from the plan alone is computed once at
+    construction — float32 element counts, per-node element offsets, the
+    realized peak/extent (the :class:`RealizedTracker` replay is a pure
+    function of the schedule), the fused-region decomposition and each
+    region's elementwise tail — so calling :meth:`run` only feeds values
+    through the arena program.  ``execute_plan`` used to re-derive all of
+    this on every call, which dominated on the 274-node full networks; it
+    now routes through :func:`compile_plan`, which memoizes instances on
+    the plan itself.  The whole-program jit (``jit=True``) is traced once
+    per program and reused, arena donated.
+
+    With ``fuse=False`` the program replays the slice-per-node path
+    bit-for-bit (one read per predecessor, one write/accumulate per node).
+    With ``fuse=True`` each :class:`~repro.core.rewriter.FusedRegion` runs
+    as one unit: the running chain value is forwarded in registers from
+    member to member (legal because an aliased predecessor has exactly one
+    consumer — nothing else ever reads the interior values) and only the
+    final member's value is stored, through
+    :func:`~repro.kernels.arena.arena_chain_write` when the region tail is
+    pure unregistered elementwise (one launch), else a single
+    ``arena_write``.  Cross-region edges still round-trip through the
+    arena, so the fused path realizes the identical footprint and stays
+    bit-equal to ``run_reference`` (DESIGN.md §11).
+    """
+
+    def __init__(self, g: Graph, order: Sequence[int], plan: ArenaPlan, *,
+                 fuse: bool = False,
+                 registry: Mapping[str, OpFn] | None = None,
+                 impl: str = "auto", interpret: bool = False):
+        self.graph = g
+        self.order = list(order)
+        self.plan = plan
+        self.fuse = bool(fuse)
+        self.registry = registry
+        self.impl = impl
+        self.interpret = interpret
+        nds = g.nodes
+        self._elems = {u: _elems(g.sizes[u], nds[u].name)
+                       for u in self.order}
+        off = {}
+        for u in self.order:
+            b = plan.offset_of(u)
+            if b % 4:
+                raise ExecutorError(
+                    f"node {nds[u].name}: planned byte offset {b} is not "
+                    f"float32-aligned")
+            off[u] = b // 4
+        self._off = off
+        self.arena_elems = -(-plan.arena_bytes // 4)
+        self._input_ids = [u for u in self.order if nds[u].op == "input"]
+        self._exit_ids = list(g.exits())
+
+        # rewriter-produced views alias every predecessor; a mixed view has
+        # no arena layout for the non-aliased parts — refuse rather than
+        # silently diverge from run_reference
+        for u in self.order:
+            nd = nds[u]
+            if nd.op == "concat_view" and nd.alias_preds and \
+                    any(p not in nd.alias_preds for p in nd.preds):
+                raise ExecutorError(
+                    f"concat_view {nd.name}: preds {nd.preds} are not "
+                    f"all aliased ({sorted(nd.alias_preds)}); mixed "
+                    f"views are not executable")
+
+        # realized footprint is a pure function of (g, order, plan): replay
+        # it once here instead of on every execution
+        tracker = RealizedTracker(g, self.order, plan)
+        for u in self.order:
+            tracker.step(u)
+        self.realized_peak_bytes = tracker.peak_bytes
+        self.realized_arena_bytes = tracker.extent_bytes
+
+        if self.fuse:
+            self.regions = fuse_alias_chains(g, self.order, plan)
+        else:
+            self.regions = [FusedRegion((u,)) for u in self.order]
+        # interior members forward their value in registers (no arena write)
+        self._interior = {u for r in self.regions for u in r.node_ids[:-1]}
+        # collapse schedule-contiguous pure-elementwise chain runs ending at
+        # a region tail into one arena_chain_write launch:
+        #   {schedule position of run head: (members consumed, ops, tail id)}
+        link_next: dict[int, int] = {}
+        for r in self.regions:
+            for a, b in zip(r.node_ids, r.node_ids[1:]):
+                link_next[a] = b
+        self._groups: dict[int, tuple[int, tuple[str, ...], int]] = {}
+        consumed: set[int] = set()
+        for i, u in enumerate(self.order):
+            if i in consumed:
+                continue
+            j, ops = i, []
+            while j + 1 < len(self.order):
+                nxt = link_next.get(self.order[j])
+                if nxt is None or self.order[j + 1] != nxt:
+                    break
+                nd = nds[nxt]
+                if (nd.op not in ELEMWISE_FNS or len(nd.preds) != 1
+                        or (registry is not None and nd.op in registry)):
+                    break
+                ops.append(nd.op)
+                j += 1
+            if ops and self.order[j] not in self._interior:
+                self._groups[i] = (j - i, tuple(ops), self.order[j])
+                consumed.update(range(i + 1, j + 1))
+        self._jitted = None
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+    @property
+    def n_fused_nodes(self) -> int:
+        """Chain members executed without their own arena write."""
+        return sum(len(r) - 1 for r in self.regions)
+
+    # -- program body ------------------------------------------------------
+
+    def _zero_view_tail(self, arena, u):
+        # concat_view parts already sit back-to-back inside this buffer: the
+        # concat never materializes.  Zero any tail the parts do not cover
+        # so the view equals the reference's zero-pad.
+        n, covered = self._elems[u], sum(self._elems[p]
+                                         for p in self.graph.nodes[u].preds)
+        if covered < n:
+            arena = arena_write(
+                arena, jnp.zeros(n - covered, jnp.float32),
+                self._off[u] + covered, impl=self.impl,
+                interpret=self.interpret)
+        return arena
+
+    def _body_slice(self, arena, ext_it):
+        """Slice-per-node: one read per predecessor, one store per node."""
+        nds = self.graph.nodes
+        elems, off = self._elems, self._off
+        impl, interpret, registry = self.impl, self.interpret, self.registry
+        for u in self.order:
+            nd = nds[u]
+            if nd.op == "concat_view" and nd.alias_preds:
+                arena = self._zero_view_tail(arena, u)
+                continue
+            if nd.op == "input":
+                arena = arena_write(arena, next(ext_it), off[u], impl=impl,
+                                    interpret=interpret)
+                continue
+            invals = [arena_read(arena, off[p], elems[p], impl=impl,
+                                 interpret=interpret) for p in nd.preds]
+            if nd.op == "partial_conv" and nd.alias_preds and \
+                    (registry is None or nd.op not in registry):
+                # in-place accumulation into the (aliased) running output —
+                # a true read-modify-write of the shared slice
+                branches = [v for p, v in zip(nd.preds, invals)
+                            if p not in nd.alias_preds]
+                contrib = _partial_conv_contrib(nd, branches, elems[u])
+                arena = arena_accum(arena, contrib, off[u], impl=impl,
+                                    interpret=interpret)
+                continue
+            arena = arena_write(arena, node_value(nd, invals, elems[u],
+                                                  registry),
+                                off[u], impl=impl, interpret=interpret)
+        return arena
+
+    def _body_fused(self, arena, ext_it):
+        """Fused: chain members forward their value in registers; only the
+        region tail stores.  Legal because an aliased predecessor has
+        exactly one consumer — the next chain member — so nothing an
+        interleaved node does can observe (or clobber: the chain's
+        allocation is live throughout) the skipped interior stores.
+        Schedule-contiguous pure-elementwise runs ending at a tail execute
+        as one ``arena_chain_write`` launch."""
+        nds = self.graph.nodes
+        elems, off = self._elems, self._off
+        impl, interpret, registry = self.impl, self.interpret, self.registry
+        order = self.order
+        fwd: dict = {}
+        i = 0
+        while i < len(order):
+            u = order[i]
+            nd = nds[u]
+            if nd.op == "concat_view" and nd.alias_preds:
+                arena = self._zero_view_tail(arena, u)
+                i += 1
+                continue
+            if nd.op == "input":
+                val = next(ext_it)
+            else:
+                invals = [fwd[p] if p in fwd
+                          else arena_read(arena, off[p], elems[p], impl=impl,
+                                          interpret=interpret)
+                          for p in nd.preds]
+                val = node_value(nd, invals, elems[u], registry)
+                for p in nd.preds:
+                    fwd.pop(p, None)  # single consumer: value is dead now
+            grp = self._groups.get(i)
+            if grp is not None:
+                m, ops, out = grp
+                arena = arena_chain_write(arena, val, off[out], ops,
+                                          impl=impl, interpret=interpret)
+                i += m + 1
+                continue
+            if u in self._interior:
+                fwd[u] = val
+            else:
+                arena = arena_write(arena, val, off[u], impl=impl,
+                                    interpret=interpret)
+            i += 1
+        return arena
+
+    def _program(self, arena, ext_flat):
+        body = self._body_fused if self.fuse else self._body_slice
+        arena = body(arena, iter(ext_flat))
+        outs = tuple(arena_read(arena, self._off[u], self._elems[u],
+                                impl=self.impl, interpret=self.interpret)
+                     for u in self._exit_ids)
+        return outs, arena
+
+    # -- entry point -------------------------------------------------------
+
+    def resolve_ext(self, inputs) -> tuple:
+        """Flatten/resize user inputs to the program's input tuple."""
+        ext = _resolve_inputs(self.graph, inputs)
+        return tuple(_fit(ext[u], self._elems[u]) for u in self._input_ids)
+
+    def run(self, inputs=None, *, arena=None, jit: bool = False,
+            strict: bool = True) -> ExecutionResult:
+        """Execute the program; see :func:`execute_plan` for semantics."""
+        plan = self.plan
+        ext_vals = self.resolve_ext(inputs)
+        if arena is None:
+            arena = jnp.zeros(self.arena_elems, jnp.float32)
+        elif strict and arena.shape[0] < self.arena_elems:
+            raise ExecutorError(
+                f"donated arena has {arena.shape[0]} elements "
+                f"({arena.shape[0] * 4} bytes) < planned arena_bytes "
+                f"{plan.arena_bytes}")
+        if strict and (self.realized_peak_bytes != plan.peak_bytes
+                       or self.realized_arena_bytes != plan.arena_bytes):
+            raise ExecutorError(
+                f"realized arena diverges from plan: peak "
+                f"{self.realized_peak_bytes} vs planned {plan.peak_bytes}, "
+                f"extent {self.realized_arena_bytes} vs planned "
+                f"{plan.arena_bytes}")
+
+        if jit:
+            if self._jitted is None:
+                self._jitted = jax.jit(self._program, donate_argnums=(0,))
+            outs, _ = self._jitted(arena, ext_vals)
+        else:
+            outs, _ = self._program(arena, ext_vals)
+
+        nds = self.graph.nodes
+        return ExecutionResult(
+            outputs={nds[u].name: v for u, v in zip(self._exit_ids, outs)},
+            realized_peak_bytes=self.realized_peak_bytes,
+            realized_arena_bytes=self.realized_arena_bytes,
+            planned_peak_bytes=plan.peak_bytes,
+            planned_arena_bytes=plan.arena_bytes,
+            order=list(self.order),
+            impl=self.impl,
+            fused=self.fuse,
+            n_regions=self.n_regions,
+        )
+
+
+_PROGRAM_CACHE_CAP = 8
+
+
+def compile_plan(
+    g: Graph,
+    order: Sequence[int],
+    plan: ArenaPlan,
+    *,
+    fuse: bool = False,
+    registry: Mapping[str, OpFn] | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> PlanProgram:
+    """Build (or fetch) the :class:`PlanProgram` for this plan.
+
+    Programs are memoized on the plan object itself (like its offset
+    index), keyed by the schedule and execution options, so repeat
+    executions — the decode tick loop, benchmark steady state — skip the
+    per-plan precomputation and reuse the cached jit trace.  The cache is
+    dropped on pickling (``ArenaPlan.__getstate__``) and capped per plan.
+    """
+    key = (id(g), tuple(order), bool(fuse), impl, bool(interpret),
+           None if registry is None else id(registry))
+    cache = plan.__dict__.setdefault("_programs", {})
+    prog = cache.get(key)
+    # ids can be recycled after gc: accept a hit only if it still points at
+    # the same live objects
+    if prog is not None and prog.graph is g and \
+            (registry is None or prog.registry is registry):
+        return prog
+    prog = PlanProgram(g, order, plan, fuse=fuse, registry=registry,
+                       impl=impl, interpret=interpret)
+    cache[key] = prog
+    while len(cache) > _PROGRAM_CACHE_CAP:
+        cache.pop(next(iter(cache)))
+    return prog
 
 
 def execute_plan(
@@ -356,6 +691,7 @@ def execute_plan(
     arena=None,
     jit: bool = False,
     strict: bool = True,
+    fuse: bool = False,
 ) -> ExecutionResult:
     """Run schedule ``order`` of ``g`` against the planned arena.
 
@@ -369,116 +705,28 @@ def execute_plan(
         sequence in input-node order); missing inputs get a deterministic
         per-node default.  Values are flattened to float32.
       registry: optional op-function overrides (see :func:`node_value`).
-      impl: arena slice op dispatch — 'auto' (Pallas on TPU, XLA elsewhere),
-        'pallas', 'xla', or 'ref'.
+      impl: arena slice op dispatch — 'auto' (Pallas on TPU, XLA elsewhere;
+        ``$REPRO_ARENA_IMPL`` overrides), 'pallas', 'xla', or 'ref'.
       interpret: run Pallas kernels in interpret mode (CPU validation).
       arena: optional donated float32 buffer of at least
         ``plan.arena_bytes / 4`` elements to execute in (reused storage,
         e.g. across decode steps); allocated fresh when ``None``.
       jit: trace the whole arena program into one jitted function with the
-        arena buffer donated to XLA.
+        arena buffer donated to XLA (trace cached per plan/options).
       strict: assert the realized-vs-planned invariant and that the arena
         buffer is large enough.
+      fuse: execute in-place alias chains as fused regions — value
+        forwarding between members, one write (or one chain-kernel launch)
+        per region instead of per node (DESIGN.md §11).  Bit-equal to the
+        default slice-per-node path.
 
     Returns:
       :class:`ExecutionResult` with output values and the measured
       realized peak/extent bytes.
     """
-    order = list(order)
-    nds = g.nodes
-    elems = {u: _elems(g.sizes[u], nds[u].name) for u in order}
-    off = {}
-    for u in order:
-        b = plan.offset_of(u)
-        if b % 4:
-            raise ExecutorError(
-                f"node {nds[u].name}: planned byte offset {b} is not "
-                f"float32-aligned")
-        off[u] = b // 4
-    arena_elems = -(-plan.arena_bytes // 4)
-    ext = _resolve_inputs(g, inputs)
-    ext_vals = tuple(_fit(ext[u], elems[u]) for u in order
-                     if nds[u].op == "input")
-
-    tracker = RealizedTracker(g, order, plan)
-    for u in order:
-        tracker.step(u)
-
-    def _program(arena, ext_flat):
-        ext_it = iter(ext_flat)
-        for u in order:
-            nd = nds[u]
-            n = elems[u]
-            if nd.op == "input":
-                arena = arena_write(arena, next(ext_it), off[u], impl=impl,
-                                    interpret=interpret)
-                continue
-            if nd.op == "concat_view" and nd.alias_preds:
-                # parts already sit back-to-back inside this buffer: the
-                # concat never materializes.  Zero any tail the parts do
-                # not cover so the view equals the reference's zero-pad.
-                if any(p not in nd.alias_preds for p in nd.preds):
-                    # rewriter-produced views alias every predecessor; a
-                    # mixed view has no arena layout for the non-aliased
-                    # parts — refuse rather than silently diverge from
-                    # run_reference
-                    raise ExecutorError(
-                        f"concat_view {nd.name}: preds {nd.preds} are not "
-                        f"all aliased ({sorted(nd.alias_preds)}); mixed "
-                        f"views are not executable")
-                covered = sum(elems[p] for p in nd.preds
-                              if p in nd.alias_preds)
-                if covered < n:
-                    arena = arena_write(
-                        arena, jnp.zeros(n - covered, jnp.float32),
-                        off[u] + covered, impl=impl, interpret=interpret)
-                continue
-            invals = [arena_read(arena, off[p], elems[p], impl=impl,
-                                 interpret=interpret) for p in nd.preds]
-            if nd.op == "partial_conv" and nd.alias_preds:
-                # in-place accumulation into the (aliased) running output
-                branches = [v for p, v in zip(nd.preds, invals)
-                            if p not in nd.alias_preds]
-                contrib = _partial_conv_contrib(nd, branches, n)
-                arena = arena_accum(arena, contrib, off[u], impl=impl,
-                                    interpret=interpret)
-                continue
-            val = node_value(nd, invals, n, registry)
-            arena = arena_write(arena, val, off[u], impl=impl,
-                                interpret=interpret)
-        outs = tuple(arena_read(arena, off[u], elems[u], impl=impl,
-                                interpret=interpret) for u in g.exits())
-        return outs, arena
-
-    if arena is None:
-        arena = jnp.zeros(arena_elems, jnp.float32)
-    elif strict and arena.shape[0] < arena_elems:
-        raise ExecutorError(
-            f"donated arena has {arena.shape[0]} elements "
-            f"({arena.shape[0] * 4} bytes) < planned arena_bytes "
-            f"{plan.arena_bytes}")
-
-    if jit:
-        outs, _ = jax.jit(_program, donate_argnums=(0,))(arena, ext_vals)
-    else:
-        outs, _ = _program(arena, ext_vals)
-
-    result = ExecutionResult(
-        outputs={nds[u].name: v for u, v in zip(g.exits(), outs)},
-        realized_peak_bytes=tracker.peak_bytes,
-        realized_arena_bytes=tracker.extent_bytes,
-        planned_peak_bytes=plan.peak_bytes,
-        planned_arena_bytes=plan.arena_bytes,
-        order=order,
-        impl=impl,
-    )
-    if strict and not result.realized_matches_plan:
-        raise ExecutorError(
-            f"realized arena diverges from plan: peak "
-            f"{result.realized_peak_bytes} vs planned {plan.peak_bytes}, "
-            f"extent {result.realized_arena_bytes} vs planned "
-            f"{plan.arena_bytes}")
-    return result
+    return compile_plan(g, order, plan, fuse=fuse, registry=registry,
+                        impl=impl, interpret=interpret).run(
+        inputs, arena=arena, jit=jit, strict=strict)
 
 
 # ---------------------------------------------------------------------------

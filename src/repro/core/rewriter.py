@@ -592,3 +592,92 @@ def rematerialize(
          for nd in gw.nodes],
         name=f"{g.name}+rc{report.n_clones}")
     return gw, report
+
+
+# ---------------------------------------------------------------------------
+# Alias-chain fusion regions (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+# Ops that never join a fused region.  A ``concat_view`` computes nothing —
+# its parts already sit back-to-back at distinct intra-buffer offsets — so
+# there is no value to forward through it, and its members' writes land at
+# different addresses than the view's own offset.
+FUSE_BARRIER_OPS = frozenset({"concat_view"})
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedRegion:
+    """A maximal schedule-contiguous in-place alias chain, executed as one
+    unit: the head's value is computed once, every member transforms it in
+    registers, and the final value is written to the chain's (shared) arena
+    slice in a single store (DESIGN.md §11).
+
+    ``node_ids`` is ordered as scheduled; a length-1 region is an unfused
+    node (the slice-per-node step).
+    """
+
+    node_ids: tuple[int, ...]
+
+    @property
+    def head(self) -> int:
+        return self.node_ids[0]
+
+    @property
+    def out(self) -> int:
+        """The node whose value the region's single write stores."""
+        return self.node_ids[-1]
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
+
+
+def fuse_alias_chains(g: Graph, order, plan=None) -> list[FusedRegion]:
+    """Partition a schedule into maximal in-place alias chains.
+
+    A *link* ``u -> v`` exists when ``v`` aliases exactly ``u``
+    (``alias_preds == {u}`` — the chains produced by
+    :func:`annotate_inplace` and the rewriter's accumulating partial
+    convs), neither op is a fusion barrier, sizes match exactly, and —
+    when a ``plan`` is given — both nodes resolve to the *same* planned
+    byte offset (an intra-buffer delta would mean the running value no
+    longer stands for the arena content at the write address).  Since an
+    aliased predecessor has exactly one consumer (``Graph`` validation),
+    links form vertex-disjoint paths; each maximal path is one
+    :class:`FusedRegion`, every other node a singleton.
+
+    Members need *not* be schedule-contiguous: the DP routinely interleaves
+    branch computation between a chain's accumulation steps.  Fused
+    execution is still legal because nothing outside the chain can read an
+    interior member (single-consumer invariant) and the chain's allocation
+    stays live for the chain's whole span, so no interleaved node writes
+    into its slice.  The executor therefore forwards the running value in
+    registers across the gaps and stores only the final member
+    (DESIGN.md §11).
+
+    Returns regions covering ``order`` exactly once, ordered by head
+    schedule position, with each region's ``node_ids`` in schedule order.
+    """
+    order = list(order)
+    pos = {u: i for i, u in enumerate(order)}
+    link: dict[int, int] = {}
+    for v in order:
+        nd = g.nodes[v]
+        if len(nd.alias_preds) != 1 or nd.op in FUSE_BARRIER_OPS:
+            continue
+        (u,) = tuple(nd.alias_preds)
+        if (u in pos
+                and g.nodes[u].op not in FUSE_BARRIER_OPS
+                and g.sizes[v] == g.sizes[u]
+                and (plan is None
+                     or plan.offset_of(v) == plan.offset_of(u))):
+            link[u] = v
+    tails = set(link.values())
+    regions: list[FusedRegion] = []
+    for u in order:                      # heads precede members in order
+        if u in tails:
+            continue
+        chain = [u]
+        while chain[-1] in link:
+            chain.append(link[chain[-1]])
+        regions.append(FusedRegion(tuple(chain)))
+    return regions

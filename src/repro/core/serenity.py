@@ -602,6 +602,7 @@ def execute(
     arena=None,
     jit: bool = False,
     strict: bool = True,
+    fuse: bool = False,
     config: PlanConfig | None = None,
     cache: "PlanCache | bool | None" = True,
     **schedule_kw,
@@ -623,11 +624,12 @@ def execute(
         float32.  Missing inputs get deterministic defaults.
       plan: an :class:`ArenaPlan` to realize (skips scheduling).
       order: the schedule ``plan`` was built from (required with ``plan``).
-      impl / interpret / arena / jit / strict: forwarded to
+      impl / interpret / arena / jit / strict / fuse: forwarded to
         :func:`repro.core.executor.execute_plan` — slice-op dispatch
         (Pallas on TPU / XLA elsewhere), Pallas interpret mode, an optional
-        donated float32 buffer, whole-program jit, and the
-        realized-vs-planned assertion.
+        donated float32 buffer, whole-program jit, the
+        realized-vs-planned assertion, and fused alias-chain execution
+        (DESIGN.md §11).
       config / cache: forwarded to :func:`plan` when planning here.
       **schedule_kw: legacy ``schedule``-style kwargs (deprecation shim,
         warns once); mapped onto ``config`` — passing both is an error.
@@ -655,4 +657,4 @@ def execute(
                             "supplied (the schedule the plan was built from)")
     return execute_plan(g, order, plan, inputs, impl=impl,
                         interpret=interpret, arena=arena, jit=jit,
-                        strict=strict)
+                        strict=strict, fuse=fuse)

@@ -1,13 +1,21 @@
 """Arena slice kernels: move tensors in/out of the planned linear arena.
 
-kernel.py  -- pl.pallas_call slice read/write/accumulate (TPU; interpret on CPU)
-ops.py     -- dispatching wrappers (impl in {auto, pallas, xla, ref})
-ref.py     -- numpy oracle
+kernel.py   -- pl.pallas_call slice read/write/accumulate + fused chain
+               write (TPU; interpret on CPU)
+ops.py      -- dispatching wrappers (impl in {auto, pallas, xla, ref};
+               $REPRO_ARENA_IMPL overrides 'auto')
+elemwise.py -- canonical unary elementwise tables (jnp + numpy twin)
+ref.py      -- numpy oracle
 
 Used by ``repro.core.executor`` to realize ``ArenaPlan`` offsets at runtime
-(DESIGN.md §6).
+(DESIGN.md §6) and to execute fused alias chains in one launch (§11).
 """
 
-from repro.kernels.arena.ops import arena_accum, arena_read, arena_write
+from repro.kernels.arena.ops import (
+    arena_accum,
+    arena_chain_write,
+    arena_read,
+    arena_write,
+)
 
-__all__ = ["arena_accum", "arena_read", "arena_write"]
+__all__ = ["arena_accum", "arena_chain_write", "arena_read", "arena_write"]

@@ -1,0 +1,89 @@
+"""Canonical unary-elementwise op tables shared by the executor and the
+fused arena-chain kernels (DESIGN.md §11).
+
+``ELEMWISE_FNS`` is the single source of truth for the surrogate numerics of
+the in-place-eligible unary ops (the same name set as
+``repro.core.rewriter.INPLACE_UNARY_OPS``): the reference interpreter, the
+slice-per-node executor and the fused chain kernels all apply *these exact
+jnp callables*, which is what makes fused execution on the XLA path
+bit-equal to the unfused path by construction — composing f(g(x)) in
+registers is the same float program as writing g(x) to the arena and
+reading it back for f.  (Inside a single Pallas kernel XLA may contract a
+chain's mul+add into an fma, so the one-launch kernel path is last-ulp
+allclose rather than bit-equal.)
+
+``ELEMWISE_NP`` is an independent numpy twin used only by the ``ref`` oracle
+(allclose ground truth for the Pallas kernels, not bit-equality — the
+transcendentals differ from XLA's in the last ulp).
+
+Kept in ``kernels.arena`` (not ``core.executor``) so the kernels never
+import the executor.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Each fn maps an (n,) vector to an (n,) vector element-by-element, so
+# aliasing the input buffer is semantics-preserving.
+ELEMWISE_FNS: dict[str, Callable] = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "relu6": lambda x: jnp.clip(x, 0.0, 6.0),
+    "bn": lambda x: 1.05 * x - 0.02,
+    "batchnorm": lambda x: 1.05 * x - 0.02,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "bias_add": lambda x: x + 0.05,
+    "scale": lambda x: 0.9 * x,
+    "dropout": lambda x: x,          # deterministic (inference) semantics
+    "identity": lambda x: x,
+    "cast_inplace": lambda x: x,
+}
+
+
+def _np_sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _np_gelu(x):
+    # tanh approximation — matches jax.nn.gelu's default (approximate=True)
+    c = np.sqrt(2.0 / np.pi).astype(x.dtype) if hasattr(x, "dtype") else \
+        np.sqrt(2.0 / np.pi)
+    return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+ELEMWISE_NP: dict[str, Callable] = {
+    "relu": lambda x: np.maximum(x, 0.0),
+    "relu6": lambda x: np.clip(x, 0.0, 6.0),
+    "bn": lambda x: 1.05 * x - 0.02,
+    "batchnorm": lambda x: 1.05 * x - 0.02,
+    "sigmoid": _np_sigmoid,
+    "tanh": np.tanh,
+    "gelu": _np_gelu,
+    "silu": lambda x: x * _np_sigmoid(x),
+    "bias_add": lambda x: x + 0.05,
+    "scale": lambda x: 0.9 * x,
+    "dropout": lambda x: x,
+    "identity": lambda x: x,
+    "cast_inplace": lambda x: x,
+}
+
+
+def apply_chain(x, ops):
+    """Apply a named elementwise chain with the canonical jnp callables."""
+    for op in ops:
+        x = ELEMWISE_FNS[op](x)
+    return x
+
+
+def apply_chain_np(x, ops):
+    """Numpy twin of :func:`apply_chain` (the ``ref`` oracle's compute)."""
+    for op in ops:
+        x = ELEMWISE_NP[op](x)
+    return x

@@ -2,12 +2,19 @@
 
 One linear arena buffer holds every intermediate activation of a scheduled
 graph at the byte offsets chosen by the offset allocator (DESIGN.md §6).
-Three kernels move tensors in and out of it:
+Four kernels move tensors in and out of it:
 
-  arena_write_pallas  -- copy a tensor into ``arena[offset : offset+n]``
-  arena_read_pallas   -- materialize ``arena[offset : offset+n]`` as a tensor
-  arena_accum_pallas  -- ``arena[offset : offset+n] += x`` (the rewriter's
-                         accumulating partial-conv step, done in place)
+  arena_write_pallas        -- copy a tensor into ``arena[offset : offset+n]``
+  arena_read_pallas         -- materialize ``arena[offset : offset+n]``
+  arena_accum_pallas        -- ``arena[offset : offset+n] += x`` (the
+                               rewriter's accumulating partial-conv step,
+                               done in place)
+  arena_chain_write_pallas  -- apply a whole unary elementwise alias chain
+                               (relu -> bn -> ...) to ``x`` *inside the
+                               kernel* and write the result once — the fused
+                               execution of an in-place chain in one launch
+                               instead of one write per member
+                               (DESIGN.md §11)
 
 Offsets are *static* (schedule-time constants from the ``ArenaPlan``), so
 each call site compiles to a fixed slice — no scatter/gather machinery.  The
@@ -27,6 +34,8 @@ import functools
 import jax
 from jax.experimental import pallas as pl
 
+from repro.kernels.arena.elemwise import ELEMWISE_FNS
+
 
 def _write_kernel(x_ref, arena_ref, out_ref, *, offset: int):
     # aliased arena: copy-through keeps interpret mode (no real aliasing)
@@ -45,8 +54,18 @@ def _read_kernel(arena_ref, out_ref, *, offset: int):
     out_ref[...] = arena_ref[pl.ds(offset, out_ref.shape[0])]
 
 
+def _chain_write_kernel(x_ref, arena_ref, out_ref, *, offset: int, fns):
+    out_ref[...] = arena_ref[...]
+    x = x_ref[...]
+    for fn in fns:
+        x = fn(x)
+    out_ref[pl.ds(offset, x_ref.shape[0])] = x
+
+
 def arena_write_pallas(arena, x, offset: int, *, interpret: bool = False):
     """Return ``arena`` with ``x`` written at element ``offset``."""
+    if x.shape[0] == 0:           # pl.ds(offset, 0) is not a valid slice
+        return arena
     return pl.pallas_call(
         functools.partial(_write_kernel, offset=offset),
         out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
@@ -57,6 +76,8 @@ def arena_write_pallas(arena, x, offset: int, *, interpret: bool = False):
 
 def arena_accum_pallas(arena, x, offset: int, *, interpret: bool = False):
     """Return ``arena`` with ``x`` added into ``arena[offset : offset+n]``."""
+    if x.shape[0] == 0:
+        return arena
     return pl.pallas_call(
         functools.partial(_accum_kernel, offset=offset),
         out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
@@ -67,8 +88,31 @@ def arena_accum_pallas(arena, x, offset: int, *, interpret: bool = False):
 
 def arena_read_pallas(arena, offset: int, n: int, *, interpret: bool = False):
     """Materialize ``arena[offset : offset+n]`` as a fresh ``(n,)`` tensor."""
+    if n == 0:
+        return jax.numpy.zeros((0,), arena.dtype)
     return pl.pallas_call(
         functools.partial(_read_kernel, offset=offset),
         out_shape=jax.ShapeDtypeStruct((n,), arena.dtype),
         interpret=interpret,
     )(arena)
+
+
+def arena_chain_write_pallas(arena, x, offset: int, ops=(), *,
+                             interpret: bool = False):
+    """Apply the elementwise chain ``ops`` to ``x`` and write it at
+    element ``offset`` — one launch for a whole in-place alias chain.
+
+    ``ops`` are names from :data:`~repro.kernels.arena.elemwise.ELEMWISE_FNS`
+    (unknown names raise ``KeyError`` at trace time); the chain composes in
+    kernel registers, so the launch count of a fused region is 1 regardless
+    of chain length.
+    """
+    fns = tuple(ELEMWISE_FNS[op] for op in ops)
+    if x.shape[0] == 0:
+        return arena
+    return pl.pallas_call(
+        functools.partial(_chain_write_kernel, offset=offset, fns=fns),
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(x, arena)

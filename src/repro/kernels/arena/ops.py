@@ -3,55 +3,87 @@
 ``xla`` lowers to ``lax.dynamic_slice`` / ``dynamic_update_slice`` — the
 portable path used on CPU and inside jitted executor programs.  ``pallas``
 runs the explicit TPU kernels (interpret mode off-TPU, for validation).
-``auto`` picks ``pallas`` on TPU backends and ``xla`` elsewhere.  All
-offsets/lengths are in *elements* of the arena dtype (see
+``auto`` picks ``pallas`` on TPU backends and ``xla`` elsewhere, unless the
+``REPRO_ARENA_IMPL`` environment variable overrides the sniff:
+
+    REPRO_ARENA_IMPL=pallas_interpret  # force Pallas kernels, interpret mode
+    REPRO_ARENA_IMPL=xla               # force the lax slice path
+    REPRO_ARENA_IMPL=pallas | ref      # likewise
+
+The override only applies to ``impl='auto'`` call sites (an explicit impl
+argument always wins) and is read per call, so CI's engine matrix can force
+the pallas-interpret path deterministically without touching call sites.
+All offsets/lengths are in *elements* of the arena dtype (see
 ``repro.core.executor`` for the byte conversion).
 """
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.arena.elemwise import apply_chain
 from repro.kernels.arena.kernel import (
     arena_accum_pallas,
+    arena_chain_write_pallas,
     arena_read_pallas,
     arena_write_pallas,
 )
 from repro.kernels.arena.ref import (
     arena_accum_ref,
+    arena_chain_write_ref,
     arena_read_ref,
     arena_write_ref,
 )
 
+ENV_IMPL = "REPRO_ARENA_IMPL"
+_IMPLS = ("pallas", "xla", "ref")
 
-def _resolve(impl: str) -> str:
+
+def _resolve(impl: str, interpret: bool) -> tuple[str, bool]:
+    """Resolve ``(impl, interpret)``; 'auto' honors $REPRO_ARENA_IMPL."""
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    if impl not in ("pallas", "xla", "ref"):
+        env = os.environ.get(ENV_IMPL, "").strip().lower()
+        if env in ("pallas_interpret", "pallas-interpret"):
+            return "pallas", True
+        if env in _IMPLS:
+            return env, interpret
+        if env:
+            raise ValueError(
+                f"{ENV_IMPL}={env!r}: expected one of "
+                f"{_IMPLS + ('pallas_interpret',)}")
+        return ("pallas" if jax.default_backend() == "tpu" else "xla",
+                interpret)
+    if impl not in _IMPLS:
         raise ValueError(f"unknown arena impl {impl!r}")
-    return impl
+    return impl, interpret
 
 
 def arena_write(arena, x, offset: int, *, impl: str = "auto",
                 interpret: bool = False):
     """Write ``x`` (1-D, arena dtype) at element ``offset``; returns arena."""
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
         return arena_write_pallas(arena, x, offset, interpret=interpret)
     if impl == "ref":
         return jnp.asarray(arena_write_ref(arena, x, offset))
+    if x.shape[0] == 0:
+        return arena
     return jax.lax.dynamic_update_slice(arena, x, (offset,))
 
 
 def arena_accum(arena, x, offset: int, *, impl: str = "auto",
                 interpret: bool = False):
     """Add ``x`` into ``arena[offset : offset+n]`` in place; returns arena."""
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
         return arena_accum_pallas(arena, x, offset, interpret=interpret)
     if impl == "ref":
         return jnp.asarray(arena_accum_ref(arena, x, offset))
+    if x.shape[0] == 0:
+        return arena
     cur = jax.lax.dynamic_slice(arena, (offset,), (x.shape[0],))
     return jax.lax.dynamic_update_slice(arena, cur + x, (offset,))
 
@@ -59,9 +91,35 @@ def arena_accum(arena, x, offset: int, *, impl: str = "auto",
 def arena_read(arena, offset: int, n: int, *, impl: str = "auto",
                interpret: bool = False):
     """Materialize ``arena[offset : offset+n]`` as a fresh ``(n,)`` array."""
-    impl = _resolve(impl)
+    impl, interpret = _resolve(impl, interpret)
     if impl == "pallas":
         return arena_read_pallas(arena, offset, n, interpret=interpret)
     if impl == "ref":
         return jnp.asarray(arena_read_ref(arena, offset, n))
     return jax.lax.dynamic_slice(arena, (offset,), (n,))
+
+
+def arena_chain_write(arena, x, offset: int, ops=(), *, impl: str = "auto",
+                      interpret: bool = False):
+    """Apply the unary elementwise chain ``ops`` to ``x``, then write the
+    result at element ``offset`` — the fused execution of an in-place alias
+    chain (DESIGN.md §11): one launch (pallas) / one update-slice (xla)
+    instead of a read+compute+write per chain member.
+
+    ``ops`` name entries of the canonical
+    :data:`~repro.kernels.arena.elemwise.ELEMWISE_FNS` table; the pallas and
+    xla paths apply the *same jnp callables* the unfused executor uses.  On
+    the xla path this makes fused and slice-per-node execution bit-equal
+    (identical eager op sequence); inside a single pallas kernel XLA may
+    contract a chain's mul+add into an fma, so that path — like the numpy
+    ``ref`` oracle — is allclose, not bit-equal.
+    """
+    impl, interpret = _resolve(impl, interpret)
+    if impl == "pallas":
+        return arena_chain_write_pallas(arena, x, offset, ops,
+                                        interpret=interpret)
+    if impl == "ref":
+        return jnp.asarray(arena_chain_write_ref(arena, x, offset, ops))
+    if x.shape[0] == 0:
+        return arena
+    return jax.lax.dynamic_update_slice(arena, apply_chain(x, ops), (offset,))

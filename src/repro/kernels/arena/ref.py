@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.kernels.arena.elemwise import apply_chain_np
+
 
 def arena_write_ref(arena, x, offset: int):
     out = np.array(arena)
@@ -19,3 +21,13 @@ def arena_accum_ref(arena, x, offset: int):
 
 def arena_read_ref(arena, offset: int, n: int):
     return np.array(arena[offset:offset + n])
+
+
+def arena_chain_write_ref(arena, x, offset: int, ops=()):
+    """Apply the named elementwise chain to ``x`` (numpy twin), then write.
+
+    Oracle for the fused alias-chain kernel: allclose ground truth only —
+    the numpy transcendentals differ from XLA's in the last ulp."""
+    out = np.array(arena)
+    out[offset:offset + len(x)] = apply_chain_np(np.asarray(x), ops)
+    return out

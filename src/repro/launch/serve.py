@@ -25,10 +25,17 @@ between steps (``pack_buffers``/``unpack_buffer``).  Two step modes:
               request, executed back-to-back — transients of distinct
               requests are never live together, matching the pool's
               ``overlap='serial'`` admission accounting.
-  ``vmap``    all active requests advance in one jitted+vmapped decode
-              call (per-request position vector); all members' transients
-              materialize at once, so admission must use ``overlap='none'``
-              accounting.
+  ``vmap``    all active requests advance in ONE jitted arena->arena
+              program: the active arenas are stacked into a
+              ``(bucket, extent)`` uint8 matrix (donated), each row
+              unpacked at the planned byte offsets, decoded and packed
+              back entirely inside the vmapped XLA program — no Python
+              loop over leases.  Programs are cached per power-of-two
+              batch bucket; padding rows beyond the live batch are charged
+              to the pool budget (``ArenaPool.reserve_scratch``) for the
+              step, falling back to an exact-size bucket when they do not
+              fit.  All members' transients materialize at once, so
+              admission must use ``overlap='none'`` accounting.
 """
 
 from __future__ import annotations
@@ -51,7 +58,7 @@ from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
 from repro.models.zoo import build_model
-from repro.runtime.pool import ArenaPool
+from repro.runtime.pool import ArenaPool, PoolError
 
 
 def _align4(n: int) -> int:
@@ -235,7 +242,7 @@ class DecodeServer:
         self.rules = rules
         self._prefill = jax.jit(make_prefill_step(model, rules))
         self._decode = jax.jit(make_decode_step(model, rules))
-        self._decode_many = None      # built lazily (jit of the vmapped step)
+        self._batched: dict[int, object] = {}   # bucket -> jitted step
         self._plan = plan_decode_arena(model, 1, smax)
         # register our regions plan with the pool once; submits reuse the
         # key (no per-request graph re-fingerprinting)
@@ -302,30 +309,71 @@ class DecodeServer:
             req.t += 1
             req.arena = pack_decode_state(self._plan, cache, arena=req.arena)
 
-    def _step_vmap(self) -> None:
-        if self._decode_many is None:
-            decode = make_decode_step(self.model, self.rules)
+    def _build_batched(self, bucket: int):
+        """One jitted arena->arena decode program for this batch bucket.
 
-            def many(params, caches, toks, ts):
-                return jax.vmap(
-                    lambda c, tok, t: decode(params, c, tok, t),
-                    in_axes=(0, 0, 0))(caches, toks, ts)
-
-            self._decode_many = jax.jit(many)
+        The program's input is the stacked ``(bucket, resident_extent)``
+        uint8 arena matrix (donated): each row is unpacked at the *planned
+        byte offsets* — a layout fixed at trace time, not a Python loop
+        over leases — decoded one token, and the new KV state packed back
+        into the row, all inside one ``jax.vmap``-ed XLA program.
+        """
+        decode = make_decode_step(self.model, self.rules)
         defs = self._cache_defs()
-        caches = [unpack_decode_state(self._plan, r.arena, defs)
-                  for r in self.active]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
-        toks = jnp.asarray([[[r.last_tok]] for r in self.active], jnp.int32)
-        ts = jnp.asarray([r.t for r in self.active], jnp.int32)
-        logits, new = self._decode_many(self.params, stacked, toks, ts)
-        next_toks = np.asarray(jnp.argmax(logits, -1)).reshape(-1)
-        for i, req in enumerate(self.active):
-            req.last_tok = int(next_toks[i])
-            req.tokens.append(req.last_tok)
-            req.t += 1
-            cache_i = jax.tree.map(lambda x, i=i: x[i], new)
-            req.arena = pack_decode_state(self._plan, cache_i, arena=req.arena)
+        dplan = self._plan
+
+        def one(arena, tok, t, params):
+            cache = unpack_decode_state(dplan, arena, defs)
+            logits, new = decode(params, cache, tok, t)
+            leaves = jax.tree.leaves(new)
+            arena = pack_buffers(dplan["plan"], dict(enumerate(leaves)),
+                                 arena=arena, jit=False)
+            return jnp.argmax(logits, -1).reshape(()), arena
+
+        def step(params, arenas, toks, ts):
+            return jax.vmap(one, in_axes=(0, 0, 0, None))(
+                arenas, toks, ts, params)
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power-of-two batch bucket (bounds trace count to log2)."""
+        return 1 << max(0, n - 1).bit_length()
+
+    def _step_vmap(self) -> None:
+        B = len(self.active)
+        bucket = self._bucket(B)
+        pad = bucket - B
+        if pad:
+            # padding rows materialize real state + transients beyond the
+            # admitted set: charge them to the pool budget for the duration
+            # of the step, or shrink the bucket to the exact batch
+            try:
+                self.pool.reserve_scratch(pad * self._plan["arena_bytes"])
+            except PoolError:
+                bucket, pad = B, 0
+        try:
+            fn = self._batched.get(bucket)
+            if fn is None:
+                fn = self._batched[bucket] = self._build_batched(bucket)
+            r0 = self.active[0]
+            arenas = jnp.stack([r.arena for r in self.active]
+                               + [r0.arena] * pad)
+            toks = jnp.asarray([[[r.last_tok]] for r in self.active]
+                               + [[[r0.last_tok]]] * pad, jnp.int32)
+            ts = jnp.asarray([r.t for r in self.active] + [r0.t] * pad,
+                             jnp.int32)
+            next_toks, arenas = fn(self.params, arenas, toks, ts)
+            next_toks = np.asarray(next_toks).reshape(-1)[:B]
+            for i, req in enumerate(self.active):
+                req.last_tok = int(next_toks[i])
+                req.tokens.append(req.last_tok)
+                req.t += 1
+                req.arena = arenas[i]
+        finally:
+            if pad:
+                self.pool.reserve_scratch(0)
 
     def step(self) -> int:
         """One scheduler tick; returns the number of active requests."""

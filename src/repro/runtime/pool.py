@@ -157,6 +157,7 @@ class ArenaPool:
         self._queue: collections.deque[tuple[Ticket, ArenaPlan]] = \
             collections.deque()
         self._admitted_since_poll: list[Ticket] = []
+        self._scratch_bytes = 0
         self.stats = PoolStats()
 
     # -- planning ----------------------------------------------------------
@@ -277,8 +278,40 @@ class ArenaPool:
 
     @property
     def reserved_bytes(self) -> int:
-        """Joint bytes the current admitted set charges to the budget."""
-        return self._joint_extent([m.plan for m in self._members])
+        """Joint bytes the current admitted set (plus any transient scratch
+        reservation) charges to the budget."""
+        return self._joint_extent([m.plan for m in self._members]) \
+            + self._scratch_bytes
+
+    @property
+    def scratch_bytes(self) -> int:
+        return self._scratch_bytes
+
+    def reserve_scratch(self, nbytes: int) -> None:
+        """Reserve transient scratch bytes against the budget.
+
+        For execution-side allocations that are not leases but still occupy
+        device memory alongside the admitted set — e.g. the padding rows a
+        bucketed vmap decode materializes beyond the active batch.  The
+        reservation replaces any previous one (pass 0 to release) and is
+        charged by ``_fits``, so queued requests cannot be admitted into
+        bytes the scratch is using.  Raises :class:`PoolError` when the
+        scratch does not fit over the current members.
+        """
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise PoolError(f"negative scratch reservation {nbytes}")
+        joint = self._joint_extent([m.plan for m in self._members])
+        if joint + nbytes > self.budget_bytes:
+            raise PoolError(
+                f"scratch reservation of {nbytes} bytes does not fit: "
+                f"members reserve {joint} of {self.budget_bytes} budget "
+                f"bytes")
+        self._scratch_bytes = nbytes
+        self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
+                                             self.reserved_bytes)
+        if nbytes == 0:
+            self._drain()
 
     def shared_plan(self) -> SharedArenaPlan:
         """Co-residency plan of the currently admitted members."""
@@ -294,7 +327,7 @@ class ArenaPool:
 
     def _fits(self, plan: ArenaPlan) -> bool:
         joint = self._joint_extent([m.plan for m in self._members] + [plan])
-        return joint <= self.budget_bytes
+        return joint + self._scratch_bytes <= self.budget_bytes
 
     def _drain(self) -> None:
         # FIFO with head-of-line blocking: later (smaller) requests never

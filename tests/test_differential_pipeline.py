@@ -208,6 +208,16 @@ def check_sample(g: Graph, engines: list[str]) -> None:
             np.asarray(ex.outputs[name]), np.asarray(val),
             err_msg=f"{g.name}: arena output {name!r} diverges from the "
                     f"dict-storage reference")
+    # fused alias-chain execution (DESIGN.md §11) must be observationally
+    # identical: bit-equal outputs, same realized footprint
+    exf = execute_plan(g, order, plan, inputs=None, strict=True, fuse=True)
+    assert exf.realized_peak_bytes == plan.peak_bytes
+    assert exf.realized_arena_bytes == plan.arena_bytes
+    for name, val in ref.items():
+        np.testing.assert_array_equal(
+            np.asarray(exf.outputs[name]), np.asarray(val),
+            err_msg=f"{g.name}: fused output {name!r} diverges from the "
+                    f"dict-storage reference")
 
 
 @pytest.mark.parametrize("seed", range(N_SEEDS))

@@ -1,0 +1,275 @@
+"""Fused alias-chain execution (DESIGN.md §11).
+
+The contract under test: fusing in-place alias chains — forwarding the
+running value in registers between chain members and storing only the
+region tail (one chain-kernel launch for contiguous elementwise runs) —
+must change *nothing observable*: outputs stay bit-equal to
+``run_reference`` on every impl path, and the realized peak/extent stay
+exactly the planned bytes (the skipped interior stores land in the chain's
+own already-reserved slice, so no liveness event moves).
+"""
+
+import pickle
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    PlanConfig,
+    compile_plan,
+    execute_plan,
+    fuse_alias_chains,
+    plan,
+    run_reference,
+)
+from repro.graphs import BENCHMARK_GRAPHS  # noqa: E402
+from repro.kernels.arena import (  # noqa: E402
+    arena_accum,
+    arena_chain_write,
+    arena_read,
+    arena_write,
+)
+from repro.kernels.arena.ops import ENV_IMPL, _resolve  # noqa: E402
+from repro.kernels.arena.ref import (  # noqa: E402
+    arena_accum_ref,
+    arena_chain_write_ref,
+    arena_read_ref,
+    arena_write_ref,
+)
+
+PAPER_GRAPHS = ["darts_imagenet_cell", "swiftnet_cell_c", "randwire_cifar10"]
+
+
+def _planned(name):
+    res = plan(BENCHMARK_GRAPHS[name](), PlanConfig(), cache=False)
+    return res.graph, res.order, res.arena
+
+
+# ----------------------------------------------------------- region algebra
+
+
+@pytest.mark.parametrize("name", PAPER_GRAPHS)
+def test_regions_partition_schedule(name):
+    g, order, apl = _planned(name)
+    regions = fuse_alias_chains(g, order, apl)
+    flat = [u for r in regions for u in r.node_ids]
+    assert sorted(flat) == sorted(order), "regions must cover order exactly"
+    pos = {u: i for i, u in enumerate(order)}
+    for r in regions:
+        assert r.head == r.node_ids[0] and r.out == r.node_ids[-1]
+        for u, v in zip(r.node_ids, r.node_ids[1:]):
+            # every link is a true in-place alias step on the same slice
+            assert pos[u] < pos[v]
+            assert set(g.nodes[v].alias_preds) == {u}
+            assert g.sizes[u] == g.sizes[v]
+            assert apl.offset_of(u) == apl.offset_of(v)
+            assert "concat_view" not in (g.nodes[u].op, g.nodes[v].op)
+        for u in r.node_ids[:-1]:
+            # value forwarding is legal only under the single-consumer
+            # invariant of aliased predecessors
+            assert len(g.succs[u]) == 1
+
+
+def test_paper_cells_actually_fuse():
+    # the rewriter's chains survive planning on every paper workload: unary
+    # elementwise runs on DARTS, partial-conv accumulation (which the DP
+    # schedules non-contiguously) on SwiftNet
+    members = {}
+    for name in PAPER_GRAPHS:
+        g, order, apl = _planned(name)
+        prog = compile_plan(g, order, apl, fuse=True)
+        members[name] = prog.n_fused_nodes
+        assert prog.n_regions + prog.n_fused_nodes == len(order)
+    assert members["darts_imagenet_cell"] >= 20
+    assert members["swiftnet_cell_c"] >= 4
+    assert all(v >= 1 for v in members.values())
+
+
+def test_fuse_alias_chains_empty_and_unaliased():
+    g, order, apl = _planned("randwire_cifar10")
+    assert fuse_alias_chains(g, [], apl) == []
+    singles = fuse_alias_chains(
+        g, [u for u in order if not g.nodes[u].alias_preds], apl)
+    assert all(len(r) == 1 for r in singles)
+
+
+# ----------------------------------------------------- fused == reference
+
+
+@pytest.mark.parametrize("name", PAPER_GRAPHS)
+@pytest.mark.parametrize("impl,interpret",
+                         [("xla", False), ("pallas", True)],
+                         ids=["xla", "pallas-interpret"])
+def test_fused_matches_reference_and_realizes_plan(name, impl, interpret):
+    g, order, apl = _planned(name)
+    prog = compile_plan(g, order, apl, fuse=True, impl=impl,
+                        interpret=interpret)
+    ref = run_reference(g)
+    r = prog.run()
+    assert r.fused and r.n_regions == prog.n_regions
+    assert r.realized_peak_bytes == apl.peak_bytes
+    assert r.realized_arena_bytes == apl.arena_bytes
+    assert set(r.outputs) == set(ref)
+    for k, v in ref.items():
+        if impl == "xla":
+            # the xla chain path issues the same eager op sequence as the
+            # slice-per-node executor: bit-equal by construction
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(r.outputs[k]),
+                err_msg=f"{name}/{impl}: fused output {k!r} diverges")
+        else:
+            # inside a single Pallas kernel XLA may contract a chain's
+            # mul+add into an fma: last-ulp tolerance, not bit-equality
+            np.testing.assert_allclose(
+                np.asarray(r.outputs[k]), np.asarray(v),
+                rtol=2e-6, atol=1e-6,
+                err_msg=f"{name}/{impl}: fused output {k!r} diverges")
+
+
+def test_fused_jit_reuses_trace_and_stays_close():
+    g, order, apl = _planned("darts_imagenet_cell")
+    prog = compile_plan(g, order, apl, fuse=True)
+    ref = run_reference(g)
+    r1 = prog.run(jit=True)
+    traced = prog._jitted
+    assert traced is not None
+    r2 = prog.run(jit=True)
+    assert prog._jitted is traced, "steady-state call must reuse the trace"
+    # jit reassociates float math (XLA), so the jit contract is allclose,
+    # not bit-equality (matches the unfused executor's jit contract)
+    for k, v in ref.items():
+        np.testing.assert_allclose(np.asarray(r2.outputs[k]), np.asarray(v),
+                                   rtol=2e-5, atol=2e-6)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(r1.outputs[k]),
+                                      np.asarray(r2.outputs[k]))
+
+
+# ------------------------------------------------------ kernel-level parity
+
+
+_ODD_SPANS = [(0, 5), (1, 7), (13, 11), (36, 1), (7, 0)]   # (offset, n)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.int8],
+                         ids=["f32", "i32", "i8"])
+def test_arena_ops_parity_odd_spans_and_dtypes(impl, dtype):
+    rng = np.random.default_rng(11)
+    kw = dict(impl=impl, interpret=True)
+    arena_np = rng.integers(-40, 40, 37).astype(dtype)
+    arena = jnp.asarray(arena_np)
+    for offset, n in _ODD_SPANS:
+        x_np = rng.integers(-40, 40, n).astype(dtype)
+        x = jnp.asarray(x_np)
+        np.testing.assert_array_equal(
+            arena_write(arena, x, offset, **kw),
+            arena_write_ref(arena_np, x_np, offset),
+            err_msg=f"write {impl} {dtype} @{offset}+{n}")
+        np.testing.assert_array_equal(
+            arena_read(arena, offset, n, **kw),
+            arena_read_ref(arena_np, offset, n),
+            err_msg=f"read {impl} {dtype} @{offset}+{n}")
+        np.testing.assert_array_equal(
+            arena_accum(arena, x, offset, **kw),
+            arena_accum_ref(arena_np, x_np, offset),
+            err_msg=f"accum {impl} {dtype} @{offset}+{n}")
+
+
+_CHAINS = [(), ("relu",), ("bn", "relu6"), ("sigmoid", "scale", "bias_add"),
+           ("gelu", "tanh", "silu", "identity")]
+
+
+@pytest.mark.parametrize("ops", _CHAINS, ids=lambda c: "+".join(c) or "empty")
+def test_chain_write_parity(ops):
+    rng = np.random.default_rng(5)
+    arena_np = rng.standard_normal(41).astype(np.float32)
+    arena = jnp.asarray(arena_np)
+    for offset, n in _ODD_SPANS:
+        x_np = rng.standard_normal(n).astype(np.float32)
+        x = jnp.asarray(x_np)
+        got_xla = arena_chain_write(arena, x, offset, ops, impl="xla")
+        got_pal = arena_chain_write(arena, x, offset, ops, impl="pallas",
+                                    interpret=True)
+        # pallas composes the same jnp callables, but inside one kernel XLA
+        # may contract mul+add chains into fmas: last-ulp tolerance
+        np.testing.assert_allclose(
+            got_pal, got_xla, rtol=2e-6, atol=1e-6,
+            err_msg=f"xla vs pallas {ops} @{offset}+{n}")
+        # the numpy twin is an independent oracle: allclose ground truth
+        np.testing.assert_allclose(
+            got_xla, arena_chain_write_ref(arena_np, x_np, offset, ops),
+            rtol=1e-5, atol=1e-6, err_msg=f"ref oracle {ops} @{offset}+{n}")
+
+
+def test_chain_write_rejects_unknown_op():
+    arena = jnp.zeros(8, jnp.float32)
+    with pytest.raises(KeyError):
+        arena_chain_write(arena, jnp.ones(3, jnp.float32), 0,
+                          ("not_an_op",), impl="xla")
+
+
+# ------------------------------------------------------------ env override
+
+
+def test_env_impl_override(monkeypatch):
+    monkeypatch.delenv(ENV_IMPL, raising=False)
+    assert _resolve("xla", False) == ("xla", False)
+    monkeypatch.setenv(ENV_IMPL, "ref")
+    assert _resolve("auto", False) == ("ref", False)
+    # explicit impl always beats the env
+    assert _resolve("xla", False) == ("xla", False)
+    monkeypatch.setenv(ENV_IMPL, "pallas_interpret")
+    assert _resolve("auto", False) == ("pallas", True)
+    monkeypatch.setenv(ENV_IMPL, "pallas-interpret")
+    assert _resolve("auto", False) == ("pallas", True)
+    monkeypatch.setenv(ENV_IMPL, "xla")
+    assert _resolve("auto", True) == ("xla", True)
+    monkeypatch.setenv(ENV_IMPL, "cuda")
+    with pytest.raises(ValueError, match="REPRO_ARENA_IMPL"):
+        _resolve("auto", False)
+
+
+def test_env_impl_override_is_read_per_call(monkeypatch):
+    arena, x = jnp.zeros(8, jnp.float32), jnp.ones(3, jnp.float32)
+    monkeypatch.setenv(ENV_IMPL, "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        arena_write(arena, x, 2)
+    monkeypatch.setenv(ENV_IMPL, "ref")
+    np.testing.assert_array_equal(arena_write(arena, x, 2),
+                                  arena_write_ref(arena, x, 2))
+    monkeypatch.delenv(ENV_IMPL)
+    np.testing.assert_array_equal(arena_write(arena, x, 2),
+                                  arena_write_ref(arena, x, 2))
+
+
+# ------------------------------------------------------- program memoization
+
+
+def test_compile_plan_memoizes_on_plan():
+    g, order, apl = _planned("swiftnet_cell_c")
+    p1 = compile_plan(g, order, apl, fuse=True)
+    assert compile_plan(g, order, apl, fuse=True) is p1
+    p2 = compile_plan(g, order, apl, fuse=False)
+    assert p2 is not p1
+    assert compile_plan(g, order, apl, fuse=False) is p2
+    # execute_plan routes through the same cache
+    r = execute_plan(g, order, apl, fuse=True)
+    for k, v in run_reference(g).items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(r.outputs[k]))
+    assert "_programs" in apl.__dict__
+
+
+def test_plan_pickling_drops_program_cache():
+    g, order, apl = _planned("randwire_cifar10")
+    compile_plan(g, order, apl)
+    assert "_programs" in apl.__dict__
+    apl2 = pickle.loads(pickle.dumps(apl))
+    assert "_programs" not in apl2.__dict__
+    assert apl2.arena_bytes == apl.arena_bytes
+    # and the thawed plan can compile fresh programs
+    r = execute_plan(g, order, apl2, fuse=True)
+    assert r.realized_arena_bytes == apl2.arena_bytes

@@ -193,6 +193,39 @@ class TestArenaPool:
         with pytest.raises(PoolError):
             ArenaPool(1, overlap="bogus")
 
+    def test_scratch_reservation_charges_budget(self):
+        g = state_graph()
+        one = ArenaPool(1 << 40, overlap="none")
+        one.submit(g)
+        arena = one.reserved_bytes            # one member's standalone extent
+        pool = ArenaPool(2 * arena, overlap="none")
+        assert pool.submit(g).admitted
+        pool.reserve_scratch(arena)
+        assert pool.scratch_bytes == arena
+        assert pool.reserved_bytes == 2 * arena
+        # a second request fits the raw budget but not budget-minus-scratch:
+        # it must queue behind the scratch, then drain when it is released
+        t = pool.submit(g)
+        assert not t.admitted and not t.rejected
+        pool.reserve_scratch(0)
+        assert t.admitted
+        assert pool.reserved_bytes == 2 * arena
+        assert pool.stats.peak_reserved_bytes == 2 * arena
+
+    def test_scratch_reservation_over_budget_raises(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 40, overlap="none")
+        pool.submit(g)
+        used = pool.reserved_bytes
+        pool.budget_bytes = used + 10
+        with pytest.raises(PoolError, match="scratch"):
+            pool.reserve_scratch(11)
+        pool.reserve_scratch(10)               # exactly-fitting is fine
+        assert pool.reserved_bytes == used + 10
+        with pytest.raises(PoolError, match="negative"):
+            pool.reserve_scratch(-1)
+        assert pool.scratch_bytes == 10        # failed calls change nothing
+
 
 # ---------------------------------------------------------------------------
 # plan_decode_arena + decode-state pack/unpack (jax/model-based)
@@ -332,8 +365,29 @@ class TestDecodeServer:
     def test_vmap_mode_matches_serial(self, smoke_model):
         reqs_s, _ = self._run(smoke_model, n_req=3, budget_factor=10,
                               step_mode="serial")
-        reqs_v, _ = self._run(smoke_model, n_req=3, budget_factor=10,
+        reqs_v, m = self._run(smoke_model, n_req=3, budget_factor=10,
                               step_mode="vmap")
+        assert [r.tokens for r in reqs_s] == [r.tokens for r in reqs_v]
+        # batch of 3 pads to the 4-bucket; the padding row's bytes must be
+        # charged to the budget while the step runs
+        assert m["peak_reserved_bytes"] >= 4 * m["arena_bytes"]
+
+    def test_vmap_bucket_rounding(self):
+        from repro.launch.serve import DecodeServer
+
+        assert [DecodeServer._bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+            [1, 2, 4, 4, 8, 8, 16]
+
+    def test_vmap_falls_back_when_padding_cannot_fit(self, smoke_model):
+        # budget for exactly 3 naive arenas: bucket-4 padding cannot be
+        # reserved, so the step must run at the exact batch size — same
+        # tokens, never over budget
+        reqs_s, _ = self._run(smoke_model, n_req=3, budget_factor=10,
+                              step_mode="serial")
+        reqs_v, m = self._run(smoke_model, n_req=3, budget_factor=3.0,
+                              step_mode="vmap")
+        assert m["n_served"] == 3
+        assert m["peak_reserved_bytes"] <= m["budget_bytes"]
         assert [r.tokens for r in reqs_s] == [r.tokens for r in reqs_v]
 
     def test_vmap_requires_naive_accounting(self, smoke_model):
