@@ -23,6 +23,15 @@ and the ``pareto_*`` rows trace the recomputation frontier (DESIGN.md
 producers under a FLOPs budget, as ``flops_ratio:peak_bytes`` points.
 ``best_peak`` must sit at or below the exact no-recompute optimum — the
 rows are deterministic, so any drift trips ``diff_baseline.py``.
+
+PR 8 additions: the ``frontier_*`` rows pin the latency x memory Pareto
+frontier of each cell under width-2 concurrency (DESIGN.md §12) as
+``makespan:peak_bytes`` points.  The latency-unconstrained endpoint is
+asserted equal to the exact serial DP peak (the paper-cell acceptance
+criterion), and the min-makespan point is executed against a step-packed
+arena so the realized concurrent peak is measured, not estimated.
+``diff_baseline.py`` diffs these frontier strings point-by-point: peaks
+exactly, makespans with the unit-aware noise floor.
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ from repro.core import (
     plan_arena,
     plan_arena_best,
 )
+from repro.core.scheduler import pareto_schedule
 from repro.graphs import BENCHMARK_GRAPHS, darts_network, randwire_network
 
 
@@ -117,6 +127,41 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             f"arena_peak_ratio={rew.arena.frag_ratio:.4f};"
             f"policy={rew.arena.policy};"
             f"seg_cache_hits={rew.seg_cache_hits};exact={int(rew.exact)}",
+        ))
+
+    # latency x memory frontier rows (PR 8, DESIGN.md §12): the full
+    # width-2 Pareto frontier per cell.  The serial endpoint must equal
+    # the exact serial DP peak — the multi-objective search can trade
+    # latency for memory but never beat (or lose) the serial optimum —
+    # and the min-makespan point is executed against an arena packed with
+    # its co-issue steps, asserting the realized concurrent peak.
+    for name, fn in graphs:
+        g = fn()
+        t0 = time.perf_counter()
+        front = pareto_schedule(g, max_width=2, state_quota=20_000,
+                                on_quota="beam")
+        dt = (time.perf_counter() - t0) * 1e6
+        serial = plan(g, PlanConfig(rewrite=False, state_quota=4000),
+                      cache=False)
+        assert front.min_peak.peak_bytes == serial.peak_bytes, (
+            f"{name}: frontier endpoint {front.min_peak.peak_bytes} != "
+            f"exact serial DP peak {serial.peak_bytes}")
+        fast = front.min_makespan
+        apl = plan_arena_best(g, fast.order, steps=fast.steps)
+        ex = execute_plan(g, fast.order, apl, inputs=None, steps=fast.steps)
+        assert ex.realized_peak_bytes == apl.peak_bytes
+        pts = "|".join(f"{ms}:{pk}" for ms, pk in front.pairs())
+        csv_rows.append((
+            f"peak_memory/frontier_{name}", dt,
+            f"max_width=2;n_points={len(front.points)};"
+            f"exact={int(front.exact)};"
+            f"serial_peak={front.min_peak.peak_bytes};"
+            f"min_makespan={fast.makespan};"
+            f"min_makespan_peak={fast.peak_bytes};"
+            f"makespan_stretch="
+            f"{front.min_peak.makespan / fast.makespan:.3f};"
+            f"frontier={pts};"
+            f"realized_fast_bytes={ex.realized_peak_bytes}",
         ))
 
     # recomputation Pareto rows (PR 6): the peak-vs-FLOPs frontier on the

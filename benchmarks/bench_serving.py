@@ -14,9 +14,21 @@ Two sections (DESIGN.md §9):
   latency, peak reserved bytes and admitted concurrency; asserts the
   pooled server sustains **>= 2x** the naive baseline's concurrency.
 
+* **Pareto request classes** (PR 8, DESIGN.md §12) — the latency x memory
+  frontier of a paper cell mapped onto admission classes
+  (:func:`repro.runtime.pool.pareto_class_plans`): a ``latency`` request
+  leases the min-makespan point with pinned transients, a ``memory``
+  request the min-peak point, and the pool admits each against the same
+  byte budget — so the memory class sustains strictly more concurrency.
+  The decode server runs the same trade-off live: a mixed-class request
+  stream whose per-class measured p50 and per-class lease bytes land as a
+  measured two-point ``frontier=`` row (``<p50>ms:<bytes>``).
+
 Rows land in the smoke JSON / ``BENCH_baseline.json``;
 ``diff_baseline.py`` treats the latency and peak-bytes columns with the
-same >2x unit-aware tripwire as the scheduling-time rows.
+same >2x unit-aware tripwire as the scheduling-time rows, and diffs
+``frontier=`` strings point-by-point (peaks exact, united latencies with
+the noise floor).
 """
 
 from __future__ import annotations
@@ -24,7 +36,12 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import numpy as np
+
 from repro.core import PlanCache, plan, plan_shared_arena
+from repro.core.allocator import resident_bytes
+from repro.core.scheduler import pareto_schedule
+from repro.runtime.pool import ArenaPool, pareto_class_plans
 
 
 def _coresidency_rows(csv_rows: list, smoke: bool) -> dict:
@@ -56,6 +73,58 @@ def _coresidency_rows(csv_rows: list, smoke: bool) -> dict:
     return out
 
 
+def _pareto_pool_rows(csv_rows: list, smoke: bool) -> dict:
+    """Frontier-point-per-request-class admission on a paper cell.
+
+    Deterministic end to end: the frontier, both class plans, the budget
+    and the synchronous pool admissions are all pure functions of the
+    graph, so every column exact-diffs against the baseline.
+    """
+    from repro.graphs import BENCHMARK_GRAPHS
+
+    name = "swiftnet_cell_a"
+    g = BENCHMARK_GRAPHS[name]()
+    t0 = time.perf_counter()
+    front = pareto_schedule(g, max_width=2, state_quota=20_000)
+    plans = pareto_class_plans(g, front)
+    dt = (time.perf_counter() - t0) * 1e6
+    lat_extent = resident_bytes(plans["latency"])[1]
+    mem_extent = resident_bytes(plans["memory"])[1]
+    assert lat_extent == plans["latency"].arena_bytes, \
+        "pinned latency plan must lease its whole arena"
+
+    def admitted(klass: str, budget: int) -> int:
+        pool = ArenaPool(budget, overlap="none")
+        pool.register_pareto("cell", plans)
+        count = 0
+        while True:
+            t = pool.submit(g, key="cell", klass=klass)
+            if t.lease is None:
+                break
+            count += 1
+        return count
+
+    # one budget, two admission classes: how many of each fit
+    budget = 4 * plans["latency"].arena_bytes
+    n_lat = admitted("latency", budget)
+    n_mem = admitted("memory", budget)
+    assert n_mem > n_lat, (
+        f"{name}: memory class should out-pack latency class "
+        f"({n_mem} !> {n_lat})")
+    csv_rows.append((
+        f"serving/pareto_pool_{name}", dt,
+        f"n_frontier_points={len(front.points)};"
+        f"latency_makespan={front.min_makespan.makespan};"
+        f"memory_makespan={front.min_peak.makespan};"
+        f"latency_lease_bytes={lat_extent};"
+        f"memory_lease_bytes={mem_extent};"
+        f"memory_peak_bytes={plans['memory'].peak_bytes};"
+        f"budget_bytes={budget};"
+        f"admitted_latency={n_lat};admitted_memory={n_mem}",
+    ))
+    return {"admitted_latency": n_lat, "admitted_memory": n_mem}
+
+
 def _metrics_row(tag: str, dt_us: float, m: dict) -> tuple:
     return (
         f"serving/{tag}", dt_us,
@@ -74,6 +143,7 @@ def _metrics_row(tag: str, dt_us: float, m: dict) -> tuple:
 
 def run(csv_rows: list, smoke: bool = False) -> dict:
     ratios = _coresidency_rows(csv_rows, smoke)
+    classes = _pareto_pool_rows(csv_rows, smoke)
 
     import jax
 
@@ -129,7 +199,41 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     assert pooled["peak_reserved_bytes"] <= budget
     assert naive["peak_reserved_bytes"] <= budget
 
+    # mixed Pareto-class stream through the same pooled server: half the
+    # requests admit as the pinned latency class, half as the tight memory
+    # class; per-class measured p50 + per-class lease bytes land as a
+    # measured two-point frontier row (latency point first)
+    mixed = synth_requests(n_req, prompt, gen, cfg.vocab_size, seed=9,
+                           latency_frac=0.5)
+    t0 = time.perf_counter()
+    cm = run_server(model, params, mixed, smax=smax, budget_bytes=budget,
+                    pooled=True, warm=2)
+    cm_wall = time.perf_counter() - t0
+    served = [r for r in mixed if not r.rejected and r.done_s]
+    by_class = {k: sorted(r.latency_s for r in served if r.klass == k)
+                for k in ("latency", "memory")}
+    assert cm["n_served"] == n_req
+    assert set(cm["admitted_by_class"]) == {"latency", "memory"}
+    lat_bytes = plan["arena_bytes"]           # pinned: whole arena leased
+    mem_bytes = plan["resident_extent"]       # tight: resident region only
+    p50 = {k: 1e3 * float(np.percentile(v, 50)) if v else 0.0
+           for k, v in by_class.items()}
+    csv_rows.append((
+        "serving/pareto_classes", cm_wall * 1e6,
+        f"n_served={cm['n_served']};"
+        f"admitted_latency={cm['admitted_by_class'].get('latency', 0)};"
+        f"admitted_memory={cm['admitted_by_class'].get('memory', 0)};"
+        f"latency_lease_bytes={lat_bytes};memory_lease_bytes={mem_bytes};"
+        f"p50_latency_class_ms={p50['latency']:.1f};"
+        f"p50_memory_class_ms={p50['memory']:.1f};"
+        f"frontier={p50['latency']:.1f}ms:{lat_bytes}|"
+        f"{p50['memory']:.1f}ms:{mem_bytes};"
+        f"peak_reserved_bytes={cm['peak_reserved_bytes']};"
+        f"budget_bytes={cm['budget_bytes']}",
+    ))
+
     return {
+        "pareto_admitted_by_class": classes,
         "coresidency_sharing_ratios": ratios,
         "budget_bytes": budget,
         "naive_concurrency": naive["max_concurrent"],

@@ -17,7 +17,15 @@ instead of exact-diffing (admission timing may legitimately shift them a
 little; doubling means the pool stopped sharing).  ``executor/`` rows are
 tripwired on every duration column (``*_us`` step times) with a lower,
 per-step noise floor, while their fusion-coverage counts
-(``n_regions``/``n_fused``/``max_chain``) stay exact-diffed.  Metric keys present only on one side are never treated as
+(``n_regions``/``n_fused``/``max_chain``) stay exact-diffed.  ``frontier=`` values (the
+latency x memory and recompute Pareto rows) are diffed *structurally*,
+point by point, instead of as one opaque string: each ``lat:peak`` point's
+peak bytes exact-diffs, while its latency component is compared by kind —
+a unit-suffixed measured latency (``123.4ms``) gets the same >2x
+unit-aware noise-floored tripwire as every other duration, and a unitless
+surrogate (makespan cost, ``1.24x`` FLOPs ratio) exact-diffs because it is
+deterministic.  A frontier that gained, lost, or reordered points warns
+with the point counts.  Metric keys present only on one side are never treated as
 value regressions: a key that *disappeared* from the smoke run warns (a
 bench stopped reporting it), while a *new* column (e.g. ``realized_bytes``
 on its first appearance) is a plain note until it lands in the committed
@@ -56,6 +64,12 @@ _NOISE_FLOOR_EXEC = {"s": 0.0005, "ms": 0.5, "us": 500.0}
 _SERVING_LAT_KEY = re.compile(r"^(p\d+_(ms|s|us)|wall_s|latency_\w+)$")
 # serving rows: load-dependent byte watermarks — >2x threshold, not exact
 _SERVING_BYTES_KEY = re.compile(r"^peak_\w*bytes$")
+# Pareto frontier values: '|'-separated lat:peak points.  The latency leg
+# is one of: a unit-suffixed measured duration ("123.4ms"), a surrogate
+# FLOPs ratio ("1.240x"), or a plain surrogate makespan integer.
+_FRONTIER_KEY = re.compile(r"(^|_)frontier$")
+_FRONTIER_POINT = re.compile(
+    r"^(?P<lat>\d+(\.\d+)?(?P<unit>s|ms|us|x)?):(?P<peak>\d+)$")
 
 
 def _duration_unit(key: str, value: str) -> str | None:
@@ -123,6 +137,62 @@ def _check_bytes_regression(name: str, key: str, old: str, new: str) -> bool:
     return True
 
 
+def _parse_frontier(value: str) -> list[re.Match] | None:
+    """Parse 'lat:peak|lat:peak|...' into point matches (None = not one)."""
+    pts = [_FRONTIER_POINT.match(p) for p in value.split("|")]
+    if not pts or any(m is None for m in pts):
+        return None
+    return pts
+
+
+def _check_frontier(name: str, key: str, old: str, new: str) -> int:
+    """Structurally diff two frontier strings; returns warnings emitted.
+
+    Points are positional: point i of the smoke run is compared against
+    point i of the baseline.  Peaks are deterministic plan bytes and
+    exact-diff; latency legs exact-diff when they are surrogate values
+    (plain makespan cost, 'x'-suffixed FLOPs ratio) and get the >2x
+    noise-floored duration tripwire when they carry a time unit.
+    """
+    po, pn = _parse_frontier(old), _parse_frontier(new)
+    if po is None or pn is None:
+        # not actually frontier-shaped on one side: fall back to opaque
+        if _differs(old, new):
+            print(f"::warning::{name}: {key} drifted {old} -> {new}")
+            return 1
+        return 0
+    warnings = 0
+    if len(po) != len(pn):
+        print(f"::warning::{name}: {key} changed shape: "
+              f"{len(po)} -> {len(pn)} points")
+        warnings += 1
+    for i, (mo, mn) in enumerate(zip(po, pn)):
+        if mo.group("peak") != mn.group("peak"):
+            print(f"::warning::{name}: {key} point {i} peak drifted "
+                  f"{mo.group('peak')} -> {mn.group('peak')} bytes")
+            warnings += 1
+        lo, ln = mo.group("lat"), mn.group("lat")
+        uo, un = mo.group("unit"), mn.group("unit")
+        if uo != un:
+            print(f"::warning::{name}: {key} point {i} latency changed "
+                  f"kind: {lo} -> {ln}")
+            warnings += 1
+            continue
+        if un in ("s", "ms", "us"):
+            fo, fn = float(lo.rstrip("smu")), float(ln.rstrip("smu"))
+            if fn > _NOISE_FLOOR[un] and fo > 0 \
+                    and fn > _REGRESSION_FACTOR * fo:
+                print(f"::warning::{name}: {key} point {i} latency "
+                      f"regressed >{_REGRESSION_FACTOR:g}x: {lo} -> {ln}")
+                warnings += 1
+        elif _differs(lo.rstrip("x"), ln.rstrip("x")):
+            # surrogate (makespan cost / FLOPs ratio): deterministic
+            print(f"::warning::{name}: {key} point {i} latency drifted "
+                  f"{lo} -> {ln}")
+            warnings += 1
+    return warnings
+
+
 def _parse_derived(derived: str) -> dict[str, str]:
     out: dict[str, str] = {}
     for part in derived.split(";"):
@@ -163,6 +233,10 @@ def main() -> None:
     for name in sorted(base_rows.keys() & new_rows.keys()):
         b, n = base_rows[name], new_rows[name]
         for key in sorted(b.keys() & n.keys()):
+            if _FRONTIER_KEY.search(key):
+                # Pareto frontier: structural point-by-point diff
+                warnings += _check_frontier(name, key, b[key], n[key])
+                continue
             if name.startswith("serving/") and _SERVING_BYTES_KEY.match(key):
                 # load-dependent watermark: >2x threshold, not exact diff
                 if _check_bytes_regression(name, key, b[key], n[key]):

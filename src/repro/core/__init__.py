@@ -5,6 +5,9 @@ Public API:
     Graph, Node, simulate_schedule          -- dataflow IR + footprint model
     dp_schedule, brute_force_schedule       -- Algorithm 1 + branch-and-bound
                                                pruning (+ oracle for tests)
+    pareto_schedule, oracle_frontier        -- width-W latency x memory
+                                               frontier + its ILP/differential
+                                               oracle (DESIGN.md §12)
     adaptive_budget_schedule                -- Algorithm 2
     partition, partition_hierarchy          -- divide & conquer (flat and
     find_separators                            nested segment tree)
@@ -29,6 +32,7 @@ Public API:
 from repro.core.allocator import (
     ArenaPlan,
     SharedArenaPlan,
+    pin_transients,
     plan_arena,
     plan_arena_best,
     plan_arena_regions,
@@ -46,7 +50,15 @@ from repro.core.executor import (
     reference_fn,
     run_reference,
 )
-from repro.core.graph import Graph, GraphError, Node, SimResult, simulate_schedule
+from repro.core.graph import (
+    Graph,
+    GraphError,
+    Node,
+    SimResult,
+    simulate_schedule,
+    simulate_steps,
+)
+from repro.core.ilp_oracle import OracleError, has_ilp_solver, oracle_frontier
 from repro.core.heuristics import (
     BASELINES,
     best_heuristic_schedule,
@@ -83,10 +95,15 @@ from repro.core.rewriter import (
 )
 from repro.core.scheduler import (
     NoSolutionError,
+    ParetoFrontier,
+    ParetoPoint,
     ScheduleResult,
     SearchTimeout,
     brute_force_schedule,
     dp_schedule,
+    node_costs,
+    pareto_schedule,
+    steps_makespan,
 )
 from repro.core.serenity import (
     OrderResult,
@@ -111,7 +128,10 @@ __all__ = [
     "GraphError",
     "Node",
     "NoSolutionError",
+    "OracleError",
     "OrderResult",
+    "ParetoFrontier",
+    "ParetoPoint",
     "PartitionNode",
     "Plan",
     "PlanCache",
@@ -141,12 +161,17 @@ __all__ = [
     "find_separators",
     "fuse_alias_chains",
     "graph_flops",
+    "has_ilp_solver",
     "labeled_fingerprint",
     "greedy_schedule",
     "kahn_schedule",
+    "node_costs",
     "node_flops",
+    "oracle_frontier",
+    "pareto_schedule",
     "partition",
     "partition_hierarchy",
+    "pin_transients",
     "plan",
     "plan_arena",
     "plan_arena_best",
@@ -162,7 +187,9 @@ __all__ = [
     "schedule",
     "schedule_order",
     "simulate_schedule",
+    "simulate_steps",
     "simulate_traffic",
+    "steps_makespan",
     "translate_order",
     "wl_colors",
 ]

@@ -132,11 +132,25 @@ class ArenaPlan:
 
 
 def _build_items(
-    g: Graph, order: Sequence[int], preplaced: Sequence[int]
+    g: Graph,
+    order: Sequence[int],
+    preplaced: Sequence[int],
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> list[Allocation]:
-    """Alias-chain-merged lifetime intervals, in schedule-allocation order."""
+    """Alias-chain-merged lifetime intervals, in schedule-allocation order.
+
+    With ``steps`` (a width-W step schedule whose flattening is ``order``),
+    lifetimes are in *step* indices: co-issued nodes share ``t_alloc``, so
+    every packing policy necessarily places their outputs disjointly — the
+    arena-level meaning of concurrency (DESIGN.md §12).
+    """
     n = len(g)
-    pos = {u: i for i, u in enumerate(order)}
+    if steps is not None:
+        pos = {u: si for si, step in enumerate(steps) for u in step}
+        if [u for step in steps for u in step] != list(order):
+            raise ValueError("steps do not flatten to order")
+    else:
+        pos = {u: i for i, u in enumerate(order)}
     for p in preplaced:
         pos[p] = -1
 
@@ -157,7 +171,7 @@ def _build_items(
     for u in list(preplaced) + list(order):
         members.setdefault(find(u), []).append(u)
 
-    horizon = len(order)
+    horizon = len(order) if steps is None else len(steps)
     items: list[Allocation] = []
     for mem in members.values():
         t_alloc = min(pos[m] for m in mem)
@@ -400,16 +414,18 @@ def plan_arena(
     order: Sequence[int],
     preplaced: Sequence[int] = (),
     policy: Policy = "first_fit",
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> ArenaPlan:
     """Pack the tensors of schedule ``order`` into one linear arena.
 
     ``policy='best'`` delegates to :func:`plan_arena_best` (all policies,
-    keep the tightest arena).
+    keep the tightest arena).  ``steps`` switches lifetimes to width-W step
+    indices (see :func:`_build_items`): co-issued outputs pack disjointly.
     """
     if policy == "best":
-        return plan_arena_best(g, order, preplaced=preplaced)
+        return plan_arena_best(g, order, preplaced=preplaced, steps=steps)
     packer = _packer_for(policy)
-    items = _build_items(g, order, preplaced)
+    items = _build_items(g, order, preplaced, steps=steps)
     watermark = packer(items)
     return ArenaPlan(
         allocations=items,
@@ -424,6 +440,7 @@ def plan_arena_best(
     order: Sequence[int],
     preplaced: Sequence[int] = (),
     policies: Sequence[str] = ("first_fit", "best_fit", "greedy_by_size"),
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> ArenaPlan:
     """Run every candidate policy and keep the smallest arena.
 
@@ -445,6 +462,9 @@ def plan_arena_best(
         (divide-and-conquer boundary tensors); they occupy arena bytes from
         time 0.
       policies: placement policies to race (see module docstring).
+      steps: optional width-W step schedule flattening to ``order``;
+        lifetimes switch to step indices so co-issued ops' outputs are
+        live simultaneously and therefore packed disjointly.
 
     Returns:
       An :class:`ArenaPlan` whose ``arena_bytes`` (bytes — the buffer an
@@ -453,7 +473,7 @@ def plan_arena_best(
       ``policy`` name, and per-node byte offsets via
       :meth:`ArenaPlan.offset_of`.
     """
-    items = _build_items(g, order, preplaced)
+    items = _build_items(g, order, preplaced, steps=steps)
     peak = _interval_peak(items)
     best_policy, best_water = _race_pack(items, policies, peak)
     return ArenaPlan(
@@ -502,6 +522,7 @@ def plan_arena_regions(
     resident: Sequence[int],
     preplaced: Sequence[int] = (),
     policies: Sequence[str] = ("first_fit", "best_fit", "greedy_by_size"),
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> ArenaPlan:
     """Two-region arena: ``resident`` tensors at the bottom, the rest on top.
 
@@ -527,7 +548,7 @@ def plan_arena_regions(
             raise ValueError(
                 f"resident node {r} has consumers {g.succs[r]}; only graph "
                 f"outputs (state tensors) can be pinned resident")
-    items = _build_items(g, order, preplaced)
+    items = _build_items(g, order, preplaced, steps=steps)
     res_items = [it for it in items if set(it.node_ids) & res_set]
     for it in res_items:
         if not set(it.node_ids) <= res_set:
@@ -549,6 +570,30 @@ def plan_arena_regions(
         arena_bytes=resident_extent + twater,
         policy=f"regions+{policy}",
         peak_bytes=_interval_peak(items),
+    )
+
+
+def pin_transients(plan: ArenaPlan) -> ArenaPlan:
+    """A copy of ``plan`` with every buffer held until the schedule ends.
+
+    Placement (offsets, ``arena_bytes``) is untouched — the plan stays valid
+    for the executor — but no storage is ever reused: the latency-class
+    layout serving hands to requests that would rather not pay allocator
+    churn, at the cost of ``peak_bytes`` rising to the whole-plan footprint.
+    From :func:`resident_bytes`' point of view every allocation becomes
+    persistent, so the lease extent equals ``arena_bytes``.
+    """
+    if not plan.allocations:
+        return ArenaPlan([], plan.arena_bytes,
+                         policy=f"{plan.policy}+pinned", peak_bytes=0)
+    mt = max(a.t_free for a in plan.allocations)
+    allocs = [dataclasses.replace(a, t_free=mt, intra=dict(a.intra))
+              for a in plan.allocations]
+    return ArenaPlan(
+        allocations=allocs,
+        arena_bytes=plan.arena_bytes,
+        policy=f"{plan.policy}+pinned",
+        peak_bytes=_interval_peak(allocs),
     )
 
 

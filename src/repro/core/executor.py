@@ -257,9 +257,11 @@ class RealizedTracker:
     order — the realized-vs-planned invariant.
     """
 
-    def __init__(self, g: Graph, order: Sequence[int], plan: ArenaPlan):
+    def __init__(self, g: Graph, order: Sequence[int], plan: ArenaPlan,
+                 steps: Sequence[Sequence[int]] | None = None):
         self._g = g
         sched = set(order)
+        horizon = len(order) if steps is None else len(steps)
         self._alloc = {u: plan.allocation_of(u) for u in order}
         self._uses: dict[int, int] = {}
         self._output: dict[int, bool] = {}
@@ -271,7 +273,10 @@ class RealizedTracker:
                 uses += len(consumers)
                 is_out |= not consumers
             self._uses[id(a)] = uses
-            self._output[id(a)] = is_out
+            # a plan may hold buffers past their last consumer (pinned
+            # latency-class plans set t_free beyond the horizon): honor the
+            # plan's lifetime, not just graph-output-ness
+            self._output[id(a)] = is_out or a.t_free > horizon
         self._active: set[int] = set()
         self._pending_retire: list = []
         self._live = 0
@@ -279,25 +284,37 @@ class RealizedTracker:
         self.extent_bytes = 0
 
     def step(self, u: int) -> None:
+        self.step_group((u,))
+
+    def step_group(self, units: Sequence[int]) -> None:
+        """One time slot: all of ``units`` execute concurrently.
+
+        Every member's allocation is activated before the slot's peak is
+        sampled (co-issued outputs are live together — the step-model
+        transient of ``simulate_steps``), and predecessors fully consumed by
+        the slot retire at its end, landing before the next slot's allocs.
+        """
         # frees scheduled from the previous step land before this alloc
         for a in self._pending_retire:
             self._active.discard(id(a))
             self._live -= a.size
         self._pending_retire = []
-        a = self._alloc[u]
-        if id(a) not in self._active:
-            self._active.add(id(a))
-            self._live += a.size
-            self.extent_bytes = max(self.extent_bytes, a.offset + a.size)
+        for u in units:
+            a = self._alloc[u]
+            if id(a) not in self._active:
+                self._active.add(id(a))
+                self._live += a.size
+                self.extent_bytes = max(self.extent_bytes, a.offset + a.size)
         self.peak_bytes = max(self.peak_bytes, self._live)
-        for p in self._g.nodes[u].preds:
-            pa = self._alloc.get(p)
-            if pa is None:
-                continue
-            self._uses[id(pa)] -= 1
-            if self._uses[id(pa)] == 0 and not self._output[id(pa)] \
-                    and id(pa) in self._active:
-                self._pending_retire.append(pa)
+        for u in units:
+            for p in self._g.nodes[u].preds:
+                pa = self._alloc.get(p)
+                if pa is None:
+                    continue
+                self._uses[id(pa)] -= 1
+                if self._uses[id(pa)] == 0 and not self._output[id(pa)] \
+                        and id(pa) in self._active:
+                    self._pending_retire.append(pa)
 
 
 # ---------------------------------------------------------------------------
@@ -406,10 +423,13 @@ class PlanProgram:
     def __init__(self, g: Graph, order: Sequence[int], plan: ArenaPlan, *,
                  fuse: bool = False,
                  registry: Mapping[str, OpFn] | None = None,
-                 impl: str = "auto", interpret: bool = False):
+                 impl: str = "auto", interpret: bool = False,
+                 steps: Sequence[Sequence[int]] | None = None):
         self.graph = g
         self.order = list(order)
         self.plan = plan
+        self.steps = None if steps is None else tuple(
+            tuple(s) for s in steps)
         self.fuse = bool(fuse)
         self.registry = registry
         self.impl = impl
@@ -442,11 +462,43 @@ class PlanProgram:
                     f"all aliased ({sorted(nd.alias_preds)}); mixed "
                     f"views are not executable")
 
+        # a width-W step schedule executes member ops of one slot against
+        # simultaneously-live storage: the plan must place every co-issued
+        # slot disjointly (the steps were the plan's lifetime positions)
+        if self.steps is not None:
+            if [u for s in self.steps for u in s] != self.order:
+                raise ExecutorError("steps do not flatten to order")
+            for st in self.steps:
+                if len(st) < 2:
+                    continue
+                in_step = set(st)
+                spans = []
+                for u in st:
+                    if set(nds[u].preds) & in_step:
+                        raise ExecutorError(
+                            f"step {st} is not an antichain: {nds[u].name} "
+                            f"reads a co-issued node")
+                    a = plan.allocation_of(u)
+                    spans.append((a.offset, a.offset + a.size, u, id(a)))
+                spans.sort()
+                for s0, s1 in zip(spans, spans[1:]):
+                    if s1[0] < s0[1] and s1[3] != s0[3]:
+                        raise ExecutorError(
+                            f"co-issued nodes {nds[s0[2]].name} and "
+                            f"{nds[s1[2]].name} overlap in the arena "
+                            f"([{s0[0]}, {s0[1]}) vs [{s1[0]}, {s1[1]})); "
+                            f"plan the arena with steps= to keep them "
+                            f"disjoint")
+
         # realized footprint is a pure function of (g, order, plan): replay
         # it once here instead of on every execution
-        tracker = RealizedTracker(g, self.order, plan)
-        for u in self.order:
-            tracker.step(u)
+        tracker = RealizedTracker(g, self.order, plan, steps=self.steps)
+        if self.steps is not None:
+            for st in self.steps:
+                tracker.step_group(st)
+        else:
+            for u in self.order:
+                tracker.step(u)
         self.realized_peak_bytes = tracker.peak_bytes
         self.realized_arena_bytes = tracker.extent_bytes
 
@@ -653,6 +705,7 @@ def compile_plan(
     registry: Mapping[str, OpFn] | None = None,
     impl: str = "auto",
     interpret: bool = False,
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> PlanProgram:
     """Build (or fetch) the :class:`PlanProgram` for this plan.
 
@@ -662,8 +715,9 @@ def compile_plan(
     per-plan precomputation and reuse the cached jit trace.  The cache is
     dropped on pickling (``ArenaPlan.__getstate__``) and capped per plan.
     """
+    steps_key = None if steps is None else tuple(tuple(s) for s in steps)
     key = (id(g), tuple(order), bool(fuse), impl, bool(interpret),
-           None if registry is None else id(registry))
+           None if registry is None else id(registry), steps_key)
     cache = plan.__dict__.setdefault("_programs", {})
     prog = cache.get(key)
     # ids can be recycled after gc: accept a hit only if it still points at
@@ -672,7 +726,7 @@ def compile_plan(
             (registry is None or prog.registry is registry):
         return prog
     prog = PlanProgram(g, order, plan, fuse=fuse, registry=registry,
-                       impl=impl, interpret=interpret)
+                       impl=impl, interpret=interpret, steps=steps)
     cache[key] = prog
     while len(cache) > _PROGRAM_CACHE_CAP:
         cache.pop(next(iter(cache)))
@@ -692,6 +746,7 @@ def execute_plan(
     jit: bool = False,
     strict: bool = True,
     fuse: bool = False,
+    steps: Sequence[Sequence[int]] | None = None,
 ) -> ExecutionResult:
     """Run schedule ``order`` of ``g`` against the planned arena.
 
@@ -719,13 +774,20 @@ def execute_plan(
         forwarding between members, one write (or one chain-kernel launch)
         per region instead of per node (DESIGN.md §11).  Bit-equal to the
         default slice-per-node path.
+      steps: optional width-W step schedule (must flatten to ``order``, and
+        ``plan`` must have been packed with the same ``steps``).  Values
+        still stream through the arena one op at a time — co-issued ops'
+        outputs are bit-identical because the plan places them disjointly
+        (asserted) — but the realized footprint is replayed in step groups,
+        so the realized-vs-planned invariant checks the *concurrent* peak
+        (DESIGN.md §12).
 
     Returns:
       :class:`ExecutionResult` with output values and the measured
       realized peak/extent bytes.
     """
     return compile_plan(g, order, plan, fuse=fuse, registry=registry,
-                        impl=impl, interpret=interpret).run(
+                        impl=impl, interpret=interpret, steps=steps).run(
         inputs, arena=arena, jit=jit, strict=strict)
 
 

@@ -398,3 +398,82 @@ def simulate_schedule(
         trace.append(mu)
     del keep_outputs  # outputs (no consumers) are never freed by construction
     return SimResult(peak_bytes=peak, trace=trace, final_bytes=mu)
+
+
+def simulate_steps(
+    g: Graph,
+    steps: Sequence[Sequence[int]],
+    preplaced: Sequence[int] = (),
+) -> SimResult:
+    """Replay a width-W *step schedule* through the concurrent-step model.
+
+    A step issues its member ops concurrently (DESIGN.md §12): every
+    member's output storage is claimed *before* any of the step's
+    deallocations land, so the step's transient is
+
+        mu_before + sum over members of max(net_alloc, 0)
+
+    (an alias member only claims the bytes its output needs beyond its
+    pred's storage — exactly the allocator's ``alloc_pos``), and
+    predecessors fully consumed by the step are freed at the step's end.
+    Members of one step must be mutually independent (no intra-step edge);
+    a step reading a value produced in the same step is rejected.
+
+    With every step a singleton this reproduces :func:`simulate_schedule`
+    bit-for-bit (same peak, same per-step trace, same final bytes): a
+    negative-net alias op claims 0 transient bytes here versus a negative
+    delta there, but ``mu`` never exceeds the running peak between ops, so
+    the max is unaffected.
+
+    ``trace`` holds the footprint after each *step* (including its frees).
+    """
+    n = len(g)
+    pre = set(preplaced)
+    flat = [u for step in steps for u in step]
+    if len(set(flat)) != len(flat):
+        raise GraphError("step schedule repeats a node")
+    if set(flat) & pre:
+        raise GraphError("schedule and preplaced overlap")
+    remaining = [0] * n
+    for u in flat:
+        for p in g.nodes[u].preds:
+            remaining[p] += 1
+    resident = [False] * n
+    mu = 0
+    for p in pre:
+        resident[p] = True
+        mu += g.sizes[p]
+    peak = mu
+    trace: list[int] = []
+    for step in steps:
+        in_step = set(step)
+        claimed = 0
+        net = 0
+        for u in step:
+            nd = g.nodes[u]
+            for p in nd.preds:
+                if p in in_step:
+                    raise GraphError(
+                        f"step {tuple(step)} is not an antichain: node {u} "
+                        f"reads co-issued node {p}")
+                if not resident[p]:
+                    raise GraphError(
+                        f"schedule not topological: node {u} needs {p} "
+                        f"which is not resident")
+            alias_bytes = sum(g.sizes[p] for p in nd.alias_preds)
+            claimed += max(g.sizes[u] - alias_bytes, 0)
+            net += g.sizes[u] - alias_bytes
+        peak = max(peak, mu + claimed)
+        mu += net
+        for u in step:
+            resident[u] = True
+        for u in step:
+            nd = g.nodes[u]
+            for p in nd.preds:
+                remaining[p] -= 1
+                if remaining[p] == 0 and resident[p]:
+                    resident[p] = False
+                    if p not in nd.alias_preds:
+                        mu -= g.sizes[p]
+        trace.append(mu)
+    return SimResult(peak_bytes=peak, trace=trace, final_bytes=mu)

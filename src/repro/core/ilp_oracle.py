@@ -1,0 +1,294 @@
+"""Differential oracles for the width-W latency x memory Pareto frontier.
+
+Two independent implementations of the time-slot scheduling model of
+DESIGN.md §12, used by the differential test corpus to check that
+``pareto_schedule``'s frontier is exactly the set of non-dominated
+(makespan, peak-bytes) points — the same role ``brute_force_schedule``
+plays for the serial peak.
+
+* **ILP** (``solver='pulp'``) — the classic HLS time-indexed formulation:
+  one binary ``x[u,t]`` per (op, slot), width and precedence as linear
+  constraints, slot durations ``d[t] >= cost[u] * x[u,t]``, and the
+  footprint at every slot bounded by the peak variable with LP-relaxed
+  free indicators (pressure-maximized by the objective, so they are tight
+  at the optimum).  The frontier is enumerated by the epsilon-constraint
+  sweep: minimize peak under a shrinking latency cap, tightening the
+  makespan at each step.  Import-guarded — ``pulp`` ships only in the
+  ``ilp`` optional extra (CI runs it in one matrix job; tier-1 stays
+  solver-free).
+
+* **Pure-Python fallback** (``solver='fallback'``) — exact memoized
+  *suffix* enumeration over scheduled-set masks, for graphs of at most
+  ``max_nodes`` (default 10) nodes.  Deliberately independent of the
+  forward planner's machinery: the footprint of a mask is re-derived from
+  scratch as the sum of live tensor sizes (produced, and either a graph
+  output or still awaiting a consumer) instead of incrementally, there are
+  no bounds, no incumbents, and no eager-move dominance.
+
+Both oracles return the identical frontier; ``oracle_frontier`` with
+``solver='auto'`` prefers the ILP when available and asserts nothing —
+tests diff its output against the planner's.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Sequence
+
+from repro.core.graph import Graph
+
+__all__ = [
+    "OracleError",
+    "has_ilp_solver",
+    "oracle_frontier",
+]
+
+#: the fallback enumerates all 2^n scheduled-set masks; tiny by contract
+_FALLBACK_MAX_NODES = 10
+
+
+class OracleError(RuntimeError):
+    """The requested oracle backend is unavailable or out of scope."""
+
+
+def has_ilp_solver() -> bool:
+    """True when the ``ilp`` optional extra (pulp + CBC) is importable."""
+    try:
+        import pulp  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
+def _node_tables(
+    g: Graph, costs: Sequence[int] | None
+) -> tuple[list[int], list[int], list[int]]:
+    """(costs, net_alloc, alloc_pos) re-derived from the graph."""
+    if costs is None:
+        from repro.core.scheduler import node_costs
+
+        costs = node_costs(g)
+    n = len(g)
+    net = [0] * n
+    pos = [0] * n
+    for u in range(n):
+        nd = g.nodes[u]
+        net[u] = g.sizes[u] - sum(g.sizes[p] for p in nd.alias_preds)
+        pos[u] = max(net[u], 0)
+    return list(costs), net, pos
+
+
+def _nondominated(
+    points: set[tuple[int, int]] | list[tuple[int, int]]
+) -> tuple[tuple[int, int], ...]:
+    """Strictly non-dominated (makespan, peak) points, sorted by makespan."""
+    out: list[tuple[int, int]] = []
+    for ms, pk in sorted(set(points)):
+        # kept peaks are strictly decreasing, so the last kept point has the
+        # lowest peak seen: anything not strictly below it is dominated (or
+        # an equal-makespan tie whose lower-peak twin is already kept)
+        if not out or pk < out[-1][1]:
+            out.append((ms, pk))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python fallback: memoized suffix enumeration over masks
+# ---------------------------------------------------------------------------
+
+
+def _fallback_frontier(
+    g: Graph,
+    max_width: int,
+    preplaced: Sequence[int],
+    costs: Sequence[int],
+    pos: Sequence[int],
+    max_nodes: int,
+) -> tuple[tuple[int, int], ...]:
+    n = len(g)
+    if n > max_nodes:
+        raise OracleError(
+            f"fallback oracle enumerates all masks: {n} nodes > "
+            f"max_nodes {max_nodes}")
+    pre = frozenset(preplaced)
+    pre_mask = 0
+    mu0 = 0
+    for p in pre:
+        pre_mask |= 1 << p
+        mu0 += g.sizes[p]
+    full_mask = pre_mask
+    for u in range(n):
+        full_mask |= 1 << u
+    succ_mask = g.succ_mask
+    pred_mask = g.pred_mask
+    sizes = g.sizes
+
+    def footprint(mask: int) -> int:
+        # from-scratch live-set sum: a produced tensor is resident while it
+        # is a graph output or still has an unscheduled consumer (an
+        # alias-consumed pred's storage morphs into its consumer's, which
+        # this counts exactly once via the consumer's own size)
+        total = 0
+        for v in range(n):
+            if not mask >> v & 1:
+                continue
+            if succ_mask[v] == 0 or succ_mask[v] & ~mask:
+                total += sizes[v]
+        return total
+
+    def ready(mask: int) -> list[int]:
+        return [u for u in range(n)
+                if not mask >> u & 1 and pred_mask[u] & mask == pred_mask[u]]
+
+    memo: dict[int, tuple[tuple[int, int], ...]] = {}
+
+    def suffix(mask: int) -> tuple[tuple[int, int], ...]:
+        """Pareto set of (remaining makespan, absolute suffix peak)."""
+        if mask == full_mask:
+            return ((0, 0),)
+        hit = memo.get(mask)
+        if hit is not None:
+            return hit
+        mu = footprint(mask)
+        rdy = ready(mask)
+        acc: set[tuple[int, int]] = set()
+        for size in range(1, min(max_width, len(rdy)) + 1):
+            for S in itertools.combinations(rdy, size):
+                dur = max(costs[u] for u in S)
+                transient = mu + sum(pos[u] for u in S)
+                nm = mask
+                for u in S:
+                    nm |= 1 << u
+                for ms_rest, pk_rest in suffix(nm):
+                    acc.add((dur + ms_rest, max(transient, pk_rest)))
+        res = _nondominated(acc)
+        memo[mask] = res
+        return res
+
+    return _nondominated(
+        [(ms, max(pk, mu0)) for ms, pk in suffix(pre_mask)])
+
+
+# ---------------------------------------------------------------------------
+# ILP: time-indexed formulation + epsilon-constraint sweep (requires pulp)
+# ---------------------------------------------------------------------------
+
+
+def _pulp_frontier(
+    g: Graph,
+    max_width: int,
+    costs: Sequence[int],
+    net: Sequence[int],
+    pos: Sequence[int],
+    latency_budget: int | None,
+) -> tuple[tuple[int, int], ...]:
+    import pulp
+
+    n = len(g)
+    slots = range(n)
+    freeable = [p for p in range(n)
+                if g.succs[p]
+                and not any(p in g.nodes[c].alias_preds for c in g.succs[p])]
+
+    def solve(minimize: str, latency_cap: int | None, peak_cap: int | None):
+        prob = pulp.LpProblem("pareto_oracle", pulp.LpMinimize)
+        x = pulp.LpVariable.dicts(
+            "x", (range(n), slots), cat=pulp.LpBinary)
+        d = pulp.LpVariable.dicts("d", slots, lowBound=0)
+        peak = pulp.LpVariable("peak", lowBound=0)
+        f = pulp.LpVariable.dicts(
+            "f", (freeable, range(1, n)), lowBound=0, upBound=1)
+        for u in range(n):
+            prob += pulp.lpSum(x[u][t] for t in slots) == 1
+        for t in slots:
+            prob += pulp.lpSum(x[u][t] for u in range(n)) <= max_width
+            for u in range(n):
+                prob += d[t] >= costs[u] * x[u][t]
+        start = {u: pulp.lpSum(t * x[u][t] for t in slots) for u in range(n)}
+        for u in range(n):
+            for p in g.nodes[u].preds:
+                prob += start[u] >= start[p] + 1
+        makespan = pulp.lpSum(d[t] for t in slots)
+        # z[u][t] = scheduled at or before slot t (prefix-sum expression)
+        for t in slots:
+            mem = pulp.lpSum(pos[u] * x[u][t] for u in range(n))
+            mem += pulp.lpSum(
+                net[u] * x[u][tp] for u in range(n) for tp in range(t))
+            if t >= 1:
+                for p in freeable:
+                    # f is pressure-maximized: tight iff every consumer of p
+                    # landed in a strictly earlier slot
+                    for c in g.succs[p]:
+                        prob += f[p][t] <= pulp.lpSum(
+                            x[c][tp] for tp in range(t))
+                mem -= pulp.lpSum(
+                    g.sizes[p] * f[p][t] for p in freeable)
+            prob += mem <= peak
+        if latency_cap is not None:
+            prob += makespan <= latency_cap
+        if peak_cap is not None:
+            prob += peak <= peak_cap
+        prob += peak if minimize == "peak" else makespan
+        status = prob.solve(pulp.PULP_CBC_CMD(msg=0))
+        if pulp.LpStatus[status] != "Optimal":
+            return None
+        return (int(round(pulp.value(peak))),
+                int(round(pulp.value(makespan))))
+
+    points: list[tuple[int, int]] = []
+    cap = latency_budget
+    while True:
+        got = solve("peak", cap, None)
+        if got is None:
+            break
+        best_peak, _ = got
+        got2 = solve("makespan", cap, best_peak)
+        assert got2 is not None
+        _, tight_ms = got2
+        points.append((tight_ms, best_peak))
+        cap = tight_ms - 1
+        if cap < 0:
+            break
+    return _nondominated(points)
+
+
+def oracle_frontier(
+    g: Graph,
+    *,
+    max_width: int,
+    preplaced: Sequence[int] = (),
+    costs: Sequence[int] | None = None,
+    latency_budget: int | None = None,
+    solver: str = "auto",
+    max_nodes: int = _FALLBACK_MAX_NODES,
+) -> tuple[tuple[int, int], ...]:
+    """Exact (makespan, peak_bytes) frontier from an independent solver.
+
+    ``solver='auto'`` uses the ILP when ``pulp`` is importable and the
+    pure-Python fallback otherwise; ``'pulp'`` and ``'fallback'`` force a
+    backend (the former raising :class:`OracleError` without the ``ilp``
+    extra).  The ILP leg does not model preplaced residents — pass
+    ``preplaced=()`` or use the fallback.
+    """
+    costs, net, pos = _node_tables(g, costs)
+    if solver == "auto":
+        solver = "pulp" if has_ilp_solver() else "fallback"
+    if solver == "fallback":
+        pts = _fallback_frontier(g, max_width, preplaced, costs, pos,
+                                 max_nodes)
+        if latency_budget is not None:
+            pts = tuple(p for p in pts if p[0] <= latency_budget)
+        return pts
+    if solver != "pulp":
+        raise ValueError(f"unknown solver {solver!r}")
+    if not has_ilp_solver():
+        raise OracleError(
+            "solver='pulp' requires the 'ilp' optional extra "
+            "(pip install .[ilp])")
+    if preplaced:
+        raise OracleError("the ILP oracle does not model preplaced "
+                          "residents; use solver='fallback'")
+    if len(g) > max_nodes:
+        raise OracleError(
+            f"ILP oracle capped at max_nodes {max_nodes} ({len(g)} nodes)")
+    return _pulp_frontier(g, max_width, costs, net, pos, latency_budget)

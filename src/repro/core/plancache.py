@@ -179,7 +179,10 @@ def translate_order(src: Graph, dst: Graph, order: list[int]) -> list[int] | Non
 # Bump whenever the *shape* of cached payloads changes (new plan fields,
 # different tuple layouts...): folded into every options key, so stale disk
 # entries from older code become clean misses instead of poison.
-SCHEMA_VERSION = 5   # 5: PlanConfig-keyed plans, recompute-expanded graphs
+SCHEMA_VERSION = 6   # 5: PlanConfig-keyed plans, recompute-expanded graphs
+                     # 6: pareto plans (Plan.steps/makespan/schedule_frontier,
+                     #    ScheduleResult.makespan/width, PlanConfig.objective/
+                     #    max_width/latency_budget)
 
 
 def _options_key(options: Any) -> str:

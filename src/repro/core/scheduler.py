@@ -87,6 +87,9 @@ class ScheduleResult:
     arena_est_bytes: int = 0   # DP's incremental arena-watermark estimate
                                # (0 when the producing path doesn't track it)
     exact: bool = True         # False for beam-trimmed / heuristic orders
+    makespan: int = 0          # surrogate-cost makespan (serial = total cost;
+                               # 0 when the producing path doesn't track it)
+    width: int = 1             # max ops co-issued in any step (serial = 1)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -237,16 +240,20 @@ def dp_schedule(
     little = sys.byteorder == "little"
     if engine == "auto":
         try:
-            return _dp_schedule_python(
+            res = _dp_schedule_python(
                 g, spill_cap=_AUTO_SPILL_TRANSITIONS if little else None, **kw
             )
         except _EngineSpill:
-            return _dp_schedule_numpy(g, **kw)
-    if engine == "numpy":
-        return _dp_schedule_numpy(g, **kw)
-    if engine != "python":
+            res = _dp_schedule_numpy(g, **kw)
+    elif engine == "numpy":
+        res = _dp_schedule_numpy(g, **kw)
+    elif engine == "python":
+        res = _dp_schedule_python(g, **kw)
+    else:
         raise ValueError(f"unknown engine {engine!r}")
-    return _dp_schedule_python(g, **kw)
+    costs = node_costs(g)
+    res.makespan = sum(costs[u] for u in res.order)
+    return res
 
 
 def _dp_schedule_python(
@@ -789,6 +796,7 @@ def brute_force_schedule(
     rec(avail)
     assert best_order is not None
     sim = simulate_schedule(g, best_order, preplaced=tuple(pre))
+    costs = node_costs(g)
     return ScheduleResult(
         order=best_order,
         peak_bytes=sim.peak_bytes,
@@ -796,4 +804,421 @@ def brute_force_schedule(
         n_states_expanded=count,
         n_signatures=count,
         wall_time_s=time.perf_counter() - t0,
+        makespan=sum(costs[u] for u in best_order),
     )
+
+
+# ---------------------------------------------------------------------------
+# Latency x memory Pareto frontier (width-W time-slot model, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def node_costs(g: Graph) -> list[int]:
+    """Per-node surrogate latency cost (the rewriter's FLOPs model).
+
+    Inputs cost 0, so co-issuing graph inputs is free; every compute op
+    costs at least 1.  The import is deferred because the rewriter imports
+    this module.
+    """
+    from repro.core.rewriter import node_flops
+
+    return [node_flops(g, u) for u in range(len(g))]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoPoint:
+    """One non-dominated (makespan, peak) schedule on the frontier."""
+
+    steps: tuple[tuple[int, ...], ...]  # time slots; each an antichain
+    makespan: int                       # sum over steps of max member cost
+    peak_bytes: int                     # step-model peak (simulate_steps)
+    final_bytes: int
+    width: int                          # max |step| actually used
+
+    @property
+    def order(self) -> list[int]:
+        """The steps flattened to a serial execution order."""
+        return [u for step in self.steps for u in step]
+
+
+@dataclasses.dataclass
+class ParetoFrontier:
+    """Full latency-vs-peak frontier of a graph under width-W concurrency.
+
+    ``points`` is sorted by strictly increasing makespan and strictly
+    decreasing peak: ``points[0]`` is the fastest schedule, ``points[-1]``
+    the serial-DP-peak endpoint (the latency-unconstrained minimum peak —
+    co-issuing ops can never *reduce* peak below the serial optimum because
+    any step schedule serializes without raising its peak, DESIGN.md §12).
+    """
+
+    points: list[ParetoPoint]
+    max_width: int
+    latency_budget: int | None
+    n_states_expanded: int
+    n_signatures: int
+    wall_time_s: float
+    exact: bool = True
+
+    def pairs(self) -> tuple[tuple[int, int], ...]:
+        return tuple((p.makespan, p.peak_bytes) for p in self.points)
+
+    def best_under(self, latency_budget: int | None = None) -> ParetoPoint:
+        """Min-peak point with makespan <= budget (None = unconstrained)."""
+        pts = self.points if latency_budget is None else [
+            p for p in self.points if p.makespan <= latency_budget]
+        if not pts:
+            raise NoSolutionError(
+                f"no frontier point within latency budget {latency_budget} "
+                f"(fastest point has makespan {self.points[0].makespan})")
+        return pts[-1]
+
+    @property
+    def min_makespan(self) -> ParetoPoint:
+        return self.points[0]
+
+    @property
+    def min_peak(self) -> ParetoPoint:
+        return self.points[-1]
+
+
+def _greedy_packed_steps(
+    g: Graph, max_width: int, preplaced: Sequence[int], costs: Sequence[int]
+) -> list[tuple[int, ...]]:
+    """Deterministic maximal-width longest-cost-first step schedule.
+
+    Not optimal in either objective — it exists to seed the Pareto search
+    with a low-makespan incumbent (maximal packing is a decent makespan
+    upper bound) whose (makespan, peak) prunes high-peak state families.
+    """
+    n = len(g)
+    pre = set(preplaced)
+    indeg = [0] * n
+    for nd in g.nodes:
+        indeg[nd.id] += sum(1 for p in nd.preds if p not in pre)
+    ready = {u for u in range(n) if u not in pre and indeg[u] == 0}
+    steps: list[tuple[int, ...]] = []
+    while ready:
+        pick = sorted(ready, key=lambda u: (-costs[u], u))[:max_width]
+        steps.append(tuple(sorted(pick)))
+        for u in pick:
+            ready.discard(u)
+            for v in g.succs[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    ready.add(v)
+    return steps
+
+
+def steps_makespan(
+    g: Graph,
+    steps: Sequence[Sequence[int]],
+    costs: Sequence[int] | None = None,
+) -> int:
+    """Surrogate makespan of a step schedule: sum of per-step max costs."""
+    if costs is None:
+        costs = node_costs(g)
+    return sum(max(costs[u] for u in step) for step in steps if step)
+
+
+def pareto_schedule(
+    g: Graph,
+    *,
+    max_width: int = 2,
+    latency_budget: int | None = None,
+    budget: int | None = None,
+    preplaced: Sequence[int] = (),
+    state_quota: int | None = None,
+    on_quota: str = "raise",
+    costs: Sequence[int] | None = None,
+) -> ParetoFrontier:
+    """Exact latency-vs-peak Pareto frontier under width-W concurrency.
+
+    Extends the signature DP with a time dimension: a transition schedules a
+    non-empty *antichain* of up to ``max_width`` ready nodes as one step
+    whose duration is the max member cost and whose transient claims every
+    member's output before any deallocation lands (the step model of
+    :func:`repro.core.graph.simulate_steps`).  Footprint ``mu`` stays a pure
+    function of the scheduled-set mask, so keeping the per-mask Pareto set
+    of ``(makespan, peak)`` labels is exact — the two-objective analogue of
+    the serial DP's single ``(peak, mu, water)`` winner.
+
+    Exactness-preserving prunes: per-mask label dominance; a latency-budget
+    cut using the admissible remaining-makespan bound ``max(critical-path
+    tail, ceil(remaining cost / W))``; and an incumbent cut against two
+    complete seed points (the exact serial DP order and a greedy max-packed
+    schedule) — a label whose every completion is weakly dominated by a seed
+    point is dropped, and both seeds re-enter the final candidate set so
+    boundary ties survive.
+
+    ``max_width=1`` delegates to :func:`dp_schedule`, reproducing today's
+    serial schedule bit-for-bit as a single-point frontier.  ``budget`` caps
+    peak bytes (the paper's tau); ``latency_budget`` caps makespan.
+    ``on_quota='beam'`` trims each DP level to the ``state_quota`` best
+    labels by ``(peak, makespan)`` and marks the frontier inexact — the
+    serial endpoint stays exact regardless, because the seed point is the
+    exact serial DP's.
+    """
+    if max_width < 1:
+        raise ValueError(f"max_width must be >= 1, got {max_width}")
+    if on_quota not in ("raise", "beam"):
+        raise ValueError(f"unknown on_quota {on_quota!r}")
+    t0 = time.perf_counter()
+    costs = list(costs) if costs is not None else node_costs(g)
+    from repro.core.graph import simulate_steps
+
+    def _serial_seed() -> ScheduleResult:
+        # try the exact search first even in beam mode: dp_schedule flags
+        # every beam-mode result inexact whether or not a trim happened
+        try:
+            return dp_schedule(
+                g, budget=budget, state_quota=state_quota,
+                preplaced=preplaced, on_quota="raise")
+        except SearchTimeout:
+            if on_quota != "beam":
+                raise
+            return dp_schedule(
+                g, budget=budget, state_quota=state_quota,
+                preplaced=preplaced, on_quota="beam")
+
+    if max_width == 1:
+        res = _serial_seed()
+        if latency_budget is not None and res.makespan > latency_budget:
+            raise NoSolutionError(
+                f"latency budget {latency_budget} below the serial makespan "
+                f"{res.makespan} and max_width=1 allows no packing")
+        point = ParetoPoint(
+            steps=tuple((u,) for u in res.order),
+            makespan=res.makespan,
+            peak_bytes=res.peak_bytes,
+            final_bytes=res.final_bytes,
+            width=1,
+        )
+        return ParetoFrontier(
+            points=[point], max_width=1, latency_budget=latency_budget,
+            n_states_expanded=res.n_states_expanded,
+            n_signatures=res.n_signatures,
+            wall_time_s=time.perf_counter() - t0, exact=res.exact)
+
+    import itertools
+
+    n = len(g)
+    W = max_width
+    pre = frozenset(preplaced)
+    to_schedule = [u for u in range(n) if u not in pre]
+    if not to_schedule:
+        # nothing to place: a single empty schedule (dp_schedule semantics —
+        # preplaced residents are the caller's bytes, not this schedule's)
+        point = ParetoPoint(steps=(), makespan=0, peak_bytes=0,
+                            final_bytes=0, width=1)
+        return ParetoFrontier(
+            points=[point], max_width=W, latency_budget=latency_budget,
+            n_states_expanded=0, n_signatures=0,
+            wall_time_s=time.perf_counter() - t0, exact=True)
+    sizes = g.sizes
+    pred_mask = g.pred_mask
+    succ_mask = g.succ_mask
+    succs = g.succs
+
+    net_alloc = [0] * n
+    alloc_pos = [0] * n
+    dealloc_preds: list[tuple[tuple[int, int], ...]] = [()] * n
+    for u in range(n):
+        nd = g.nodes[u]
+        net_alloc[u] = sizes[u] - sum(sizes[p] for p in nd.alias_preds)
+        alloc_pos[u] = max(net_alloc[u], 0)
+        dealloc_preds[u] = tuple(
+            (p, sizes[p]) for p in nd.preds if p not in nd.alias_preds
+        )
+
+    # critical-path tails over the surrogate cost (admissible makespan LB)
+    tail = [0] * n
+    for u in range(n - 1, -1, -1):
+        if u in pre:
+            continue
+        tail[u] = costs[u] + max(
+            (tail[v] for v in succs[u] if v not in pre), default=0)
+
+    pre_mask = 0
+    mu0 = 0
+    for p in pre:
+        pre_mask |= 1 << p
+        mu0 += sizes[p]
+    full_mask = pre_mask
+    for u in to_schedule:
+        full_mask |= 1 << u
+    frontier0 = 0
+    for u in to_schedule:
+        if pred_mask[u] & pre_mask == pred_mask[u]:
+            frontier0 |= 1 << u
+    total_cost = sum(costs[u] for u in to_schedule)
+
+    # complete seed points pruning partial states from above; both re-enter
+    # the final candidate set, so a pruned boundary tie is never lost
+    serial = _serial_seed()
+    exact = serial.exact
+    seed_cands: list[tuple[int, int, tuple[tuple[int, ...], ...]]] = [
+        (serial.makespan, serial.peak_bytes,
+         tuple((u,) for u in serial.order)),
+    ]
+    if to_schedule:
+        packed = _greedy_packed_steps(g, W, preplaced, costs)
+        psim = simulate_steps(g, packed, preplaced=preplaced)
+        seed_cands.append(
+            (steps_makespan(g, packed, costs), psim.peak_bytes,
+             tuple(packed)))
+    seed_pairs = [(ms, pk) for ms, pk, _ in seed_cands]
+
+    def _ms_lb(mask: int, rem_cost: int) -> int:
+        """Admissible lower bound on the remaining makespan."""
+        best = 0
+        for u in to_schedule:
+            if not mask >> u & 1 and tail[u] > best:
+                best = tail[u]
+        return max(best, -(-rem_cost // W))
+
+    # label = (makespan, peak, parent_label | None, step_tuple); the parent
+    # reference survives per-mask Pareto evictions, so reconstruction never
+    # chases a reindexed list
+    MU, FRONT, LB, LABELS = 0, 1, 2, 3
+    root = (0, mu0, None, ())
+    buckets: dict[int, dict[int, list]] = {
+        len(pre): {pre_mask: [mu0, frontier0,
+                              _ms_lb(pre_mask, total_cost), [root]]}
+    }
+    rem_costs: dict[int, int] = {pre_mask: total_cost}
+    expanded = 0
+    n_signatures = 1
+
+    k0 = len(pre)
+    for k in range(k0, n):
+        bucket = buckets.pop(k, None)
+        if not bucket:
+            continue
+        total_labels = sum(len(e[LABELS]) for e in bucket.values())
+        if state_quota is not None and total_labels > state_quota:
+            if on_quota == "raise":
+                raise SearchTimeout(
+                    f"pareto level {k - k0}: {total_labels} labels > "
+                    f"quota {state_quota}")
+            flat = sorted(
+                ((lab[1], lab[0], mask, lab)
+                 for mask, e in bucket.items() for lab in e[LABELS]),
+                key=lambda t: t[:3])
+            for e in bucket.values():
+                e[LABELS] = []
+            for _, _, mask, lab in flat[:state_quota]:
+                bucket[mask][LABELS].append(lab)
+            exact = False
+        n_signatures += total_labels
+        for mask, ent in bucket.items():
+            mu, frontier, labels = ent[MU], ent[FRONT], ent[LABELS]
+            if not labels:
+                continue
+            ready = []
+            f = frontier
+            while f:
+                b = f & -f
+                f ^= b
+                ready.append(b.bit_length() - 1)
+            rem = rem_costs[mask]
+            for size in range(1, min(W, len(ready)) + 1):
+                for S in itertools.combinations(ready, size):
+                    sbits = 0
+                    dur = 0
+                    sum_pos = 0
+                    sum_net = 0
+                    for u in S:
+                        sbits |= 1 << u
+                        if costs[u] > dur:
+                            dur = costs[u]
+                        sum_pos += alloc_pos[u]
+                        sum_net += net_alloc[u]
+                    new_mask = mask | sbits
+                    freed = 0
+                    seen_preds = set()
+                    for u in S:
+                        for p, psz in dealloc_preds[u]:
+                            if p in seen_preds:
+                                continue
+                            seen_preds.add(p)
+                            if succ_mask[p] & new_mask == succ_mask[p]:
+                                freed += psz
+                    new_mu = mu + sum_net - freed
+                    tpeak = mu + sum_pos
+                    nk = k + size
+                    nb = buckets.setdefault(nk, {})
+                    nent = nb.get(new_mask)
+                    if nent is None:
+                        nf = frontier ^ sbits
+                        for u in S:
+                            for v in succs[u]:
+                                pm = pred_mask[v]
+                                if pm & new_mask == pm:
+                                    nf |= 1 << v
+                        nrem = rem - sum(costs[u] for u in S)
+                        rem_costs[new_mask] = nrem
+                        nent = nb[new_mask] = [
+                            new_mu, nf, _ms_lb(new_mask, nrem), []]
+                    lb_ms = nent[LB]
+                    nlabels = nent[LABELS]
+                    for lab in labels:
+                        expanded += 1
+                        new_ms = lab[0] + dur
+                        new_peak = lab[1] if lab[1] >= tpeak else tpeak
+                        if budget is not None and new_peak > budget:
+                            continue
+                        floor_ms = new_ms + lb_ms
+                        if (latency_budget is not None
+                                and floor_ms > latency_budget):
+                            continue
+                        if any(new_peak >= ipk and floor_ms >= ims
+                               for ims, ipk in seed_pairs):
+                            continue  # every completion covered by a seed
+                        dominated = False
+                        for cur in nlabels:
+                            if cur[0] <= new_ms and cur[1] <= new_peak:
+                                dominated = True
+                                break
+                        if dominated:
+                            continue
+                        nlabels[:] = [
+                            cur for cur in nlabels
+                            if not (new_ms <= cur[0] and new_peak <= cur[1])]
+                        nlabels.append((new_ms, new_peak, lab, S))
+
+    cands = list(seed_cands)
+    final_bucket = buckets.get(n, {})
+    for lab in final_bucket.get(full_mask, [None, None, None, []])[LABELS]:
+        steps_rev: list[tuple[int, ...]] = []
+        cur = lab
+        while cur[2] is not None:
+            steps_rev.append(cur[3])
+            cur = cur[2]
+        cands.append((lab[0], lab[1], tuple(reversed(steps_rev))))
+
+    if latency_budget is not None:
+        cands = [c for c in cands if c[0] <= latency_budget]
+    if budget is not None:
+        cands = [c for c in cands if c[1] <= budget]
+    if not cands:
+        raise NoSolutionError(
+            f"no width-{W} schedule satisfies latency budget "
+            f"{latency_budget} / peak budget {budget} (graph {g.name!r})")
+    cands.sort(key=lambda c: (c[0], c[1]))
+    points: list[ParetoPoint] = []
+    last_peak = None
+    for ms, pk, steps in cands:
+        if last_peak is not None and pk >= last_peak:
+            continue  # dominated, or an equal-makespan tie already kept
+        last_peak = pk
+        sim = simulate_steps(g, steps, preplaced=preplaced)
+        assert sim.peak_bytes == pk and steps_makespan(g, steps, costs) == ms
+        points.append(ParetoPoint(
+            steps=steps, makespan=ms, peak_bytes=pk,
+            final_bytes=sim.final_bytes,
+            width=max((len(s) for s in steps), default=1)))
+    return ParetoFrontier(
+        points=points, max_width=W, latency_budget=latency_budget,
+        n_states_expanded=expanded, n_signatures=n_signatures,
+        wall_time_s=time.perf_counter() - t0, exact=exact)

@@ -55,11 +55,20 @@ from repro.core.rewriter import (
     rematerialize,
     rewrite_graph,
 )
-from repro.core.scheduler import ScheduleResult, SearchTimeout, dp_schedule
+from repro.core.graph import simulate_steps
+from repro.core.scheduler import (
+    ParetoFrontier,
+    ScheduleResult,
+    SearchTimeout,
+    dp_schedule,
+    node_costs,
+    pareto_schedule,
+)
 
 
 _SCHEDULERS = ("dp", "kahn")
 _ON_TIMEOUT = ("adaptive", "raise")
+_OBJECTIVES = ("peak", "pareto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +104,17 @@ class PlanConfig:
       optional hard peak budget ``tau`` (bytes), and the quota-exhaustion
       policy ``on_timeout`` (``'adaptive'`` or ``'raise'``).
 
+    multi-objective
+      ``objective='pareto'`` switches ordering to the two-objective
+      time-slot DP (:func:`~repro.core.scheduler.pareto_schedule`): up to
+      ``max_width`` ready ops execute per step, the full latency-vs-peak
+      frontier lands in ``Plan.schedule_frontier``, and the realized plan
+      is the min-peak point whose makespan fits ``latency_budget`` (bytes
+      budget still via ``tau``).  Requires ``scheduler='dp'``;
+      ``max_width`` / ``latency_budget`` are rejected under the default
+      ``objective='peak'`` so a serial config can never silently mean two
+      things.
+
     arena
       ``arena_policy``: offset-allocator placement policy (``'best'`` races
       them all).  ``resident``: node ids pinned live across the whole
@@ -126,6 +146,10 @@ class PlanConfig:
     bnb: bool = True
     tau: int | None = None
     on_timeout: str = "adaptive"
+    # -- multi-objective (latency x memory, DESIGN.md §12) --
+    objective: str = "peak"
+    max_width: int = 1
+    latency_budget: int | None = None
     # -- arena --
     arena_policy: str = "best"
     resident: tuple[int, ...] = ()
@@ -144,6 +168,22 @@ class PlanConfig:
         if self.flops_budget < 1.0:
             raise ValueError("PlanConfig.flops_budget must be >= 1.0 "
                              f"(got {self.flops_budget})")
+        if self.objective not in _OBJECTIVES:
+            raise ValueError(
+                f"PlanConfig.objective must be one of {_OBJECTIVES}, "
+                f"got {self.objective!r}")
+        if self.max_width < 1:
+            raise ValueError("PlanConfig.max_width must be >= 1 "
+                             f"(got {self.max_width})")
+        if self.objective == "pareto":
+            if self.scheduler != "dp":
+                raise ValueError(
+                    "PlanConfig.objective='pareto' requires scheduler='dp' "
+                    f"(got {self.scheduler!r})")
+        elif self.max_width != 1 or self.latency_budget is not None:
+            raise ValueError(
+                "PlanConfig.max_width/latency_budget only apply under "
+                "objective='pareto'")
         object.__setattr__(self, "resident", tuple(self.resident))
 
     def replace(self, **changes) -> "PlanConfig":
@@ -182,6 +222,11 @@ class SerenityResult:
     seg_cache_hits: int = 0            # segments replayed from the plan cache
     config: "PlanConfig | None" = None           # the config that built this
     recompute_report: "RecomputeReport | None" = None
+    steps: "tuple[tuple[int, ...], ...] | None" = None  # width-W time slots
+                                       # (objective='pareto'; None = serial)
+    makespan: int = 0                  # surrogate-cost makespan of the order
+    schedule_frontier: "ParetoFrontier | None" = None   # latency-vs-peak
+                                       # frontier (objective='pareto' only)
 
     @property
     def arena_bytes(self) -> int:
@@ -194,6 +239,16 @@ class SerenityResult:
         if self.recompute_report is None:
             return ()
         return self.recompute_report.frontier
+
+    @property
+    def latency_frontier(self) -> tuple[tuple[int, int], ...]:
+        """Latency-vs-peak frontier: (makespan, peak_bytes) points sorted
+        by makespan, or ``()`` when planned without ``objective='pareto'``.
+        Distinct from :attr:`pareto_frontier`, the recompute FLOPs-vs-peak
+        trade-off."""
+        if self.schedule_frontier is None:
+            return ()
+        return self.schedule_frontier.pairs()
 
     @property
     def flops_ratio(self) -> float:
@@ -435,6 +490,10 @@ def plan(
     """
     if config is None:
         config = PlanConfig()
+    if order is not None and config.objective == "pareto":
+        raise ValueError("plan: a pre-computed order cannot be combined "
+                         "with objective='pareto' (the frontier chooses "
+                         "the order)")
     pc = _resolve_cache(cache)
     cache_opts = ("serenity.plan", config.cache_key())
     if order is not None:
@@ -468,10 +527,31 @@ def plan(
             if rewrite_report is not None:
                 rewrite_report.n_inplace = n_inplace
 
+    steps: "tuple[tuple[int, ...], ...] | None" = None
+    frontier: ParetoFrontier | None = None
     if order is not None:
         ores = OrderResult(order=order, exact=False, n_states_expanded=0,
                            n_signatures=0, segments=[], seg_cache_hits=0,
                            budget_stats=[])
+    elif config.objective == "pareto":
+        # direct two-objective DP on the whole (rewritten) graph: the
+        # frontier's serial endpoint is seeded from the exact serial DP, so
+        # it equals the hierarchical pipeline's peak even if the Pareto
+        # level search gets beam-trimmed (DESIGN.md §12)
+        frontier = pareto_schedule(
+            g,
+            max_width=config.max_width,
+            latency_budget=config.latency_budget,
+            budget=config.tau,
+            state_quota=config.state_quota,
+            on_quota="beam" if config.on_timeout == "adaptive" else "raise",
+        )
+        point = frontier.best_under(config.latency_budget)
+        steps = point.steps
+        ores = OrderResult(order=point.order, exact=frontier.exact,
+                           n_states_expanded=frontier.n_states_expanded,
+                           n_signatures=frontier.n_signatures, segments=[],
+                           seg_cache_hits=0, budget_stats=[])
     elif config.scheduler == "kahn":
         ores = OrderResult(order=kahn_schedule(g).order, exact=False,
                            n_states_expanded=0, n_signatures=0, segments=[],
@@ -479,18 +559,28 @@ def plan(
     else:
         ores = _order_graph(g, config, pc)
 
-    sim = simulate_schedule(g, ores.order)
+    if steps is not None:
+        sim = simulate_steps(g, steps)
+    else:
+        sim = simulate_schedule(g, ores.order)
     if config.resident:
         arena = plan_arena_regions(g, ores.order,
-                                   resident=list(config.resident))
+                                   resident=list(config.resident),
+                                   steps=steps)
     elif config.arena_policy == "best":
-        arena = plan_arena_best(g, ores.order)
+        arena = plan_arena_best(g, ores.order, steps=steps)
     else:
-        arena = plan_arena(g, ores.order, policy=config.arena_policy)
+        arena = plan_arena(g, ores.order, policy=config.arena_policy,
+                           steps=steps)
     baselines: dict[str, int] = {}
     if config.compute_baselines:
         for name, fn in BASELINES.items():
             baselines[name] = fn(g).peak_bytes
+    costs = node_costs(g)
+    if steps is not None:
+        makespan = sum(max(costs[u] for u in st) for st in steps if st)
+    else:
+        makespan = sum(costs[u] for u in ores.order)
     result = Plan(
         graph=g,
         order=ores.order,
@@ -506,6 +596,9 @@ def plan(
         seg_cache_hits=ores.seg_cache_hits,
         config=config,
         recompute_report=recompute_report,
+        steps=steps,
+        makespan=makespan,
+        schedule_frontier=frontier,
     )
     if pc is not None:
         pc.put(g_in, cache_opts, result)
@@ -603,6 +696,7 @@ def execute(
     jit: bool = False,
     strict: bool = True,
     fuse: bool = False,
+    steps: "Sequence[Sequence[int]] | None" = None,
     config: PlanConfig | None = None,
     cache: "PlanCache | bool | None" = True,
     **schedule_kw,
@@ -630,6 +724,9 @@ def execute(
         donated float32 buffer, whole-program jit, the
         realized-vs-planned assertion, and fused alias-chain execution
         (DESIGN.md §11).
+      steps: width-W time slots the supplied ``plan`` was packed with
+        (``Plan.steps`` of a pareto plan); ignored when planning here —
+        the fresh plan's own steps are used.
       config / cache: forwarded to :func:`plan` when planning here.
       **schedule_kw: legacy ``schedule``-style kwargs (deprecation shim,
         warns once); mapped onto ``config`` — passing both is an error.
@@ -652,9 +749,10 @@ def execute(
             config = _legacy_schedule_config(**schedule_kw)
         res = _plan(g, config, cache=cache)
         g, order, plan = res.graph, res.order, res.arena
+        steps = res.steps  # pareto plans carry their width-W slots
     elif order is None:
         raise ExecutorError("execute: `order` is required when `plan` is "
                             "supplied (the schedule the plan was built from)")
     return execute_plan(g, order, plan, inputs, impl=impl,
                         interpret=interpret, arena=arena, jit=jit,
-                        strict=strict, fuse=fuse)
+                        strict=strict, fuse=fuse, steps=steps)

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import Graph, PlanConfig, plan
+from repro.core import Graph, PlanConfig, pin_transients, plan
 from repro.core.allocator import resident_bytes
 from repro.core.executor import pack_buffers, unpack_buffer
 from repro.core.plancache import default_cache
@@ -59,6 +59,14 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
 from repro.models.zoo import build_model
 from repro.runtime.pool import ArenaPool, PoolError
+
+#: Pareto request classes decode admission serves (DESIGN.md §12): a
+#: ``memory`` request leases the tight regions plan (transients time-share
+#: their bytes — maximum co-residency under the budget), a ``latency``
+#: request the same layout with every transient pinned always-live
+#: (:func:`~repro.core.allocator.pin_transients`) — it pays more bytes so
+#: its step never waits on buffer reuse inside a shared arena.
+REQUEST_CLASSES = ("memory", "latency")
 
 
 def _align4(n: int) -> int:
@@ -193,6 +201,8 @@ class Request:
     rid: int
     prompt: np.ndarray               # (P,) int32 token ids
     max_new: int
+    klass: str | None = None         # Pareto request class (REQUEST_CLASSES;
+                                     # None = classless base-plan admission)
     submit_s: float = 0.0
     admit_s: float = 0.0
     done_s: float = 0.0
@@ -248,6 +258,14 @@ class DecodeServer:
         # key (no per-request graph re-fingerprinting)
         self._key, _ = pool.plan(self._plan["graph"], self._plan["order"],
                                  plan=self._plan["plan"])
+        # the decode state's Pareto request classes (DESIGN.md §12): both
+        # keep the regions layout (identical offsets, so pack/unpack and
+        # the jitted steps are class-agnostic) but charge admission
+        # differently — 'latency' pins its transients always-live
+        pool.register_pareto(self._key, {
+            "memory": self._plan["plan"],
+            "latency": pin_transients(self._plan["plan"]),
+        })
         self._tickets: dict[int, Request] = {}
         self.active: list[Request] = []
         self.done: list[Request] = []
@@ -263,8 +281,11 @@ class DecodeServer:
         req.submit_s = time.perf_counter()
         # the pool holds *our* regions plan under self._key, so lease
         # buffers, admission accounting and the state pack/unpack all
-        # address one set of offsets
-        ticket = self.pool.submit(self._plan["graph"], key=self._key)
+        # address one set of offsets; a classed request leases its
+        # registered Pareto-point plan instead (same offsets, different
+        # admission charge)
+        ticket = self.pool.submit(self._plan["graph"], key=self._key,
+                                  klass=req.klass)
         if ticket.rejected:
             req.rejected = True
             req.done_s = req.submit_s
@@ -443,6 +464,7 @@ class DecodeServer:
             "arena_bytes": self._plan["arena_bytes"],
             "persistent_bytes": self._plan["persistent_bytes"],
             "transient_bytes": self._plan["transient_bytes"],
+            "admitted_by_class": dict(st.admitted_by_class),
         }
 
 
@@ -471,14 +493,25 @@ def run_server(model, params, requests, *, smax: int, budget_bytes: int,
 
 
 def synth_requests(n: int, prompt_len: int, gen: int, vocab: int,
-                   seed: int = 0) -> list[Request]:
+                   seed: int = 0,
+                   latency_frac: float = 0.0) -> list[Request]:
+    """Synthesize ``n`` requests; ``latency_frac`` > 0 tags that fraction
+    as the ``latency`` Pareto class and the rest ``memory`` (0.0 keeps
+    every request classless — base-plan admission, the pre-§12 behavior).
+    """
+    if not 0.0 <= latency_frac <= 1.0:
+        raise ValueError(f"latency_frac must be in [0, 1], got {latency_frac}")
     rng = np.random.default_rng(seed)
-    return [
-        Request(rid=i,
-                prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
-                max_new=gen)
-        for i in range(n)
-    ]
+    n_lat = round(n * latency_frac)
+    reqs = []
+    for i in range(n):
+        klass = None if latency_frac == 0.0 else \
+            ("latency" if i < n_lat else "memory")
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
+            max_new=gen, klass=klass))
+    return reqs
 
 
 def main() -> None:
@@ -496,6 +529,10 @@ def main() -> None:
                     help="naive one-arena-per-request admission baseline")
     ap.add_argument("--warm", type=int, default=2,
                     help="arenas to pre-plan/pre-allocate at startup")
+    ap.add_argument("--latency-frac", type=float, default=0.0,
+                    help="fraction of requests admitted as the "
+                         "latency-sensitive Pareto class (pinned "
+                         "transients); the rest memory-starved")
     ap.add_argument("--mesh", choices=("none", "single", "multi"),
                     default="none")
     ap.add_argument("--seed", type=int, default=0)
@@ -525,7 +562,8 @@ def main() -> None:
 
     params = model.init(jax.random.PRNGKey(args.seed))
     reqs = synth_requests(args.requests, args.prompt_len, args.gen,
-                          cfg.vocab_size, args.seed + 1)
+                          cfg.vocab_size, args.seed + 1,
+                          latency_frac=args.latency_frac)
     metrics = run_server(model, params, reqs, smax=smax,
                          budget_bytes=budget, step_mode=args.step_mode,
                          pooled=not args.no_pool, rules=rules,
@@ -540,6 +578,10 @@ def main() -> None:
           f"{metrics['budget_bytes']/1e6:.2f} MB budget "
           f"(peak reserved {metrics['peak_reserved_bytes']/1e6:.2f} MB; "
           f"warm hits {metrics['warm_hits']})")
+    if metrics["admitted_by_class"]:
+        by = metrics["admitted_by_class"]
+        print("[serve] admitted by Pareto class: "
+              + ", ".join(f"{k}={by[k]}" for k in sorted(by)))
 
 
 if __name__ == "__main__":

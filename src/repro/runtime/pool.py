@@ -15,7 +15,13 @@ admission control (DESIGN.md §9):
     standalone arenas;
   * a request that fits is **admitted**, one that would overflow is
     **queued** (FIFO, head-of-line order preserved), and one whose own
-    arena can never fit the budget is **rejected** outright.
+    arena can never fit the budget is **rejected** outright;
+  * a key may carry several *request-class* plans — distinct points of the
+    latency x memory Pareto frontier (DESIGN.md §12) registered via
+    ``register_pareto`` — and ``submit(..., klass=...)`` leases the class's
+    plan: a memory-starved request takes the min-peak point, a
+    latency-sensitive one the min-makespan point with its transients
+    pinned (no buffer-reuse hazards between co-issued ops).
 
 The pool is a synchronous scheduler-side object: one serving loop drives
 ``submit`` / ``poll`` / ``release``; it is not thread-safe by design.
@@ -31,6 +37,8 @@ from typing import Callable, Sequence
 from repro.core.allocator import (
     ArenaPlan,
     SharedArenaPlan,
+    pin_transients,
+    plan_arena_best,
     plan_shared_arena,
     resident_bytes,
 )
@@ -47,6 +55,33 @@ _LEASE_CONFIG = PlanConfig(rewrite=False, inplace=False,
 
 class PoolError(RuntimeError):
     pass
+
+
+def pareto_class_plans(graph, frontier) -> dict[str, ArenaPlan]:
+    """Arena plans for the two canonical request classes of a frontier.
+
+    Maps a :class:`~repro.core.scheduler.ParetoFrontier` (DESIGN.md §12)
+    onto the admission classes the pool serves:
+
+      ``'memory'``   the min-peak point's arena — the smallest footprint
+                     the schedule space offers, for memory-starved
+                     admission (maximum co-residency).
+      ``'latency'``  the min-makespan point's arena with every transient
+                     pinned (:func:`~repro.core.allocator.pin_transients`)
+                     — a latency-sensitive request trades bytes for a
+                     layout with no buffer-reuse hazards to wait on.
+
+    Both plans are packed with the point's co-issue steps, so the planned
+    peak is exactly the frontier point's ``peak_bytes``.  Register the
+    result with :meth:`ArenaPool.register_pareto`.
+    """
+    if not frontier.points:
+        raise PoolError("cannot build class plans from an empty frontier")
+    mem_pt = frontier.min_peak
+    lat_pt = frontier.min_makespan
+    mem_plan = plan_arena_best(graph, mem_pt.order, steps=mem_pt.steps)
+    lat_plan = plan_arena_best(graph, lat_pt.order, steps=lat_pt.steps)
+    return {"memory": mem_plan, "latency": pin_transients(lat_plan)}
 
 
 class LeaseError(PoolError):
@@ -67,6 +102,9 @@ class PoolStats:
     peak_reserved_bytes: int = 0
     max_concurrent: int = 0
     peak_queued: int = 0
+    # admissions per request class (DESIGN.md §12); classless admissions
+    # are not counted here
+    admitted_by_class: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -100,6 +138,7 @@ class Ticket:
     lease: Lease | None = None
     rejected: bool = False
     reason: str = ""
+    klass: str | None = None     # Pareto request class, when submitted with one
 
     @property
     def admitted(self) -> bool:
@@ -158,6 +197,7 @@ class ArenaPool:
             collections.deque()
         self._admitted_since_poll: list[Ticket] = []
         self._scratch_bytes = 0
+        self._pareto: dict[str, dict[str, ArenaPlan]] = {}
         self.stats = PoolStats()
 
     # -- planning ----------------------------------------------------------
@@ -194,6 +234,33 @@ class ArenaPool:
             self._plans.popitem(last=False)
         return key, plan
 
+    def register_pareto(self, key: str,
+                        plans_by_class: dict[str, ArenaPlan]) -> None:
+        """Register per-request-class Pareto plans under ``key``.
+
+        ``plans_by_class`` maps class names (e.g. ``'latency'``,
+        ``'memory'`` — see :func:`pareto_class_plans`) to the arena plans
+        of the frontier points those classes should lease.  A later
+        ``submit(..., klass=k)`` for ``key`` leases ``plans_by_class[k]``,
+        cached (and warm-buffered) under the derived key ``f"{key}@{k}"``
+        so differently sized class arenas never share warm buffers.
+        """
+        if not plans_by_class:
+            raise PoolError(f"register_pareto({key!r}): no class plans")
+        for klass, plan in plans_by_class.items():
+            if not klass or not isinstance(klass, str):
+                raise PoolError(
+                    f"register_pareto({key!r}): bad class name {klass!r}")
+            if not isinstance(plan, ArenaPlan):
+                raise PoolError(
+                    f"register_pareto({key!r}): class {klass!r} plan is "
+                    f"{type(plan).__name__}, not ArenaPlan")
+        self._pareto[key] = dict(plans_by_class)
+
+    def pareto_classes(self, key: str) -> tuple[str, ...]:
+        """Class names registered for ``key`` ('' when none)."""
+        return tuple(self._pareto.get(key, ()))
+
     def warm(self, graph: Graph, order: Sequence[int] | None = None,
              *, key: str | None = None, plan: ArenaPlan | None = None) -> str:
         """Pre-plan ``graph`` and pre-allocate a warm buffer for its shape.
@@ -211,16 +278,40 @@ class ArenaPool:
 
     def submit(self, graph: Graph, order: Sequence[int] | None = None,
                *, key: str | None = None,
-               plan: ArenaPlan | None = None) -> Ticket:
+               plan: ArenaPlan | None = None,
+               klass: str | None = None) -> Ticket:
         """Request a lease: admit now, queue, or reject outright.
 
         Returns a :class:`Ticket`; ``ticket.lease`` is set immediately when
         the request fits the remaining budget and nothing is queued ahead
         of it, ``ticket.rejected`` when the plan alone can never fit.
+
+        ``klass`` selects a request class previously registered for the
+        key via :meth:`register_pareto` — the lease then covers that
+        class's Pareto-point plan instead of the base plan.  Submitting an
+        unregistered class (or a class for an unregistered key) raises
+        :class:`PoolError` rather than silently downgrading the request.
         """
         self.stats.submitted += 1
+        if klass is not None:
+            if plan is not None:
+                raise PoolError("submit: pass either plan= or klass=, "
+                                "not both")
+            if key is None:
+                key = labeled_fingerprint(graph)
+            by_class = self._pareto.get(key)
+            if by_class is None:
+                raise PoolError(
+                    f"submit: no Pareto classes registered for key "
+                    f"{key!r} (call register_pareto first)")
+            if klass not in by_class:
+                raise PoolError(
+                    f"submit: unknown request class {klass!r} for key "
+                    f"{key!r}; registered: {sorted(by_class)}")
+            plan = by_class[klass]
+            key = f"{key}@{klass}"
         key, plan = self.plan(graph, order, key=key, plan=plan)
-        ticket = Ticket(rid=next(self._rid), key=key)
+        ticket = Ticket(rid=next(self._rid), key=key, klass=klass)
         # reject iff the request could not be admitted even into an EMPTY
         # pool — evaluated with the same accounting `_fits` uses, so a
         # queued request is always eventually admissible (no queue deadlock)
@@ -354,6 +445,9 @@ class ArenaPool:
         ticket.lease = lease
         self._admitted_since_poll.append(ticket)
         self.stats.admitted += 1
+        if ticket.klass is not None:
+            self.stats.admitted_by_class[ticket.klass] = \
+                self.stats.admitted_by_class.get(ticket.klass, 0) + 1
         self.stats.max_concurrent = max(self.stats.max_concurrent,
                                         len(self._members))
         self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,

@@ -1,0 +1,206 @@
+"""Tests for the benchmark-baseline differ (benchmarks/diff_baseline.py).
+
+The differ had no tests of its own before the frontier rows landed; these
+pin its three comparison regimes — exact deterministic metrics, unit-aware
+duration tripwires, and the structural per-point frontier diff (DESIGN.md
+§12) — against hand-built baseline/smoke JSON pairs, by counting and
+matching the warnings it prints.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_DIFFER = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "diff_baseline.py")
+spec = importlib.util.spec_from_file_location("diff_baseline", _DIFFER)
+diff_baseline = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(diff_baseline)
+
+
+def _run(capsys, base_rows, new_rows, tmp_path) -> list[str]:
+    """Drive diff_baseline.main() over two row dicts; return output lines."""
+    bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
+    bp.write_text(json.dumps(
+        {"rows": [{"name": k, "us_per_call": 0.0, "derived": v}
+                  for k, v in base_rows.items()]}))
+    np_.write_text(json.dumps(
+        {"rows": [{"name": k, "us_per_call": 0.0, "derived": v}
+                  for k, v in new_rows.items()]}))
+    import sys
+    old = sys.argv
+    sys.argv = ["diff_baseline.py", str(bp), str(np_)]
+    try:
+        diff_baseline.main()
+    finally:
+        sys.argv = old
+    return capsys.readouterr().out.splitlines()
+
+
+def _warnings(lines) -> list[str]:
+    return [ln for ln in lines if ln.startswith("::warning::")]
+
+
+# ---------------------------------------------------------------------------
+# pre-existing regimes (previously untested)
+# ---------------------------------------------------------------------------
+
+
+def test_identical_rows_no_warnings(capsys, tmp_path):
+    rows = {"peak_memory/x": "peak_bytes=100;policy=first_fit;wall_s=1.0"}
+    out = _run(capsys, rows, dict(rows), tmp_path)
+    assert not _warnings(out)
+
+
+def test_deterministic_drift_warns(capsys, tmp_path):
+    out = _run(capsys,
+               {"peak_memory/x": "peak_bytes=100"},
+               {"peak_memory/x": "peak_bytes=101"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "peak_bytes drifted 100 -> 101" in w[0]
+
+
+def test_timing_drift_exempt_but_2x_tripwired(capsys, tmp_path):
+    # small drift in a duration: silent; >2x above the floor: warns
+    out = _run(capsys,
+               {"scheduling_time/x": "cold_ms=100.0"},
+               {"scheduling_time/x": "cold_ms=120.0"}, tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys,
+               {"scheduling_time/x": "cold_ms=100.0"},
+               {"scheduling_time/x": "cold_ms=250.0"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "regressed >2x" in w[0]
+
+
+def test_disappeared_metric_and_row_warn(capsys, tmp_path):
+    out = _run(capsys,
+               {"a/x": "peak_bytes=1;n=2", "a/y": "peak_bytes=3"},
+               {"a/x": "peak_bytes=1"}, tmp_path)
+    w = _warnings(out)
+    assert any("metric n disappeared" in x for x in w)
+    assert any("row disappeared" in x for x in w)
+    # a new metric/row is a note, never a warning
+    out = _run(capsys,
+               {"a/x": "peak_bytes=1"},
+               {"a/x": "peak_bytes=1;extra=7", "a/z": "peak_bytes=9"},
+               tmp_path)
+    assert not _warnings(out)
+    assert any("new metric" in ln for ln in out)
+    assert any("new row" in ln for ln in out)
+
+
+# ---------------------------------------------------------------------------
+# structural frontier diffing (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def test_identical_frontier_no_warnings(capsys, tmp_path):
+    rows = {"peak_memory/frontier_c":
+            "frontier=100:500|200:400|300:300;n_points=3"}
+    out = _run(capsys, rows, dict(rows), tmp_path)
+    assert not _warnings(out)
+
+
+def test_frontier_peak_drift_warns_per_point(capsys, tmp_path):
+    out = _run(capsys,
+               {"peak_memory/frontier_c": "frontier=100:500|200:400"},
+               {"peak_memory/frontier_c": "frontier=100:500|200:444"},
+               tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1
+    assert "point 1 peak drifted 400 -> 444" in w[0]
+
+
+def test_frontier_surrogate_latency_exact_diffs(capsys, tmp_path):
+    # surrogate makespans are deterministic: any drift warns
+    out = _run(capsys,
+               {"peak_memory/frontier_c": "frontier=100:500"},
+               {"peak_memory/frontier_c": "frontier=101:500"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "point 0 latency drifted 100 -> 101" in w[0]
+
+
+def test_frontier_measured_latency_noise_floored(capsys, tmp_path):
+    # measured 'ms' latencies: small drift silent, >2x above floor warns,
+    # peaks in the same points still exact-diff
+    out = _run(capsys,
+               {"serving/pareto_classes": "frontier=100.0ms:500|80.0ms:400"},
+               {"serving/pareto_classes": "frontier=130.0ms:500|90.0ms:400"},
+               tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys,
+               {"serving/pareto_classes": "frontier=100.0ms:500|80.0ms:400"},
+               {"serving/pareto_classes": "frontier=250.0ms:500|90.0ms:444"},
+               tmp_path)
+    w = _warnings(out)
+    assert len(w) == 2
+    assert any("point 0 latency regressed >2x" in x for x in w)
+    assert any("point 1 peak drifted 400 -> 444" in x for x in w)
+
+
+def test_frontier_below_noise_floor_never_warns(capsys, tmp_path):
+    # 10x regression, but under the 50ms floor: jitter, not signal
+    out = _run(capsys,
+               {"serving/x": "frontier=1.0ms:500"},
+               {"serving/x": "frontier=10.0ms:500"}, tmp_path)
+    assert not _warnings(out)
+
+
+def test_frontier_shape_change_warns(capsys, tmp_path):
+    out = _run(capsys,
+               {"peak_memory/frontier_c": "frontier=100:500|200:400"},
+               {"peak_memory/frontier_c": "frontier=100:500"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "changed shape: 2 -> 1 points" in w[0]
+
+
+def test_frontier_kind_change_warns(capsys, tmp_path):
+    # a surrogate latency becoming a measured one is a schema change
+    out = _run(capsys,
+               {"a/frontier_c": "frontier=100:500"},
+               {"a/frontier_c": "frontier=100.0ms:500"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "changed kind" in w[0]
+
+
+def test_recompute_frontier_ratio_points_exact(capsys, tmp_path):
+    # the PR 6 recompute rows use 'x'-suffixed FLOPs ratios: deterministic
+    rows = {"peak_memory/pareto_r": "frontier=1.000x:500|1.240x:400"}
+    out = _run(capsys, rows, dict(rows), tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys, rows,
+               {"peak_memory/pareto_r": "frontier=1.000x:500|1.300x:400"},
+               tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "latency drifted 1.240x -> 1.300x" in w[0]
+
+
+def test_malformed_frontier_falls_back_to_opaque(capsys, tmp_path):
+    # not lat:peak shaped: compared as one opaque value (old behavior)
+    out = _run(capsys,
+               {"a/frontier_c": "frontier=abc"},
+               {"a/frontier_c": "frontier=abd"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "drifted abc -> abd" in w[0]
+    out = _run(capsys,
+               {"a/frontier_c": "frontier=abc"},
+               {"a/frontier_c": "frontier=abc"}, tmp_path)
+    assert not _warnings(out)
+
+
+def test_real_baseline_self_diff_is_clean(capsys, tmp_path):
+    """The committed baseline diffed against itself must be silent."""
+    base = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_baseline.json")
+    if not os.path.exists(base):
+        pytest.skip("no committed baseline")
+    with open(base) as f:
+        rows = {r["name"]: r["derived"]
+                for r in json.load(f).get("rows", [])}
+    out = _run(capsys, rows, dict(rows), tmp_path)
+    assert not _warnings(out)

@@ -21,7 +21,15 @@ and cross-checks every redundant path against every other:
     and force-expanded clone graphs go through the same agreement checks
     (DP == brute-force oracle on small graphs, arena executor bit-equal
     to the reference), and an expanded graph's outputs must be bit-equal
-    to the *unexpanded* graph's.
+    to the *unexpanded* graph's;
+  * the latency x memory Pareto frontier (PR 8, DESIGN.md §12): on every
+    corpus variant small enough for the oracle (<= 10 nodes) the DP
+    frontier must equal the independent ILP / suffix-enumeration oracle
+    exactly — no dominated, missing or extra points — and on every seed a
+    sampled non-serial frontier point is executed against a step-packed
+    arena with realized == planned asserted and outputs bit-equal to the
+    reference.  Tier-1 runs the oracle's solver-free fallback; the CI
+    ``ilp`` matrix job re-runs the same frontiers through pulp/CBC.
 
 A fixed 50-seed corpus runs in tier-1 under a wall-clock cap;
 hypothesis-driven variants (random seeds, deeper graphs) ride behind
@@ -41,12 +49,15 @@ from repro.core import (
     brute_force_schedule,
     dp_schedule,
     execute_plan,
+    oracle_frontier,
+    pareto_schedule,
     plan_arena_best,
     plan_shared_arena,
     rematerialize,
     rewrite_graph,
     run_reference,
     simulate_schedule,
+    simulate_steps,
 )
 from repro.core.rewriter import RECOMPUTE_EXCLUDED_OPS, _clone_out
 
@@ -348,6 +359,111 @@ def test_shared_arena_differential(seed, engines):
         for name, val in ref.items():
             np.testing.assert_array_equal(np.asarray(ex.outputs[name]),
                                           np.asarray(val))
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier differential: DP vs independent oracle + step executor
+# ---------------------------------------------------------------------------
+
+ORACLE_MAX = 10          # oracle enumeration bound (node count)
+PARETO_WIDTH = 2
+_pareto_oracle_hits: list[bool] = []
+_pareto_exec_hits: list[bool] = []
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_pareto_frontier_corpus(seed):
+    """Frontier invariants + oracle agreement + step-executor realization.
+
+    Every corpus variant: the latency-unconstrained endpoint must be the
+    exact serial DP peak, and every frontier point must replay through the
+    step-model simulator.  Variants small enough for the oracle
+    (<= ORACLE_MAX nodes) must match the independent oracle frontier
+    *exactly* — no dominated, missing or extra points (tier-1 gets the
+    solver-free suffix-enumeration backend; the CI ``ilp`` job re-checks
+    through pulp/CBC).  Wherever the frontier has a genuinely concurrent
+    point, its min-makespan point is executed against a step-packed arena:
+    realized == planned, outputs bit-equal to the reference.
+    """
+    g = random_pipeline_graph(seed)
+    ran_oracle = ran_exec = False
+    for tag, variant in _variants(g):
+        front = pareto_schedule(variant, max_width=PARETO_WIDTH)
+        serial = dp_schedule(variant)
+        assert front.min_peak.peak_bytes == serial.peak_bytes, (
+            f"{variant.name}/{tag}: frontier endpoint "
+            f"{front.min_peak.peak_bytes} != serial DP peak "
+            f"{serial.peak_bytes}")
+        for pt in front.points:
+            sim = simulate_steps(variant, pt.steps)
+            assert sim.peak_bytes == pt.peak_bytes, (
+                f"{variant.name}/{tag}: point ({pt.makespan}, "
+                f"{pt.peak_bytes}) does not replay through simulate_steps")
+        if len(variant) <= ORACLE_MAX:
+            want = oracle_frontier(variant, max_width=PARETO_WIDTH)
+            assert front.pairs() == want, (
+                f"{variant.name}/{tag}: DP frontier {front.pairs()} != "
+                f"oracle frontier {want}")
+            ran_oracle = True
+        pt = front.min_makespan
+        if pt.width > 1:
+            plan = plan_arena_best(variant, pt.order, steps=pt.steps)
+            # an alias chain occupies one allocation at the chain's final
+            # size for its whole lifetime, so the arena peak may exceed the
+            # tensor-level step-model peak on rewritten variants; alias-free
+            # graphs must match it exactly
+            assert plan.peak_bytes >= pt.peak_bytes
+            if not any(nd.alias_preds for nd in variant.nodes):
+                assert plan.peak_bytes == pt.peak_bytes
+            ex = execute_plan(variant, pt.order, plan, inputs=None,
+                              steps=pt.steps, strict=True)
+            assert ex.realized_peak_bytes == plan.peak_bytes
+            assert ex.realized_arena_bytes == plan.arena_bytes
+            ref = run_reference(variant)
+            for name, val in ref.items():
+                np.testing.assert_array_equal(
+                    np.asarray(ex.outputs[name]), np.asarray(val),
+                    err_msg=f"{variant.name}/{tag}: step-packed output "
+                            f"{name!r} diverges from the reference")
+            ran_exec = True
+    _pareto_oracle_hits.append(ran_oracle)
+    _pareto_exec_hits.append(ran_exec)
+
+
+def test_pareto_corpus_coverage():
+    """The fixed corpus must actually exercise both differential legs."""
+    assert len(_pareto_oracle_hits) in (0, N_SEEDS)
+    if _pareto_oracle_hits:
+        n_oracle = sum(_pareto_oracle_hits)
+        n_exec = sum(_pareto_exec_hits)
+        assert n_oracle >= 10, (
+            f"only {n_oracle} corpus seeds were oracle-sized")
+        assert n_exec >= 35, (
+            f"only {n_exec} corpus seeds executed a non-serial point")
+
+
+def test_ilp_frontier_matches_fallback_and_planner():
+    """pulp/CBC ILP == suffix-enumeration fallback == planner frontier.
+
+    Runs only with the ``ilp`` optional extra installed (the CI matrix job);
+    skips cleanly everywhere else so tier-1 stays solver-free.
+    """
+    pytest.importorskip("pulp")
+    n = 0
+    for seed in range(N_SEEDS):
+        g = random_pipeline_graph(seed, max_nodes=8)
+        if len(g) > 8:
+            continue
+        for w in (2, 3):
+            ilp = oracle_frontier(g, max_width=w, solver="pulp")
+            fb = oracle_frontier(g, max_width=w, solver="fallback")
+            assert ilp == fb, (g.name, w, ilp, fb)
+            assert pareto_schedule(g, max_width=w).pairs() == ilp, (
+                g.name, w)
+        n += 1
+        if n >= 5:
+            break
+    assert n >= 3, f"only {n} corpus graphs were ILP-sized"
 
 
 # ---------------------------------------------------------------------------

@@ -260,3 +260,92 @@ def test_get_canonical_returns_isomorph_payload():
     assert pc.get_canonical(g, ("opts",)) is None
     # different options stay separate
     assert pc.get_canonical(g2, ("other",)) is None
+
+
+# -- schema bump: pareto configs can never alias pre-bump entries (§12) ------
+
+
+def _prebump_key(pc: PlanCache, g: Graph, config) -> tuple[str, str, str]:
+    """The cache key a pre-PR-8 build would have used for this config.
+
+    Pre-bump code ran SCHEMA_VERSION 5 and a ``cache_key()`` without the
+    pareto fields (objective/max_width/latency_budget); reconstructing that
+    key lets the tests prove the current keyspace is disjoint from it.
+    """
+    from repro.core import plancache as pcm
+
+    legacy = tuple(kv for kv in config.cache_key()
+                   if kv[0] not in ("objective", "max_width",
+                                    "latency_budget"))
+    old = pcm.SCHEMA_VERSION
+    pcm.SCHEMA_VERSION = 5
+    try:
+        return pc.key_for(g, ("serenity.plan", legacy))
+    finally:
+        pcm.SCHEMA_VERSION = old
+
+
+def test_schema_version_bumped_for_pareto():
+    from repro.core.plancache import SCHEMA_VERSION
+    from repro.core.serenity import PlanConfig
+
+    # reverting the bump would let schema-5 pickles (no steps/makespan/
+    # frontier fields) poison pareto lookups
+    assert SCHEMA_VERSION >= 6
+    names = {k for k, _ in PlanConfig().cache_key()}
+    assert {"objective", "max_width", "latency_budget"} <= names
+
+
+def test_options_key_depends_on_schema_version(monkeypatch):
+    from repro.core import plancache as pcm
+
+    k_now = pcm._options_key(("serenity.plan",))
+    monkeypatch.setattr(pcm, "SCHEMA_VERSION", 5)
+    assert pcm._options_key(("serenity.plan",)) != k_now
+
+
+def test_pareto_config_never_aliases_prebump_entry():
+    """A stale pre-bump entry must be unreachable from every new config.
+
+    Covers both halves of the bump: the SCHEMA_VERSION fold (same options
+    tuple, older code) and the cache_key shape change (new (name, value)
+    pairs).  The poison payload is a sentinel that would crash plan() if a
+    lookup ever returned it.
+    """
+    from repro.core import PlanConfig, plan
+
+    g = randwire_graph(seed=3, n=12)
+    pc = PlanCache()
+    configs = [
+        PlanConfig(),
+        PlanConfig(objective="pareto", max_width=2),
+        PlanConfig(objective="pareto", max_width=2,
+                   latency_budget=10 ** 12),
+    ]
+    poison = object()
+    for cfg in configs:
+        stale = _prebump_key(pc, g, cfg)
+        with pc._lock:
+            pc._mem_put(stale, poison)
+        assert pc.key_for(g, ("serenity.plan", cfg.cache_key())) != stale
+    for cfg in configs:
+        res = plan(g, cfg, cache=pc)
+        assert res is not poison
+        assert g.is_topological(res.order)
+
+
+def test_pareto_and_peak_plans_do_not_alias():
+    """Same graph, same cache: the two objectives key separately."""
+    from repro.core import PlanConfig, plan
+
+    g = randwire_graph(seed=3, n=12)
+    pc = PlanCache()
+    r_peak = plan(g, PlanConfig(), cache=pc)
+    r_par = plan(g, PlanConfig(objective="pareto", max_width=2), cache=pc)
+    assert r_par is not r_peak
+    assert r_peak.schedule_frontier is None and r_peak.steps is None
+    assert r_par.schedule_frontier is not None
+    # repeats are zero-copy hits on their own entries
+    assert plan(g, PlanConfig(), cache=pc) is r_peak
+    assert plan(g, PlanConfig(objective="pareto", max_width=2),
+                cache=pc) is r_par
