@@ -24,6 +24,13 @@ Two sections (DESIGN.md §9):
   stream whose per-class measured p50 and per-class lease bytes land as a
   measured two-point ``frontier=`` row (``<p50>ms:<bytes>``).
 
+* **Degraded mode** (DESIGN.md §13) — the mixed-class stream re-run under
+  a scripted mid-run 2x budget shrink (``FaultSpec("budget_shrink")``):
+  the ``serving/degraded_shrink`` row records preemptions, spilled bytes,
+  re-admissions, the degradation-ladder rung counts and the p99 under
+  pressure; the run asserts no request is lost and the realized arena
+  never exceeds the instantaneous budget.
+
 Rows land in the smoke JSON / ``BENCH_baseline.json``;
 ``diff_baseline.py`` treats the latency and peak-bytes columns with the
 same >2x unit-aware tripwire as the scheduling-time rows, and diffs
@@ -232,12 +239,59 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         f"budget_bytes={cm['budget_bytes']}",
     ))
 
+    # degraded mode (DESIGN.md §13): the same mixed-class stream with a
+    # scripted mid-run 2x budget shrink.  The server walks the degradation
+    # ladder — preempt-and-downgrade, exact vmap buckets, priority
+    # preemption — instead of failing; the row records how much spilled,
+    # how many came back, and what the shrink cost in tail latency.
+    from repro.runtime import ChaosController, FaultPlan, FaultSpec
+
+    deg = synth_requests(n_req, prompt, gen, cfg.vocab_size, seed=11,
+                         latency_frac=0.5, priorities=(0, 1))
+    chaos = ChaosController(FaultPlan([
+        FaultSpec("budget_shrink", tick=3, factor=0.5)]))
+    t0 = time.perf_counter()
+    # start from 2x the pooled budget so the halving lands back at it:
+    # every admitted request stays representable post-shrink (the smoke
+    # decode's logits transient dwarfs the KV state, so halving the tight
+    # budget itself would leave no room for even one standalone request)
+    dm = run_server(model, params, deg, smax=smax,
+                    budget_bytes=2 * budget, pooled=True, warm=2,
+                    chaos=chaos)
+    dm_wall = time.perf_counter() - t0
+    assert dm["n_served"] + dm["n_rejected"] == n_req, \
+        "degraded run lost a request (neither served nor rejected)"
+    assert dm["n_served"] == n_req, (
+        f"post-shrink budget still fits every request, so the ladder must "
+        f"carry all of them to completion (served {dm['n_served']}, "
+        f"reject codes {dm['reject_codes']})")
+    assert dm["max_over_budget_bytes"] <= 0, (
+        f"arena bytes exceeded the instantaneous budget by "
+        f"{dm['max_over_budget_bytes']} during the shrink")
+    assert dm["budget_shrinks"] >= 1
+    csv_rows.append((
+        "serving/degraded_shrink", dm_wall * 1e6,
+        f"n_served={dm['n_served']};n_rejected={dm['n_rejected']};"
+        f"n_preempted={dm['n_preempted']};spill_bytes={dm['spill_bytes']};"
+        f"n_readmitted={dm['n_readmitted']};"
+        f"p50_ms={dm['p50_ms']:.1f};p99_ms={dm['p99_ms']:.1f};"
+        f"budget_bytes={2 * budget};"
+        f"min_budget_bytes={dm['min_budget_bytes']};"
+        f"peak_reserved_bytes={dm['peak_reserved_bytes']};"
+        f"ladder_replan={dm['ladder']['replan']};"
+        f"ladder_shrink_buckets={dm['ladder']['shrink_buckets']};"
+        f"ladder_preempt={dm['ladder']['preempt']}",
+    ))
+
     return {
         "pareto_admitted_by_class": classes,
         "coresidency_sharing_ratios": ratios,
         "budget_bytes": budget,
         "naive_concurrency": naive["max_concurrent"],
         "pooled_concurrency": pooled["max_concurrent"],
+        "degraded_preemptions": dm["n_preempted"],
+        "degraded_spill_bytes": dm["spill_bytes"],
+        "degraded_p99_ms": dm["p99_ms"],
         "concurrency_gain": pooled["max_concurrent"]
         / max(naive["max_concurrent"], 1),
     }

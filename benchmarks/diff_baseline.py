@@ -62,8 +62,13 @@ _NOISE_FLOOR_EXEC = {"s": 0.0005, "ms": 0.5, "us": 500.0}
 # serving rows: latency keys eligible for the >2x duration tripwire (plain
 # `tok_per_s` etc. end in `_s` too, but are rates, not durations)
 _SERVING_LAT_KEY = re.compile(r"^(p\d+_(ms|s|us)|wall_s|latency_\w+)$")
-# serving rows: load-dependent byte watermarks — >2x threshold, not exact
-_SERVING_BYTES_KEY = re.compile(r"^peak_\w*bytes$")
+# serving rows: load-dependent byte watermarks — >2x threshold, not exact.
+# Degraded-mode rows (DESIGN.md §13) add spill_bytes / min_budget_bytes:
+# how much state the ladder preempted and how low the scripted shrink went
+# both scale with load, so they get the same unit-aware treatment instead
+# of an exact diff.
+_SERVING_BYTES_KEY = re.compile(
+    r"^(peak_\w*bytes|spill_bytes|min_budget_bytes)$")
 # Pareto frontier values: '|'-separated lat:peak points.  The latency leg
 # is one of: a unit-suffixed measured duration ("123.4ms"), a surrogate
 # FLOPs ratio ("1.240x"), or a plain surrogate makespan integer.

@@ -38,9 +38,11 @@ import dataclasses
 import hashlib
 import os
 import pickle
+import struct
 import threading
+import zlib
 from collections import OrderedDict
-from typing import Any
+from typing import Any, Callable
 
 from repro.core.graph import Graph
 
@@ -179,16 +181,47 @@ def translate_order(src: Graph, dst: Graph, order: list[int]) -> list[int] | Non
 # Bump whenever the *shape* of cached payloads changes (new plan fields,
 # different tuple layouts...): folded into every options key, so stale disk
 # entries from older code become clean misses instead of poison.
-SCHEMA_VERSION = 6   # 5: PlanConfig-keyed plans, recompute-expanded graphs
+SCHEMA_VERSION = 7   # 5: PlanConfig-keyed plans, recompute-expanded graphs
                      # 6: pareto plans (Plan.steps/makespan/schedule_frontier,
                      #    ScheduleResult.makespan/width, PlanConfig.objective/
                      #    max_width/latency_budget)
+                     # 7: CRC32-framed disk blobs (DESIGN.md §13)
 
 
 def _options_key(options: Any) -> str:
     return hashlib.sha256(
         repr((SCHEMA_VERSION, options)).encode()
     ).hexdigest()[:16]
+
+
+# Disk-blob frame (DESIGN.md §13): magic + writer schema + CRC32 of the
+# pickle payload, prepended to every on-disk entry.  Disk corruption —
+# truncated writes, garbage bytes, bit rot — is thereby *detected*
+# (``CacheStats.corrupt``) and the entry evicted, instead of being
+# silently swallowed by a bare ``pickle.loads`` except clause.  The schema
+# field catches the one corruption CRC cannot: an intact blob written by a
+# different code version landing at a current key path.
+_BLOB_MAGIC = b"RPLN"
+_BLOB_HEADER = struct.Struct("<4sII")     # magic, schema, crc32(payload)
+
+
+def frame_blob(payload: bytes) -> bytes:
+    """Wrap a pickle payload in the CRC32 disk frame."""
+    return _BLOB_HEADER.pack(_BLOB_MAGIC, SCHEMA_VERSION,
+                             zlib.crc32(payload)) + payload
+
+
+def unframe_blob(blob: bytes) -> bytes | None:
+    """Validate + strip the disk frame; ``None`` on any corruption
+    (short/truncated blob, bad magic, stale schema, CRC mismatch)."""
+    if len(blob) < _BLOB_HEADER.size:
+        return None
+    magic, schema, crc = _BLOB_HEADER.unpack_from(blob)
+    payload = blob[_BLOB_HEADER.size:]
+    if magic != _BLOB_MAGIC or schema != SCHEMA_VERSION \
+            or zlib.crc32(payload) != crc:
+        return None
+    return payload
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +235,7 @@ class CacheStats:
     misses: int = 0
     disk_hits: int = 0
     puts: int = 0
+    corrupt: int = 0     # disk entries the CRC frame rejected (and evicted)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -217,9 +251,14 @@ class PlanCache:
     ``SerenityResult``, a bare order, an arena plan...).
     """
 
-    def __init__(self, capacity: int = 256, disk_dir: str | None = None):
+    def __init__(self, capacity: int = 256, disk_dir: str | None = None,
+                 blob_hook: Callable[[bytes], bytes] | None = None):
         self.capacity = capacity
         self.disk_dir = disk_dir
+        # fault-injection seam (DESIGN.md §13): every disk blob passes
+        # through the hook before unframing, so the chaos suite can inject
+        # bit flips (ChaosController.corrupt_blob) without monkeypatching
+        self.blob_hook = blob_hook
         self.stats = CacheStats()
         self._mem: OrderedDict[tuple[str, str, str], Any] = OrderedDict()
         # canonical tier: (canonical, options) -> most recent full key, so
@@ -250,18 +289,28 @@ class PlanCache:
                 return self._mem[key]
         blob = self._disk_read(key)
         if blob is not None:
-            try:
-                payload = pickle.loads(blob)
-            except Exception:
-                # corrupt/stale entry (truncated write, older code version):
-                # drop it and recompute rather than poisoning every lookup
-                self._disk_evict(key)
-            else:
+            if self.blob_hook is not None:
+                blob = self.blob_hook(blob)
+            payload_bytes = unframe_blob(blob)
+            ok = False
+            payload = None
+            if payload_bytes is not None:
+                try:
+                    payload = pickle.loads(payload_bytes)
+                    ok = True
+                except Exception:
+                    ok = False       # CRC-valid frame, unpicklable payload
+            if ok:
                 with self._lock:
                     self._mem_put(key, payload)
                     self.stats.hits += 1
                     self.stats.disk_hits += 1
                 return payload
+            # corrupt/stale entry (truncated write, garbage bytes, older
+            # schema): count it, evict it, and fall through to a clean miss
+            with self._lock:
+                self.stats.corrupt += 1
+            self._disk_evict(key)
         with self._lock:
             self.stats.misses += 1
         return None
@@ -291,7 +340,7 @@ class PlanCache:
             self._canon[(key[0], key[1])] = key
             self.stats.puts += 1
         if self.disk_dir:
-            self._disk_write(key, pickle.dumps(payload))
+            self._disk_write(key, frame_blob(pickle.dumps(payload)))
 
     def clear(self) -> None:
         with self._lock:

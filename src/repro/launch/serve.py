@@ -58,6 +58,7 @@ from repro.launch.mesh import make_production_mesh, rules_for_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
 from repro.models.zoo import build_model
+from repro.runtime.chaos import ChaosController, TransientExecutorError
 from repro.runtime.pool import ArenaPool, PoolError
 
 #: Pareto request classes decode admission serves (DESIGN.md §12): a
@@ -203,20 +204,80 @@ class Request:
     max_new: int
     klass: str | None = None         # Pareto request class (REQUEST_CLASSES;
                                      # None = classless base-plan admission)
+    priority: int = 0                # higher = preempted later
+    tenant: str | None = None        # quota bucket (ArenaPool.tenant_quotas)
     submit_s: float = 0.0
     admit_s: float = 0.0
     done_s: float = 0.0
     tokens: list = dataclasses.field(default_factory=list)
     rejected: bool = False
+    reject_code: str = ""            # machine-readable cause (Ticket.reason_code)
+    reject_reason: str = ""
+    preemptions: int = 0             # times this request was spilled
     # runtime state while admitted
     lease: object = None
     arena: object = None             # leased uint8 buffer holding the KV state
+    spill: object = None             # SpilledLease while preempted
     t: int = 0                       # decode position (cache_len)
     last_tok: int = 0
 
     @property
     def latency_s(self) -> float:
         return self.done_s - self.submit_s
+
+
+@dataclasses.dataclass
+class TickWatchdog:
+    """Per-tick deadline + stall escalation for the serving loop.
+
+    Two concerns (DESIGN.md §13): a *deadline* — ticks slower than
+    ``step_deadline_s`` are counted (``deadline_misses``) — and a *stall* —
+    ``stall_ticks`` consecutive ticks with no observable progress (no
+    token, no admission, no release, no queue movement) escalate instead
+    of silently spinning: :meth:`observe` returns ``True`` and the server
+    raises :class:`ServingStallError` carrying the structured queue
+    diagnostics.
+    """
+
+    step_deadline_s: float | None = None
+    stall_ticks: int = 64            # > the max readmit backoff (2^5 ticks)
+    ticks: int = 0
+    deadline_misses: int = 0
+    slowest_tick_s: float = 0.0
+    stagnant_ticks: int = 0          # consecutive no-progress ticks
+    escalations: int = 0
+
+    def observe(self, dt: float, progressed: bool) -> bool:
+        """Record one tick; True when stall escalation is due."""
+        self.ticks += 1
+        self.slowest_tick_s = max(self.slowest_tick_s, dt)
+        if self.step_deadline_s is not None and dt > self.step_deadline_s:
+            self.deadline_misses += 1
+        self.stagnant_ticks = 0 if progressed else self.stagnant_ticks + 1
+        if self.stagnant_ticks >= self.stall_ticks:
+            self.escalations += 1
+            self.stagnant_ticks = 0
+            return True
+        return False
+
+    def as_dict(self) -> dict:
+        return {"ticks": self.ticks,
+                "deadline_misses": self.deadline_misses,
+                "slowest_tick_s": self.slowest_tick_s,
+                "escalations": self.escalations}
+
+
+class ServingStallError(RuntimeError):
+    """The decode loop provably cannot make progress.
+
+    ``report`` is the structured diagnostics dict: every queued request's
+    rid/class/priority/tenant and its per-request ``_fits`` failure
+    reason, plus the pool's reserved/budget bytes at escalation time.
+    """
+
+    def __init__(self, message: str, report: dict):
+        super().__init__(message)
+        self.report = report
 
 
 class DecodeServer:
@@ -233,10 +294,26 @@ class DecodeServer:
 
     Between ticks every request's KV state lives packed in its leased
     arena buffer at the planned byte offsets.
+
+    Robustness layer (DESIGN.md §13): a mid-run :meth:`set_budget` shrink
+    (or an injected admission fault) triggers the graceful-degradation
+    ladder — (1) re-plan a ``latency``-class request at its
+    memory-optimal Pareto point, (2) shrink vmap buckets to the exact
+    batch / drop padding scratch, (3) preempt the lowest-priority lease
+    (spill its packed KV state to host, re-admit later with bounded
+    retry + exponential backoff).  A :class:`TickWatchdog` escalates
+    stalls with structured queue diagnostics, and a ``chaos=``
+    :class:`~repro.runtime.chaos.ChaosController` drives deterministic
+    fault injection through the hooks.
     """
 
     def __init__(self, model, params, pool: ArenaPool, *, smax: int,
-                 rules=None, step_mode: str = "serial"):
+                 rules=None, step_mode: str = "serial",
+                 chaos: ChaosController | None = None,
+                 step_deadline_s: float | None = None,
+                 stall_ticks: int = 64,
+                 max_readmit_attempts: int = 5,
+                 max_transient_retries: int = 3):
         if step_mode not in ("serial", "vmap"):
             raise ValueError(f"unknown step_mode {step_mode!r}")
         if step_mode == "vmap" and pool.overlap == "serial":
@@ -269,6 +346,24 @@ class DecodeServer:
         self._tickets: dict[int, Request] = {}
         self.active: list[Request] = []
         self.done: list[Request] = []
+        # robustness state (DESIGN.md §13)
+        self.chaos = chaos
+        if chaos is not None:
+            pool.admission_hook = chaos.admission_should_fail
+        self.max_readmit_attempts = max_readmit_attempts
+        self.max_transient_retries = max_transient_retries
+        self.watchdog = TickWatchdog(step_deadline_s=step_deadline_s,
+                                     stall_ticks=stall_ticks)
+        self._tick = 0
+        self._spilled: list[Request] = []       # preempted, awaiting readmit
+        self._exact_buckets = False             # ladder rung 2 latch
+        self.ladder = {"replan": 0, "shrink_buckets": 0, "preempt": 0}
+        self.transient_errors = 0
+        self._transient_streak = 0
+        self._last_tick_s = 0.0
+        self.min_budget_bytes = pool.budget_bytes
+        self.max_over_budget_bytes = 0
+        self.last_stall: dict | None = None
 
     # -- admission ---------------------------------------------------------
 
@@ -285,18 +380,43 @@ class DecodeServer:
         # registered Pareto-point plan instead (same offsets, different
         # admission charge)
         ticket = self.pool.submit(self._plan["graph"], key=self._key,
-                                  klass=req.klass)
+                                  klass=req.klass, priority=req.priority,
+                                  tenant=req.tenant)
         if ticket.rejected:
-            req.rejected = True
-            req.done_s = req.submit_s
-            self.done.append(req)
+            self._finish_rejected(req, ticket)
             return
         self._tickets[ticket.rid] = req
+
+    def _finish_rejected(self, req: Request, ticket) -> None:
+        req.rejected = True
+        req.reject_code = ticket.reason_code
+        req.reject_reason = ticket.reason
+        req.done_s = time.perf_counter()
+        req.spill = None
+        self.done.append(req)
+
+    def _collect_rejected(self) -> None:
+        """Retire queued requests a budget-shrink sweep rejected."""
+        for ticket in self.pool.poll_rejected():
+            req = self._tickets.pop(ticket.rid, None)
+            if req is not None:
+                self._finish_rejected(req, ticket)
 
     def _start(self, ticket) -> None:
         req = self._tickets.pop(ticket.rid)
         req.admit_s = time.perf_counter()
         req.lease = ticket.lease
+        if req.spill is not None:
+            # re-admission of a preempted request: its packed KV state is
+            # self-contained (plan offsets are buffer-relative), so the
+            # restore is one host->device byte copy — no re-prefill, and
+            # req.t / tokens continue exactly where the spill left off
+            sp, req.spill = req.spill, None
+            ticket.lease.buffer = None
+            req.arena = jnp.asarray(np.asarray(sp.host_state))
+            req.klass = sp.klass or req.klass   # a downgrade sticks
+            self.active.append(req)
+            return
         P = len(req.prompt)
         cache = self.model.init_cache(1, self.smax)
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
@@ -312,6 +432,98 @@ class DecodeServer:
                                       arena=ticket.lease.buffer)
         ticket.lease.buffer = None    # ownership moved to the request
         self.active.append(req)
+
+    # -- degradation ladder (DESIGN.md §13) ---------------------------------
+
+    def set_budget(self, nbytes: int) -> None:
+        """Shrink/grow the pool budget mid-run and enforce it.
+
+        A shrink that leaves the admitted set over budget walks the
+        degradation ladder (:meth:`_degrade_once`) until the members fit
+        again — the pool itself never evicts, so this is where preemption
+        happens.
+        """
+        over = self.pool.set_budget(nbytes)
+        self.min_budget_bytes = min(self.min_budget_bytes,
+                                    self.pool.budget_bytes)
+        while over > 0:
+            if not self._degrade_once():
+                break                 # nothing left to shed (no members)
+            over = self.pool.reserved_bytes - self.pool.budget_bytes
+
+    def _preempt_request(self, req: Request,
+                         downgrade_to: str | None = None) -> None:
+        """Spill an active request's lease; it rejoins via readmit."""
+        sp = self.pool.preempt(req.lease, state=req.arena)
+        req.lease = None
+        req.arena = None
+        req.preemptions += 1
+        if downgrade_to is not None and sp.klass != downgrade_to:
+            self.pool.downgrade(sp, downgrade_to)
+            req.klass = downgrade_to
+        sp.next_tick = self._tick + 1   # first readmit try next tick
+        req.spill = sp
+        self.active.remove(req)
+        self._spilled.append(req)
+
+    def _degrade_once(self) -> bool:
+        """One ladder rung; True when it shed bytes (or scratch).
+
+        Rung 1: re-plan a ``latency``-class request at its memory-optimal
+        Pareto point (preempt + downgrade + readmit — the PR 8 classes
+        share offsets, so only the admission charge changes).  Rung 2:
+        pin vmap decode to exact-size batch buckets and drop any padding
+        scratch.  Rung 3: preempt the lowest-priority lease outright.
+        """
+        lat = [r for r in self.active if r.klass == "latency"
+               and r.lease is not None]
+        if lat and "memory" in self.pool.pareto_classes(self._key):
+            victim = min(lat, key=lambda r: (r.priority, -r.rid))
+            self._preempt_request(victim, downgrade_to="memory")
+            self.ladder["replan"] += 1
+            return True
+        if not self._exact_buckets:
+            self._exact_buckets = True
+            self.ladder["shrink_buckets"] += 1
+            if self.pool.scratch_bytes:
+                self.pool.reserve_scratch(0)
+            return True
+        owned = [r for r in self.active if r.lease is not None]
+        if not owned:
+            return False
+        # same ordering as ArenaPool.preempt_candidate: lowest priority
+        # first, youngest lease among ties
+        victim = min(owned, key=lambda r: (r.priority, -r.lease.rid))
+        self._preempt_request(victim)
+        self.ladder["preempt"] += 1
+        return True
+
+    def _retry_spilled(self) -> None:
+        """Drive due re-admissions: bounded retry, exponential backoff."""
+        still = []
+        for req in self._spilled:
+            sp = req.spill
+            if not sp.due(self._tick):
+                still.append(req)
+                continue
+            ticket = self.pool.readmit(sp)
+            if ticket.rejected:
+                self._finish_rejected(req, ticket)
+            elif ticket.admitted:
+                self._tickets[ticket.rid] = req   # restored by _start
+            else:
+                sp.backoff(self._tick)
+                if sp.attempts > self.max_readmit_attempts:
+                    ticket.reason_code = "readmit_exhausted"
+                    ticket.reason = (
+                        f"re-admission failed after {sp.attempts} attempts "
+                        f"(pool reserved {self.pool.reserved_bytes} of "
+                        f"{self.pool.budget_bytes} budget bytes)")
+                    ticket.rejected = True
+                    self._finish_rejected(req, ticket)
+                else:
+                    still.append(req)
+        self._spilled = still
 
     # -- decode ------------------------------------------------------------
 
@@ -364,7 +576,9 @@ class DecodeServer:
 
     def _step_vmap(self) -> None:
         B = len(self.active)
-        bucket = self._bucket(B)
+        # ladder rung 2: exact-size buckets trade extra traces for zero
+        # padding rows (no scratch charged against the shrunk budget)
+        bucket = B if self._exact_buckets else self._bucket(B)
         pad = bucket - B
         if pad:
             # padding rows materialize real state + transients beyond the
@@ -397,14 +611,47 @@ class DecodeServer:
                 self.pool.reserve_scratch(0)
 
     def step(self) -> int:
-        """One scheduler tick; returns the number of active requests."""
+        """One scheduler tick; returns the number of active requests.
+
+        Tick order: arm this tick's chaos faults, admit (poll + start),
+        apply injected budget shrinks (which may walk the ladder), retry
+        spilled re-admissions, then decode — guarded by the transient-
+        error bounded retry — and finally retire finished requests and
+        record the budget-invariant trace.
+        """
+        self._tick += 1
+        t_tick = time.perf_counter()
+        shrinks = ()
+        if self.chaos is not None:
+            shrinks = self.chaos.begin_tick(self._tick)
+        self.pool.kick()              # retry after transient faults
+        self._collect_rejected()
+        for ticket in self.pool.poll():
+            self._start(ticket)
+        for spec in shrinks:
+            if spec.kind == "budget_shrink":
+                self.set_budget(max(1, int(self.pool.budget_bytes
+                                           * spec.factor)))
+        self._collect_rejected()
+        self._retry_spilled()
         for ticket in self.pool.poll():
             self._start(ticket)
         if self.active:
-            if self.step_mode == "serial":
-                self._step_serial()
-            else:
-                self._step_vmap()
+            try:
+                if self.chaos is not None:
+                    self.chaos.maybe_executor_error()
+                if self.step_mode == "serial":
+                    self._step_serial()
+                else:
+                    self._step_vmap()
+                self._transient_streak = 0
+            except TransientExecutorError:
+                # request state untouched: skip the decode phase this tick
+                # and retry next tick, up to the bounded retry limit
+                self.transient_errors += 1
+                self._transient_streak += 1
+                if self._transient_streak > self.max_transient_retries:
+                    raise
         still = []
         for req in self.active:
             if len(req.tokens) >= req.max_new:
@@ -416,7 +663,54 @@ class DecodeServer:
             else:
                 still.append(req)
         self.active = still
+        # budget-invariant trace: realized arena bytes vs the instantaneous
+        # (possibly shrunk) budget — the chaos suite asserts this never
+        # goes positive once the ladder has run
+        self.max_over_budget_bytes = max(
+            self.max_over_budget_bytes,
+            self.pool.reserved_bytes - self.pool.budget_bytes)
+        self._last_tick_s = time.perf_counter() - t_tick
         return len(self.active)
+
+    # -- stall diagnostics (DESIGN.md §13) ----------------------------------
+
+    def _progress_sig(self) -> tuple:
+        """Observable state; two equal signatures = a tick did nothing."""
+        return (len(self.done),
+                sum(len(r.tokens) for r in self.active),
+                len(self.active), len(self._spilled), len(self._tickets),
+                self.pool.queue_len, self.pool.stats.admitted,
+                self.pool.budget_bytes)
+
+    def _stall_report(self) -> dict:
+        """Structured queue diagnostics: every waiting request's identity
+        and its current ``_fits`` failure reason."""
+        return {
+            "tick": self._tick,
+            "queued": self.pool.queue_report(),
+            "waiting_rids": sorted(self._tickets),
+            "spilled": [{"rid": r.rid, "attempts": r.spill.attempts,
+                         "next_tick": r.spill.next_tick,
+                         "klass": r.spill.klass}
+                        for r in self._spilled],
+            "reserved_bytes": self.pool.reserved_bytes,
+            "budget_bytes": self.pool.budget_bytes,
+            "scratch_bytes": self.pool.scratch_bytes,
+            "watchdog": self.watchdog.as_dict(),
+        }
+
+    def _raise_stall(self) -> None:
+        report = self._stall_report()
+        self.last_stall = report
+        queued = ", ".join(
+            f"rid={q['rid']} klass={q['klass']} prio={q['priority']} "
+            f"({q['why']})" for q in report["queued"]) or "none"
+        raise ServingStallError(
+            f"serving stalled at tick {report['tick']}: "
+            f"{len(report['waiting_rids'])} request(s) waiting, "
+            f"{len(report['spilled'])} spilled, none active; pool reserved "
+            f"{report['reserved_bytes']} of {report['budget_bytes']} budget "
+            f"bytes; queued: [{queued}]", report)
 
     def run(self, requests: Sequence[Request], *,
             max_steps: int = 100_000) -> dict:
@@ -425,27 +719,35 @@ class DecodeServer:
         for r in requests:
             self.submit(r)
         steps = 0
-        while (self.active or self._tickets) and steps < max_steps:
-            waiting = len(self._tickets)
-            if not self.step() and self._tickets and \
-                    len(self._tickets) == waiting and \
-                    not self.pool.leases and \
-                    not self.pool.pending_admissions:
-                # nothing active, nothing held or pending in the pool, and
-                # the queue did not move: it can never drain (an admission
-                # bug) — fail loudly instead of busy-spinning to max_steps
-                raise RuntimeError(
-                    f"serving stalled: {waiting} request(s) queued, none "
-                    f"active, none admissible (pool reserved "
-                    f"{self.pool.reserved_bytes} of "
-                    f"{self.pool.budget_bytes} budget bytes)")
+        while (self.active or self._tickets or self._spilled) \
+                and steps < max_steps:
+            sig = self._progress_sig()
+            self.step()
             steps += 1
+            progressed = self._progress_sig() != sig
+            if self.watchdog.observe(self._last_tick_s, progressed):
+                self._raise_stall()
+            if not progressed and not self.active and self._tickets \
+                    and not self._spilled and not self.pool.leases \
+                    and not self.pool.pending_admissions \
+                    and self.chaos is None:
+                # nothing active, nothing held, pending or spilled, no
+                # fault injection that could explain it, and the queue did
+                # not move: it can never drain (an admission bug) — fail
+                # loudly now instead of waiting out the watchdog
+                self._raise_stall()
         jax.block_until_ready(self.params)
         wall = time.perf_counter() - t0
         served = [r for r in self.done if not r.rejected]
         lat = sorted(r.latency_s for r in served) or [0.0]
         n_tok = sum(len(r.tokens) for r in served)
         st = self.pool.stats
+        ps = self.pool.preemption_stats
+        reject_codes: dict[str, int] = {}
+        for r in self.done:
+            if r.rejected:
+                code = r.reject_code or "submit"
+                reject_codes[code] = reject_codes.get(code, 0) + 1
         return {
             "n_requests": len(requests),
             "n_served": len(served),
@@ -465,11 +767,26 @@ class DecodeServer:
             "persistent_bytes": self._plan["persistent_bytes"],
             "transient_bytes": self._plan["transient_bytes"],
             "admitted_by_class": dict(st.admitted_by_class),
+            # robustness block (DESIGN.md §13)
+            "reject_codes": reject_codes,
+            "n_preempted": ps.preemptions,
+            "spill_bytes": ps.spilled_bytes,
+            "n_readmitted": ps.readmitted,
+            "readmit_attempts": ps.readmit_attempts,
+            "admission_faults": ps.admission_faults,
+            "budget_shrinks": ps.budget_shrinks,
+            "min_budget_bytes": self.min_budget_bytes,
+            "max_over_budget_bytes": self.max_over_budget_bytes,
+            "transient_errors": self.transient_errors,
+            "ladder": dict(self.ladder),
+            "watchdog": self.watchdog.as_dict(),
+            "stall": self.last_stall,
         }
 
 
 def make_pool(budget_bytes: int, *, step_mode: str = "serial",
-              pooled: bool = True, max_warm: int = 4) -> ArenaPool:
+              pooled: bool = True, max_warm: int = 4,
+              tenant_quotas: dict[str, int] | None = None) -> ArenaPool:
     """Pool whose admission accounting matches the server's step mode."""
     overlap = "serial" if (pooled and step_mode == "serial") else "none"
     return ArenaPool(
@@ -477,16 +794,21 @@ def make_pool(budget_bytes: int, *, step_mode: str = "serial",
         overlap=overlap,
         max_warm=max_warm,
         alloc_fn=lambda n: jnp.zeros(n, jnp.uint8),
+        tenant_quotas=tenant_quotas,
     )
 
 
 def run_server(model, params, requests, *, smax: int, budget_bytes: int,
                step_mode: str = "serial", pooled: bool = True,
-               rules=None, warm: int = 0) -> dict:
+               rules=None, warm: int = 0,
+               chaos: ChaosController | None = None,
+               tenant_quotas: dict[str, int] | None = None,
+               **server_kwargs) -> dict:
     """Build a pool + server, serve ``requests``, return metrics."""
-    pool = make_pool(budget_bytes, step_mode=step_mode, pooled=pooled)
+    pool = make_pool(budget_bytes, step_mode=step_mode, pooled=pooled,
+                     tenant_quotas=tenant_quotas)
     server = DecodeServer(model, params, pool, smax=smax, rules=rules,
-                          step_mode=step_mode)
+                          step_mode=step_mode, chaos=chaos, **server_kwargs)
     if warm:
         server.warm(warm)
     return server.run(requests)
@@ -494,10 +816,13 @@ def run_server(model, params, requests, *, smax: int, budget_bytes: int,
 
 def synth_requests(n: int, prompt_len: int, gen: int, vocab: int,
                    seed: int = 0,
-                   latency_frac: float = 0.0) -> list[Request]:
+                   latency_frac: float = 0.0,
+                   priorities: Sequence[int] | None = None,
+                   tenants: Sequence[str] | None = None) -> list[Request]:
     """Synthesize ``n`` requests; ``latency_frac`` > 0 tags that fraction
     as the ``latency`` Pareto class and the rest ``memory`` (0.0 keeps
     every request classless — base-plan admission, the pre-§12 behavior).
+    ``priorities`` / ``tenants`` are cycled over the requests when given.
     """
     if not 0.0 <= latency_frac <= 1.0:
         raise ValueError(f"latency_frac must be in [0, 1], got {latency_frac}")
@@ -510,7 +835,9 @@ def synth_requests(n: int, prompt_len: int, gen: int, vocab: int,
         reqs.append(Request(
             rid=i,
             prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
-            max_new=gen, klass=klass))
+            max_new=gen, klass=klass,
+            priority=priorities[i % len(priorities)] if priorities else 0,
+            tenant=tenants[i % len(tenants)] if tenants else None))
     return reqs
 
 

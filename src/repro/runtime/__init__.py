@@ -1,3 +1,10 @@
+from repro.runtime.chaos import (
+    ChaosController,
+    FaultPlan,
+    FaultSpec,
+    TransientExecutorError,
+    seeded_corpus,
+)
 from repro.runtime.fault import FaultTolerantLoop, StepTimer
 from repro.runtime.pool import (
     ArenaPool,
@@ -5,16 +12,25 @@ from repro.runtime.pool import (
     LeaseError,
     PoolError,
     PoolStats,
+    PreemptionStats,
+    SpilledLease,
     Ticket,
 )
 
 __all__ = [
     "ArenaPool",
+    "ChaosController",
+    "FaultPlan",
+    "FaultSpec",
     "FaultTolerantLoop",
     "Lease",
     "LeaseError",
     "PoolError",
     "PoolStats",
+    "PreemptionStats",
+    "SpilledLease",
     "StepTimer",
     "Ticket",
+    "TransientExecutorError",
+    "seeded_corpus",
 ]

@@ -107,6 +107,10 @@ class FaultTolerantLoop:
     def _latest(self):
         from repro.checkpoint import latest_step
 
+        # a pending async save may hold the newest step: without the join,
+        # a failure racing the writer thread restores a stale checkpoint
+        # (or none at all) and silently replays from the wrong step
+        self.ckpt.wait()
         return latest_step(self.ckpt.dir)
 
     def _restore(self, like, step):

@@ -34,6 +34,8 @@ import dataclasses
 import itertools
 from typing import Callable, Sequence
 
+import numpy as np
+
 from repro.core.allocator import (
     ArenaPlan,
     SharedArenaPlan,
@@ -54,7 +56,37 @@ _LEASE_CONFIG = PlanConfig(rewrite=False, inplace=False,
 
 
 class PoolError(RuntimeError):
-    pass
+    """Pool misuse or admission impossibility, with structured context.
+
+    Besides the formatted message, every raise site attaches the numbers it
+    was formatted from as attributes — ``code`` (a stable machine-readable
+    cause tag), ``requested_bytes``, ``budget_bytes``, ``reserved_bytes``,
+    ``queue_depth`` — so the degradation ladder and tests branch on cause
+    instead of regex-matching messages (DESIGN.md §13).  ``context`` is the
+    dict of every non-``None`` attribute.
+    """
+
+    def __init__(self, message: str, *, code: str | None = None,
+                 requested_bytes: int | None = None,
+                 budget_bytes: int | None = None,
+                 reserved_bytes: int | None = None,
+                 queue_depth: int | None = None):
+        super().__init__(message)
+        self.code = code
+        self.requested_bytes = requested_bytes
+        self.budget_bytes = budget_bytes
+        self.reserved_bytes = reserved_bytes
+        self.queue_depth = queue_depth
+
+    @property
+    def context(self) -> dict:
+        return {k: v for k, v in (
+            ("code", self.code),
+            ("requested_bytes", self.requested_bytes),
+            ("budget_bytes", self.budget_bytes),
+            ("reserved_bytes", self.reserved_bytes),
+            ("queue_depth", self.queue_depth),
+        ) if v is not None}
 
 
 def pareto_class_plans(graph, frontier) -> dict[str, ArenaPlan]:
@@ -108,6 +140,23 @@ class PoolStats:
 
 
 @dataclasses.dataclass
+class PreemptionStats:
+    """Preemption / spill / re-admission counters (DESIGN.md §13)."""
+
+    preemptions: int = 0
+    spilled_bytes: int = 0       # total host bytes written by preempt()
+    readmit_attempts: int = 0
+    readmitted: int = 0
+    readmit_rejections: int = 0  # re-admissions the shrunk budget can never fit
+    admission_faults: int = 0    # admissions suppressed by the fault hook
+    budget_shrinks: int = 0
+    budget_evictions: int = 0    # queued tickets rejected by a shrink sweep
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
 class Lease:
     """An admitted request's hold on planned arena bytes.
 
@@ -126,23 +175,66 @@ class Lease:
     persistent_bytes: int
     resident_extent: int
     buffer: object | None = None
+    priority: int = 0            # higher = more important; preempt picks min
+    tenant: str | None = None
     _released: bool = dataclasses.field(default=False, repr=False)
 
 
 @dataclasses.dataclass
 class Ticket:
-    """Tracks one submitted request through admit / queue / reject."""
+    """Tracks one submitted request through admit / queue / reject.
+
+    ``reason_code`` is the machine-readable rejection cause (stable tags:
+    ``'budget'``, ``'tenant_quota'``, ``'budget_shrunk'``,
+    ``'readmit_exhausted'``); ``reason`` the human-formatted counterpart.
+    """
 
     rid: int
     key: str
     lease: Lease | None = None
     rejected: bool = False
     reason: str = ""
+    reason_code: str = ""
     klass: str | None = None     # Pareto request class, when submitted with one
+    priority: int = 0
+    tenant: str | None = None
 
     @property
     def admitted(self) -> bool:
         return self.lease is not None
+
+
+@dataclasses.dataclass
+class SpilledLease:
+    """A preempted lease's movable state, waiting to be re-admitted.
+
+    ``host_state`` holds the lease's resident bytes copied off the device
+    (the ``pack_decode_state`` round-trip makes them self-contained: the
+    plan's offsets are buffer-relative, so any future buffer can host them
+    verbatim).  ``attempts`` / ``next_tick`` are the re-admission backoff
+    bookkeeping the serving loop drives (bounded retry, exponential
+    backoff — DESIGN.md §13).
+    """
+
+    rid: int
+    key: str
+    plan: ArenaPlan
+    spill_bytes: int
+    host_state: object | None = None   # np.uint8 copy of the resident bytes
+    klass: str | None = None
+    priority: int = 0
+    tenant: str | None = None
+    attempts: int = 0
+    next_tick: int = 0
+
+    def backoff(self, tick: int) -> None:
+        """Record a failed re-admission attempt; next try after 2^attempts
+        ticks (1, 2, 4, ... — exponential)."""
+        self.attempts += 1
+        self.next_tick = tick + (1 << self.attempts)
+
+    def due(self, tick: int) -> bool:
+        return tick >= self.next_tick
 
 
 class ArenaPool:
@@ -166,6 +258,15 @@ class ArenaPool:
       alloc_fn: ``alloc_fn(nbytes) -> buffer`` for physical lease buffers
         (the serving driver passes a jnp uint8 allocator).  ``None`` keeps
         the pool accounting-only (``Lease.buffer is None``).
+      tenant_quotas: optional per-tenant byte caps: a tenant's admitted
+        leases may never jointly charge more than its quota (each lease is
+        charged its standalone joint extent).  Tenants absent from the map
+        are unconstrained.
+      admission_hook: fault-injection point (DESIGN.md §13): called with no
+        arguments immediately before each admission attempt; returning
+        truthy makes that attempt fail transiently (the request stays
+        queued, ``preemption_stats.admission_faults`` counts it, and a
+        later :meth:`kick` / release retries).  ``None`` disables.
     """
 
     def __init__(
@@ -177,12 +278,17 @@ class ArenaPool:
         max_plans: int = 64,
         planner: Callable[[Graph, Sequence[int] | None], ArenaPlan] | None = None,
         alloc_fn: Callable[[int], object] | None = None,
+        tenant_quotas: dict[str, int] | None = None,
+        admission_hook: Callable[[], bool] | None = None,
     ):
         if overlap not in ("serial", "none"):
-            raise PoolError(f"unknown overlap mode {overlap!r}")
+            raise PoolError(f"unknown overlap mode {overlap!r}",
+                            code="bad_overlap")
         self.budget_bytes = int(budget_bytes)
         self.overlap = overlap
         self.max_warm = max_warm
+        self.tenant_quotas = dict(tenant_quotas or {})
+        self.admission_hook = admission_hook
         self._planner = planner
         self._alloc_fn = alloc_fn
         self._plans: collections.OrderedDict[str, ArenaPlan] = \
@@ -196,9 +302,11 @@ class ArenaPool:
         self._queue: collections.deque[tuple[Ticket, ArenaPlan]] = \
             collections.deque()
         self._admitted_since_poll: list[Ticket] = []
+        self._rejected_since_poll: list[Ticket] = []
         self._scratch_bytes = 0
         self._pareto: dict[str, dict[str, ArenaPlan]] = {}
         self.stats = PoolStats()
+        self.preemption_stats = PreemptionStats()
 
     # -- planning ----------------------------------------------------------
 
@@ -279,66 +387,95 @@ class ArenaPool:
     def submit(self, graph: Graph, order: Sequence[int] | None = None,
                *, key: str | None = None,
                plan: ArenaPlan | None = None,
-               klass: str | None = None) -> Ticket:
+               klass: str | None = None,
+               priority: int = 0,
+               tenant: str | None = None) -> Ticket:
         """Request a lease: admit now, queue, or reject outright.
 
         Returns a :class:`Ticket`; ``ticket.lease`` is set immediately when
         the request fits the remaining budget and nothing is queued ahead
-        of it, ``ticket.rejected`` when the plan alone can never fit.
+        of it, ``ticket.rejected`` when the plan alone can never fit (the
+        global budget or the tenant's quota — ``reason_code`` says which).
 
         ``klass`` selects a request class previously registered for the
         key via :meth:`register_pareto` — the lease then covers that
         class's Pareto-point plan instead of the base plan.  Submitting an
         unregistered class (or a class for an unregistered key) raises
         :class:`PoolError` rather than silently downgrading the request.
+
+        ``priority`` orders preemption, not admission: the queue stays
+        FIFO, but when the degradation ladder must evict a lease it picks
+        the lowest-priority one (:meth:`preempt_candidate`).  ``tenant``
+        charges the lease against that tenant's byte quota when one is
+        configured.
         """
         self.stats.submitted += 1
         if klass is not None:
             if plan is not None:
                 raise PoolError("submit: pass either plan= or klass=, "
-                                "not both")
+                                "not both", code="bad_args")
             if key is None:
                 key = labeled_fingerprint(graph)
             by_class = self._pareto.get(key)
             if by_class is None:
                 raise PoolError(
                     f"submit: no Pareto classes registered for key "
-                    f"{key!r} (call register_pareto first)")
+                    f"{key!r} (call register_pareto first)",
+                    code="no_pareto_classes")
             if klass not in by_class:
                 raise PoolError(
                     f"submit: unknown request class {klass!r} for key "
-                    f"{key!r}; registered: {sorted(by_class)}")
+                    f"{key!r}; registered: {sorted(by_class)}",
+                    code="unknown_class")
             plan = by_class[klass]
             key = f"{key}@{klass}"
         key, plan = self.plan(graph, order, key=key, plan=plan)
-        ticket = Ticket(rid=next(self._rid), key=key, klass=klass)
+        ticket = Ticket(rid=next(self._rid), key=key, klass=klass,
+                        priority=priority, tenant=tenant)
         # reject iff the request could not be admitted even into an EMPTY
         # pool — evaluated with the same accounting `_fits` uses, so a
         # queued request is always eventually admissible (no queue deadlock)
-        alone = self._joint_extent([plan])
-        if alone > self.budget_bytes:
-            ticket.rejected = True
-            ticket.reason = (
-                f"plan needs {alone} bytes alone; budget is "
-                f"{self.budget_bytes}")
-            self.stats.rejected += 1
+        if self._reject_never_fits(ticket, plan):
             return ticket
         self._queue.append((ticket, plan))
         self.stats.peak_queued = max(self.stats.peak_queued, len(self._queue))
         self._drain()
         return ticket
 
+    def _reject_never_fits(self, ticket: Ticket, plan: ArenaPlan) -> bool:
+        """Mark ``ticket`` rejected when ``plan`` can never be admitted —
+        even into an empty pool — under the current budget/quotas."""
+        alone = self._joint_extent([plan])
+        if alone > self.budget_bytes:
+            ticket.rejected = True
+            ticket.reason_code = "budget"
+            ticket.reason = (
+                f"plan needs {alone} bytes alone; budget is "
+                f"{self.budget_bytes}")
+            self.stats.rejected += 1
+            return True
+        quota = self.tenant_quotas.get(ticket.tenant)
+        if quota is not None and alone > quota:
+            ticket.rejected = True
+            ticket.reason_code = "tenant_quota"
+            ticket.reason = (
+                f"plan needs {alone} bytes alone; tenant "
+                f"{ticket.tenant!r} quota is {quota}")
+            self.stats.rejected += 1
+            return True
+        return False
+
     def release(self, lease: Lease) -> None:
         """Return a lease's bytes to the pool and drain the queue."""
         if lease._released:
             raise LeaseError(f"lease {lease.rid} ({lease.key}) already "
-                             f"released (double free)")
+                             f"released (double free)", code="double_free")
         try:
             self._members.remove(lease)
         except ValueError:
             raise LeaseError(
-                f"lease {lease.rid} ({lease.key}) is not held by this pool"
-            ) from None
+                f"lease {lease.rid} ({lease.key}) is not held by this pool",
+                code="foreign_lease") from None
         lease._released = True
         self.stats.released += 1
         if lease.buffer is not None:
@@ -352,10 +489,170 @@ class ArenaPool:
         self._admitted_since_poll = []
         return out
 
+    def poll_rejected(self) -> list[Ticket]:
+        """Queued tickets rejected *after* submit (a budget-shrink sweep);
+        submit-time rejections are returned on the ticket itself."""
+        out = self._rejected_since_poll
+        self._rejected_since_poll = []
+        return out
+
     @property
     def pending_admissions(self) -> int:
         """Admitted tickets not yet collected by :meth:`poll`."""
         return len(self._admitted_since_poll)
+
+    @property
+    def queued_tickets(self) -> tuple[Ticket, ...]:
+        """The waiting queue, head first (tickets only, FIFO order)."""
+        return tuple(t for t, _ in self._queue)
+
+    def queue_report(self) -> list[dict]:
+        """Structured per-queued-request diagnostics (DESIGN.md §13):
+        rid, class, priority, tenant and the current ``_fits`` failure
+        reason — what the serving watchdog logs on stall escalation."""
+        return [
+            {"rid": t.rid, "klass": t.klass, "priority": t.priority,
+             "tenant": t.tenant,
+             "why": self.why_not_admitted(p, t.tenant) or "admissible"}
+            for t, p in self._queue
+        ]
+
+    # -- budget + preemption (DESIGN.md §13) --------------------------------
+
+    def set_budget(self, nbytes: int) -> int:
+        """Change the global budget mid-flight; returns the overflow bytes.
+
+        On a *grow* (or no-op) the queue simply re-drains.  On a *shrink*
+        the queue is swept first: waiting tickets the new budget (or the
+        tenant quota) can never fit are rejected with
+        ``reason_code='budget_shrunk'`` and surface through
+        :meth:`poll_rejected` — otherwise they would deadlock the FIFO
+        head.  The returned overflow (``reserved - budget``, floored at 0)
+        is what the caller's degradation ladder must recover by
+        preemption; the pool never evicts admitted leases on its own.
+        """
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise PoolError(f"negative budget {nbytes}", code="bad_budget",
+                            requested_bytes=nbytes)
+        shrink = nbytes < self.budget_bytes
+        self.budget_bytes = nbytes
+        if shrink:
+            self.preemption_stats.budget_shrinks += 1
+            keep: collections.deque = collections.deque()
+            for ticket, plan in self._queue:
+                alone = self._joint_extent([plan])
+                quota = self.tenant_quotas.get(ticket.tenant)
+                if alone > nbytes or (quota is not None and alone > quota):
+                    ticket.rejected = True
+                    ticket.reason_code = "budget_shrunk"
+                    ticket.reason = (
+                        f"budget shrank to {nbytes} bytes; queued plan "
+                        f"needs {alone} alone")
+                    self.stats.rejected += 1
+                    self.preemption_stats.budget_evictions += 1
+                    self._rejected_since_poll.append(ticket)
+                else:
+                    keep.append((ticket, plan))
+            self._queue = keep
+        over = self.reserved_bytes - nbytes
+        if over <= 0:
+            self._drain()
+        return max(0, over)
+
+    def preempt_candidate(self) -> Lease | None:
+        """The lease preemption should evict next: lowest priority first,
+        youngest (highest rid) among ties — the least-progressed work of
+        the least-important class.  ``None`` when the pool holds nothing."""
+        if not self._members:
+            return None
+        return min(self._members, key=lambda m: (m.priority, -m.rid))
+
+    def preempt(self, lease: Lease, state: object | None = None) -> SpilledLease:
+        """Evict ``lease``: spill its resident bytes to host, free its
+        arena bytes, and return a :class:`SpilledLease` for later
+        :meth:`readmit`.
+
+        ``state`` is the buffer currently holding the lease's packed
+        resident state (the serving loop moves buffer ownership onto the
+        request after admission, so it must hand the live arena back);
+        when ``None`` the lease's own ``buffer`` is spilled, and when that
+        is also ``None`` (accounting-only pools) the spill carries no
+        bytes, just the admission slot.  The freed bytes drain the queue
+        immediately.
+        """
+        if lease._released:
+            raise LeaseError(
+                f"lease {lease.rid} ({lease.key}) already released "
+                f"(double free)", code="double_free")
+        try:
+            self._members.remove(lease)
+        except ValueError:
+            raise LeaseError(
+                f"lease {lease.rid} ({lease.key}) is not held by this pool",
+                code="foreign_lease") from None
+        lease._released = True
+        src = state if state is not None else lease.buffer
+        host = None
+        if src is not None:
+            host = np.array(np.asarray(src), dtype=np.uint8, copy=True)
+        lease.buffer = None
+        spill_bytes = int(host.nbytes) if host is not None \
+            else lease.resident_extent
+        ps = self.preemption_stats
+        ps.preemptions += 1
+        ps.spilled_bytes += spill_bytes
+        self._drain()
+        return SpilledLease(
+            rid=lease.rid, key=lease.key, plan=lease.plan,
+            spill_bytes=spill_bytes, host_state=host,
+            klass=lease.key.rsplit("@", 1)[1] if "@" in lease.key else None,
+            priority=lease.priority, tenant=lease.tenant)
+
+    def downgrade(self, spilled: SpilledLease, klass: str) -> None:
+        """Re-point a spilled lease at another registered Pareto class —
+        the ladder's rung-1 move: a preempted ``latency`` request re-admits
+        at its ``memory``-optimal point (same offsets layout, smaller
+        admission charge)."""
+        base = spilled.key.rsplit("@", 1)[0]
+        by_class = self._pareto.get(base)
+        if by_class is None or klass not in by_class:
+            raise PoolError(
+                f"downgrade: no class {klass!r} registered for {base!r}",
+                code="unknown_class")
+        spilled.plan = by_class[klass]
+        spilled.key = f"{base}@{klass}"
+        spilled.klass = klass
+
+    def readmit(self, spilled: SpilledLease) -> Ticket:
+        """One re-admission attempt for a spilled lease.
+
+        Unlike :meth:`submit` this does **not** join the FIFO queue: a
+        preempted request was admitted before anything now waiting, so it
+        re-enters ahead of the queue iff its bytes fit *right now* —
+        otherwise the returned ticket is neither admitted nor queued and
+        the caller backs off (:meth:`SpilledLease.backoff`) and retries.
+        A spill the shrunk budget/quota can never fit again is rejected
+        outright (``reason_code='budget'``/``'tenant_quota'``).  The
+        caller rebuilds the request's device state from
+        ``spilled.host_state`` once the returned ticket admits.
+        """
+        ps = self.preemption_stats
+        ps.readmit_attempts += 1
+        ticket = Ticket(rid=next(self._rid), key=spilled.key,
+                        klass=spilled.klass, priority=spilled.priority,
+                        tenant=spilled.tenant)
+        if self._reject_never_fits(ticket, spilled.plan):
+            ps.readmit_rejections += 1
+            return ticket
+        if self.admission_hook is not None and self.admission_hook():
+            ps.admission_faults += 1
+            return ticket                       # transient: retry later
+        if not self._fits(spilled.plan, spilled.tenant):
+            return ticket                       # no bytes yet: retry later
+        self._admit(ticket, spilled.plan)
+        ps.readmitted += 1
+        return ticket
 
     # -- accounting --------------------------------------------------------
 
@@ -391,13 +688,16 @@ class ArenaPool:
         """
         nbytes = int(nbytes)
         if nbytes < 0:
-            raise PoolError(f"negative scratch reservation {nbytes}")
+            raise PoolError(f"negative scratch reservation {nbytes}",
+                            code="bad_scratch", requested_bytes=nbytes)
         joint = self._joint_extent([m.plan for m in self._members])
         if joint + nbytes > self.budget_bytes:
             raise PoolError(
                 f"scratch reservation of {nbytes} bytes does not fit: "
                 f"members reserve {joint} of {self.budget_bytes} budget "
-                f"bytes")
+                f"bytes", code="scratch_overflow", requested_bytes=nbytes,
+                budget_bytes=self.budget_bytes, reserved_bytes=joint,
+                queue_depth=len(self._queue))
         self._scratch_bytes = nbytes
         self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
                                              self.reserved_bytes)
@@ -416,16 +716,73 @@ class ArenaPool:
             return sum(p.arena_bytes for p in plans)
         return plan_shared_arena(plans).arena_bytes
 
-    def _fits(self, plan: ArenaPlan) -> bool:
+    def tenant_usage(self, tenant: str | None) -> int:
+        """Joint-alone bytes ``tenant``'s admitted leases charge its quota."""
+        return sum(self._joint_extent([m.plan]) for m in self._members
+                   if m.tenant == tenant)
+
+    def _fits(self, plan: ArenaPlan, tenant: str | None = None) -> bool:
+        joint = self._joint_extent([m.plan for m in self._members] + [plan])
+        if joint + self._scratch_bytes > self.budget_bytes:
+            return False
+        quota = self.tenant_quotas.get(tenant)
+        if quota is not None and \
+                self.tenant_usage(tenant) + self._joint_extent([plan]) > quota:
+            return False
+        return True
+
+    def why_not_admitted(self, plan: ArenaPlan,
+                         tenant: str | None = None) -> str:
+        """Human-readable reason :meth:`_fits` currently fails for ``plan``
+        ('' when it would fit) — the per-request diagnostic the serving
+        watchdog puts in its stall report (DESIGN.md §13)."""
+        joint = self._joint_extent([m.plan for m in self._members] + [plan])
+        if joint + self._scratch_bytes > self.budget_bytes:
+            return (f"needs {joint} joint bytes"
+                    + (f" (+{self._scratch_bytes} scratch)"
+                       if self._scratch_bytes else "")
+                    + f" over {self.budget_bytes} budget")
+        quota = self.tenant_quotas.get(tenant)
+        if quota is not None:
+            used = self.tenant_usage(tenant)
+            charge = self._joint_extent([plan])
+            if used + charge > quota:
+                return (f"tenant {tenant!r} at {used} of {quota} quota "
+                        f"bytes; lease charges {charge}")
+        return ""
+
+    def _fits_globally(self, plan: ArenaPlan) -> bool:
         joint = self._joint_extent([m.plan for m in self._members] + [plan])
         return joint + self._scratch_bytes <= self.budget_bytes
 
     def _drain(self) -> None:
-        # FIFO with head-of-line blocking: later (smaller) requests never
-        # jump an earlier one still waiting for bytes
-        while self._queue and self._fits(self._queue[0][1]):
-            ticket, plan = self._queue.popleft()
-            self._admit(ticket, plan)
+        # FIFO with head-of-line blocking on *bytes*: later (smaller)
+        # requests never jump an earlier one still waiting for budget
+        # bytes.  An entry waiting only on its own tenant's quota does NOT
+        # block other tenants behind it — quota exhaustion is private to
+        # the tenant, so the drain skips it and keeps scanning.
+        progressed = True
+        while progressed:
+            progressed = False
+            for i, (ticket, plan) in enumerate(self._queue):
+                if not self._fits_globally(plan):
+                    return                     # head-of-line on bytes
+                if not self._fits(plan, ticket.tenant):
+                    continue                   # tenant-quota blocked: skip
+                if self.admission_hook is not None and self.admission_hook():
+                    # injected transient admission failure: leave the
+                    # entry queued; a later kick()/release retries
+                    self.preemption_stats.admission_faults += 1
+                    return
+                del self._queue[i]
+                self._admit(ticket, plan)
+                progressed = True
+                break
+
+    def kick(self) -> None:
+        """Retry queued admissions (e.g. after a transient admission fault
+        suppressed a drain, or a budget grow)."""
+        self._drain()
 
     def _admit(self, ticket: Ticket, plan: ArenaPlan) -> None:
         pbytes, extent = resident_bytes(plan)
@@ -440,6 +797,8 @@ class ArenaPool:
             persistent_bytes=pbytes,
             resident_extent=extent,
             buffer=buffer,
+            priority=ticket.priority,
+            tenant=ticket.tenant,
         )
         self._members.append(lease)
         ticket.lease = lease

@@ -1,0 +1,762 @@
+"""Chaos differential suite + preemption machinery tests (DESIGN.md §13).
+
+Three layers:
+
+  * pool-level: preempt -> spill -> re-admit round-trips, priorities,
+    per-tenant quotas, budget-shrink sweeps, structured error context;
+  * a simulated decode harness replaying a >=30-seed fault corpus against
+    the real ArenaPool (fast — no jax in the loop), asserting the chaos
+    invariants: no request lost, instantaneous budget never exceeded,
+    surviving tokens bit-equal the fault-free run;
+  * the real DecodeServer under handcrafted fault plans (tier-1) and the
+    full corpus sweep (nightly ``--runslow``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import Graph
+from repro.core.allocator import pin_transients, resident_bytes
+from repro.runtime.chaos import (
+    ChaosController,
+    FaultPlan,
+    FaultSpec,
+    TransientExecutorError,
+    seeded_corpus,
+)
+from repro.runtime.pool import ArenaPool, LeaseError, PoolError, SpilledLease
+
+
+def state_graph(n_cache: int = 3, cache_bytes: int = 400,
+                transient_bytes: int = 1200, name: str = "state") -> Graph:
+    """``n_cache`` persistent buffers + a two-node transient chain."""
+    specs = [dict(name=f"s{i}", op="cache", size_bytes=cache_bytes, preds=[])
+             for i in range(n_cache)]
+    specs.append(dict(name="h", op="act", size_bytes=transient_bytes // 2,
+                      preds=[]))
+    specs.append(dict(name="l", op="act", size_bytes=transient_bytes,
+                      preds=[len(specs) - 1]))
+    specs.append(dict(name="tok", op="act", size_bytes=4,
+                      preds=[len(specs) - 1]))
+    return Graph.build(specs, name=name)
+
+
+def alone_bytes(g: Graph, overlap: str = "serial") -> int:
+    probe = ArenaPool(1 << 40, overlap=overlap)
+    return probe._joint_extent([probe.plan(g)[1]])
+
+
+def joint_bytes(g: Graph, k: int, overlap: str = "serial") -> int:
+    probe = ArenaPool(1 << 40, overlap=overlap)
+    plan = probe.plan(g)[1]
+    return probe._joint_extent([plan] * k)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan DSL
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_generate_is_deterministic(self):
+        a = FaultPlan.generate(7, n_ticks=40, rate=0.5)
+        b = FaultPlan.generate(7, n_ticks=40, rate=0.5)
+        assert a.specs == b.specs
+        assert FaultPlan.generate(8, n_ticks=40, rate=0.5).specs != a.specs
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("meteor_strike", 1)
+        with pytest.raises(ValueError, match="tick must be >= 1"):
+            FaultSpec("admission_failure", 0)
+        with pytest.raises(ValueError, match="factor"):
+            FaultSpec("budget_shrink", 1, factor=0.0)
+
+    def test_specs_sorted_and_queryable(self):
+        plan = FaultPlan([FaultSpec("executor_error", 5),
+                          FaultSpec("budget_shrink", 2, 0.5),
+                          FaultSpec("admission_failure", 5)])
+        assert [s.tick for s in plan.specs] == [2, 5, 5]
+        assert {s.kind for s in plan.at(5)} == \
+            {"admission_failure", "executor_error"}
+        assert plan.at(3) == ()
+        assert "budget_shrink@2x0.5" in plan.describe()
+
+    def test_corpus_is_seeded_and_nonvacuous(self):
+        corpus = seeded_corpus(30, base_seed=0, n_ticks=24, rate=0.3)
+        assert len(corpus) == 30
+        assert corpus == seeded_corpus(30, base_seed=0, n_ticks=24,
+                                       rate=0.3) or \
+            [p.specs for p in corpus] == \
+            [p.specs for p in seeded_corpus(30, base_seed=0, n_ticks=24,
+                                            rate=0.3)]
+        # a corpus that injects nothing asserts nothing
+        assert sum(len(p) for p in corpus) > 30
+        kinds = {s.kind for p in corpus for s in p}
+        assert "budget_shrink" in kinds and "admission_failure" in kinds
+
+
+class TestChaosControllerHooks:
+    def test_admission_hook_fires_only_on_armed_tick(self):
+        ctl = ChaosController(FaultPlan([FaultSpec("admission_failure", 2)]))
+        ctl.begin_tick(1)
+        assert not ctl.admission_should_fail()
+        ctl.begin_tick(2)
+        assert ctl.admission_should_fail()
+        assert ctl.admission_should_fail()    # every attempt this tick
+        ctl.begin_tick(3)
+        assert not ctl.admission_should_fail()
+        assert all(s.kind == "admission_failure" for s in ctl.fired)
+
+    def test_executor_error_raises_exactly_once(self):
+        ctl = ChaosController(FaultPlan([FaultSpec("executor_error", 1)]))
+        ctl.begin_tick(1)
+        with pytest.raises(TransientExecutorError):
+            ctl.maybe_executor_error()
+        ctl.maybe_executor_error()            # disarmed after firing
+
+    def test_corrupt_blob_flips_one_byte_deterministically(self):
+        ctl = ChaosController(FaultPlan([FaultSpec("cache_corrupt", 3)]))
+        ctl.begin_tick(3)
+        blob = bytes(range(256)) * 4
+        bad = ctl.corrupt_blob(blob)
+        assert len(bad) == len(blob)
+        diff = [i for i in range(len(blob)) if bad[i] != blob[i]]
+        assert len(diff) == 1
+        # pending list consumed: the next read passes through untouched
+        assert ctl.corrupt_blob(blob) == blob
+
+    def test_budget_shrink_returned_to_driver(self):
+        ctl = ChaosController(FaultPlan([FaultSpec("budget_shrink", 4, 0.5)]))
+        assert ctl.begin_tick(1) == ()
+        specs = ctl.begin_tick(4)
+        assert len(specs) == 1 and specs[0].factor == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Pool: preempt / spill / readmit, priorities, quotas, shrink sweeps
+# ---------------------------------------------------------------------------
+
+
+class TestPreemption:
+    def test_preempt_spill_readmit_round_trip_bit_identical(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30,
+                         alloc_fn=lambda n: np.zeros(n, np.uint8))
+        t = pool.submit(g)
+        assert t.admitted
+        extent = t.lease.resident_extent
+        state = (np.arange(extent, dtype=np.uint64) % 251).astype(np.uint8)
+        sp = pool.preempt(t.lease, state=state)
+        assert t.lease not in pool.leases
+        assert sp.spill_bytes == extent
+        assert np.array_equal(sp.host_state, state)
+        assert pool.preemption_stats.preemptions == 1
+        assert pool.preemption_stats.spilled_bytes == extent
+        t2 = pool.readmit(sp)
+        assert t2.admitted
+        restored = np.array(sp.host_state, copy=True)
+        assert np.array_equal(restored, state)   # bit-identical decode state
+        assert pool.preemption_stats.readmitted == 1
+
+    def test_preempt_frees_bytes_and_drains_queue(self):
+        g = state_graph()
+        pool = ArenaPool(alone_bytes(g))          # one member max
+        t1 = pool.submit(g)
+        t2 = pool.submit(g)
+        assert t1.admitted and not t2.admitted and pool.queue_len == 1
+        pool.poll()
+        pool.preempt(t1.lease)
+        assert t2.admitted                        # freed bytes drained t2
+
+    def test_preempt_candidate_lowest_priority_youngest(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30)
+        lo_old = pool.submit(g, priority=1).lease
+        hi = pool.submit(g, priority=5).lease
+        lo_new = pool.submit(g, priority=1).lease
+        assert pool.preempt_candidate() is lo_new  # min prio, youngest rid
+        pool.preempt(lo_new)
+        assert pool.preempt_candidate() is lo_old
+        pool.preempt(lo_old)
+        assert pool.preempt_candidate() is hi
+        pool.release(hi)
+        assert pool.preempt_candidate() is None
+
+    def test_preempt_released_lease_raises_double_free(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30)
+        t = pool.submit(g)
+        pool.release(t.lease)
+        with pytest.raises(LeaseError) as ei:
+            pool.preempt(t.lease)
+        assert ei.value.code == "double_free"
+
+    def test_downgrade_repoints_spill_at_memory_class(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30)
+        key, plan = pool.plan(g)
+        pool.register_pareto(key, {"memory": plan,
+                                   "latency": pin_transients(plan)})
+        t = pool.submit(g, key=key, klass="latency")
+        assert t.admitted and t.lease.key == f"{key}@latency"
+        sp = pool.preempt(t.lease)
+        assert sp.klass == "latency"
+        pool.downgrade(sp, "memory")
+        assert sp.klass == "memory" and sp.key == f"{key}@memory"
+        assert sp.plan is plan
+        t2 = pool.readmit(sp)
+        assert t2.admitted and t2.lease.key == f"{key}@memory"
+        with pytest.raises(PoolError) as ei:
+            pool.downgrade(sp, "turbo")
+        assert ei.value.code == "unknown_class"
+
+    def test_readmit_backs_off_until_bytes_free(self):
+        g = state_graph()
+        pool = ArenaPool(joint_bytes(g, 2))
+        t1, t2 = pool.submit(g), pool.submit(g)
+        sp = pool.preempt(t1.lease)
+        t3 = pool.submit(g)                    # takes the freed slot
+        assert t3.admitted
+        tr = pool.readmit(sp)                  # pool full again: no slot
+        assert not tr.admitted and not tr.rejected
+        sp.backoff(tick=3)
+        assert sp.attempts == 1 and sp.next_tick == 5
+        assert not sp.due(4) and sp.due(5)
+        pool.release(t2.lease)
+        assert pool.readmit(sp).admitted
+        ps = pool.preemption_stats
+        assert ps.readmit_attempts == 2 and ps.readmitted == 1
+
+    def test_readmit_rejected_when_budget_shrunk_below_plan(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30)
+        t = pool.submit(g)
+        sp = pool.preempt(t.lease)
+        pool.set_budget(16)
+        tr = pool.readmit(sp)
+        assert tr.rejected and tr.reason_code == "budget"
+        assert pool.preemption_stats.readmit_rejections == 1
+
+
+class TestQuotasAndPriorities:
+    def test_tenant_quota_never_fits_rejects_with_code(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30, tenant_quotas={"t0": 16})
+        t = pool.submit(g, tenant="t0")
+        assert t.rejected and t.reason_code == "tenant_quota"
+        assert pool.submit(g, tenant="other").admitted   # unconstrained
+
+    def test_quota_blocked_tenant_does_not_block_others(self):
+        g = state_graph()
+        alone = alone_bytes(g)
+        pool = ArenaPool(1 << 30, tenant_quotas={"a": alone})
+        ta1 = pool.submit(g, tenant="a")
+        assert ta1.admitted
+        ta2 = pool.submit(g, tenant="a")     # quota-full: queues
+        assert not ta2.admitted and not ta2.rejected
+        tb = pool.submit(g, tenant="b")      # other tenant must not wait
+        assert tb.admitted
+        report = pool.queue_report()
+        assert len(report) == 1 and report[0]["tenant"] == "a"
+        assert "quota" in report[0]["why"]
+        pool.release(ta1.lease)              # quota freed: ta2 drains
+        assert ta2.admitted
+        assert pool.tenant_usage("a") == alone
+
+    def test_priority_and_tenant_recorded_on_lease(self):
+        g = state_graph()
+        pool = ArenaPool(1 << 30, tenant_quotas={"vip": 1 << 20})
+        t = pool.submit(g, priority=7, tenant="vip")
+        assert t.lease.priority == 7 and t.lease.tenant == "vip"
+
+
+class TestBudgetShrink:
+    def test_shrink_sweeps_never_fitting_queue_entries(self):
+        g = state_graph()
+        alone = alone_bytes(g)
+        pool = ArenaPool(joint_bytes(g, 2))
+        tickets = [pool.submit(g) for _ in range(4)]
+        assert [t.admitted for t in tickets] == [True, True, False, False]
+        over = pool.set_budget(alone - 1)     # nothing fits this any more
+        assert over > 0                       # members now over budget
+        swept = pool.poll_rejected()
+        assert {t.rid for t in swept} == {tickets[2].rid, tickets[3].rid}
+        assert all(t.reason_code == "budget_shrunk" for t in swept)
+        ps = pool.preemption_stats
+        assert ps.budget_shrinks == 1 and ps.budget_evictions == 2
+
+    def test_shrink_keeps_still_fitting_queue_entries(self):
+        g = state_graph()
+        pool = ArenaPool(joint_bytes(g, 2))
+        for _ in range(3):
+            pool.submit(g)
+        assert pool.queue_len == 1
+        pool.set_budget(joint_bytes(g, 2) - 1)   # single plan still fits
+        assert pool.queue_len == 1 and not pool.poll_rejected()
+
+    def test_grow_drains_queue(self):
+        g = state_graph()
+        pool = ArenaPool(alone_bytes(g))
+        t1, t2 = pool.submit(g), pool.submit(g)
+        assert t1.admitted and not t2.admitted
+        assert pool.set_budget(1 << 30) == 0
+        assert t2.admitted
+
+    def test_negative_budget_structured_error(self):
+        pool = ArenaPool(1 << 20)
+        with pytest.raises(PoolError) as ei:
+            pool.set_budget(-1)
+        assert ei.value.code == "bad_budget"
+        assert ei.value.context["requested_bytes"] == -1
+
+
+class TestPoolErrorContext:
+    def test_scratch_overflow_carries_numbers(self):
+        g = state_graph()
+        pool = ArenaPool(alone_bytes(g))
+        pool.submit(g)
+        with pytest.raises(PoolError) as ei:
+            pool.reserve_scratch(1 << 30)
+        e = ei.value
+        assert e.code == "scratch_overflow"
+        assert e.requested_bytes == 1 << 30
+        assert e.budget_bytes == pool.budget_bytes
+        assert e.reserved_bytes is not None and e.queue_depth == 0
+        assert set(e.context) >= {"code", "requested_bytes", "budget_bytes"}
+
+    def test_admission_fault_hook_counts_and_kick_retries(self):
+        g = state_graph()
+        fail = [True]
+        pool = ArenaPool(1 << 30, admission_hook=lambda: fail[0])
+        t = pool.submit(g)
+        assert not t.admitted and not t.rejected     # transiently blocked
+        assert pool.preemption_stats.admission_faults == 1
+        fail[0] = False
+        pool.kick()
+        assert t.admitted
+
+
+# ---------------------------------------------------------------------------
+# Simulated chaos differential suite (>=30-seed corpus, no jax in the loop)
+# ---------------------------------------------------------------------------
+
+
+class SimServer:
+    """DecodeServer's scheduling loop with a synthetic deterministic decode.
+
+    State is a real byte array spilled/restored through the real
+    ArenaPool; the "decode" is a deterministic elementwise update whose
+    tokens depend only on (rid, t) — so any divergence from the
+    fault-free run is a scheduling bug, not noise.
+    """
+
+    GEN = 6
+
+    def __init__(self, pool: ArenaPool, graph: Graph,
+                 chaos: ChaosController | None = None,
+                 max_readmit_attempts: int = 5):
+        self.pool, self.graph, self.chaos = pool, graph, chaos
+        if chaos is not None:
+            pool.admission_hook = chaos.admission_should_fail
+        self.key, self.plan = pool.plan(graph)
+        self.extent = resident_bytes(self.plan)[1]
+        self.tick = 0
+        self.tickets: dict[int, dict] = {}
+        self.active: list[dict] = []
+        self.spilled: list[dict] = []
+        self.done: list[dict] = []
+        self.max_readmit_attempts = max_readmit_attempts
+        self.max_over = -(1 << 62)
+        self.transient_errors = 0
+
+    def submit(self, rid: int, priority: int = 0,
+               tenant: str | None = None) -> None:
+        req = dict(rid=rid, tokens=[], t=0, state=None, lease=None,
+                   spill=None, priority=priority, tenant=tenant,
+                   rejected=False, reject_code="")
+        t = self.pool.submit(self.graph, key=self.key, priority=priority,
+                             tenant=tenant)
+        if t.rejected:
+            self._reject(req, t.reason_code)
+        else:
+            self.tickets[t.rid] = req
+
+    def _fresh_state(self, rid: int) -> np.ndarray:
+        return ((np.arange(self.extent, dtype=np.uint64) * (rid + 3))
+                % 251).astype(np.uint8)
+
+    def _evolve(self, req: dict) -> None:
+        req["state"] = ((req["state"].astype(np.uint64) * 33
+                         + req["rid"] + req["t"]) % 256).astype(np.uint8)
+        req["t"] += 1
+        req["tokens"].append(int(req["state"][:64].sum()))
+
+    def _start(self, ticket) -> None:
+        req = self.tickets.pop(ticket.rid)
+        req["lease"] = ticket.lease
+        if req["spill"] is not None:
+            req["state"] = req["spill"].host_state.copy()
+            req["spill"] = None
+        else:
+            req["state"] = self._fresh_state(req["rid"])
+        self.active.append(req)
+
+    def _reject(self, req: dict, code: str) -> None:
+        req["rejected"], req["reject_code"] = True, code
+        req["spill"] = None
+        self.done.append(req)
+
+    def _collect_rejected(self) -> None:
+        for t in self.pool.poll_rejected():
+            req = self.tickets.pop(t.rid, None)
+            if req is not None:
+                self._reject(req, t.reason_code)
+
+    def _enforce_budget(self) -> None:
+        while self.pool.reserved_bytes > self.pool.budget_bytes \
+                and self.active:
+            victim = min(self.active,
+                         key=lambda r: (r["priority"], -r["lease"].rid))
+            sp = self.pool.preempt(victim["lease"], state=victim["state"])
+            victim["lease"] = victim["state"] = None
+            sp.next_tick = self.tick + 1
+            victim["spill"] = sp
+            self.active.remove(victim)
+            self.spilled.append(victim)
+
+    def _retry_spilled(self) -> None:
+        still = []
+        for req in self.spilled:
+            sp = req["spill"]
+            if not sp.due(self.tick):
+                still.append(req)
+                continue
+            t = self.pool.readmit(sp)
+            if t.rejected:
+                self._reject(req, t.reason_code)
+            elif t.admitted:
+                self.tickets[t.rid] = req
+            else:
+                sp.backoff(self.tick)
+                if sp.attempts > self.max_readmit_attempts:
+                    self._reject(req, "readmit_exhausted")
+                else:
+                    still.append(req)
+        self.spilled = still
+
+    def step(self) -> None:
+        self.tick += 1
+        shrinks = ()
+        if self.chaos is not None:
+            shrinks = self.chaos.begin_tick(self.tick)
+        self.pool.kick()
+        self._collect_rejected()
+        for t in self.pool.poll():
+            self._start(t)
+        for s in shrinks:
+            if s.kind == "budget_shrink":
+                self.pool.set_budget(
+                    max(1, int(self.pool.budget_bytes * s.factor)))
+                self._collect_rejected()
+                self._enforce_budget()
+        self._retry_spilled()
+        for t in self.pool.poll():
+            self._start(t)
+        try:
+            if self.chaos is not None:
+                self.chaos.maybe_executor_error()
+            for req in self.active:
+                self._evolve(req)
+        except TransientExecutorError:
+            self.transient_errors += 1      # state untouched: retry next tick
+        still = []
+        for req in self.active:
+            if req["t"] >= self.GEN:
+                self.pool.release(req["lease"])
+                req["lease"] = None
+                self.done.append(req)
+            else:
+                still.append(req)
+        self.active = still
+        self.max_over = max(self.max_over, self.pool.reserved_bytes
+                            - self.pool.budget_bytes)
+
+    def run(self, n_req: int, priorities=(0, 1, 2),
+            max_ticks: int = 500) -> dict[int, dict]:
+        for i in range(n_req):
+            self.submit(i, priority=priorities[i % len(priorities)])
+        while (self.active or self.tickets or self.spilled) \
+                and self.tick < max_ticks:
+            self.step()
+        assert not (self.active or self.tickets or self.spilled), \
+            f"sim did not converge in {max_ticks} ticks"
+        return {r["rid"]: r for r in self.done}
+
+
+N_REQ = 8
+CORPUS_SEEDS = 32
+
+
+def _fault_free_tokens() -> dict[int, list[int]]:
+    g = state_graph()
+    sim = SimServer(ArenaPool(joint_bytes(g, 3)), g)
+    done = sim.run(N_REQ)
+    assert all(not r["rejected"] for r in done.values())
+    return {rid: r["tokens"] for rid, r in done.items()}
+
+
+class TestChaosInvariantsSim:
+    @pytest.fixture(scope="class")
+    def baseline(self):
+        return _fault_free_tokens()
+
+    @pytest.mark.parametrize("seed", range(CORPUS_SEEDS))
+    def test_corpus_invariants(self, baseline, seed):
+        g = state_graph()
+        plan = FaultPlan.generate(seed, n_ticks=24, rate=0.35)
+        pool = ArenaPool(joint_bytes(g, 3))
+        sim = SimServer(pool, g, chaos=ChaosController(plan))
+        done = sim.run(N_REQ)
+        # invariant 1: no request lost — every submit completed or was
+        # rejected with a machine-readable reason code
+        assert set(done) == set(range(N_REQ))
+        for rid, r in done.items():
+            if r["rejected"]:
+                assert r["reject_code"], f"rid {rid} rejected without code"
+            else:
+                # invariant 3: surviving tokens bit-equal the fault-free run
+                assert r["tokens"] == baseline[rid], \
+                    f"rid {rid} tokens diverged under {plan.describe()}"
+        # invariant 2: realized arena bytes never exceeded the
+        # instantaneous (post-ladder) budget at any tick boundary
+        assert sim.max_over <= 0
+
+    def test_corpus_exercises_the_machinery(self):
+        """The corpus must actually fire faults and drive preemptions —
+        a quiet corpus would make the invariant suite vacuous."""
+        g = state_graph()
+        totals = {"fired": 0, "preempted": 0, "readmitted": 0,
+                  "faulted_admissions": 0, "rejected": 0}
+        for seed in range(CORPUS_SEEDS):
+            plan = FaultPlan.generate(seed, n_ticks=24, rate=0.35)
+            pool = ArenaPool(joint_bytes(g, 3))
+            ctl = ChaosController(plan)
+            sim = SimServer(pool, g, chaos=ctl)
+            done = sim.run(N_REQ)
+            ps = pool.preemption_stats
+            totals["fired"] += ctl.n_fired
+            totals["preempted"] += ps.preemptions
+            totals["readmitted"] += ps.readmitted
+            totals["faulted_admissions"] += ps.admission_faults
+            totals["rejected"] += sum(r["rejected"] for r in done.values())
+        assert totals["fired"] > CORPUS_SEEDS
+        assert totals["preempted"] > 0
+        assert totals["readmitted"] > 0
+        assert totals["faulted_admissions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# The real DecodeServer under injected faults
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    jax = pytest.importorskip("jax")
+    import repro.configs as configs
+    from repro.models.zoo import build_model
+
+    cfg = configs.smoke("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+PROMPT, GEN = 4, 3
+
+
+def _serve(smoke_model, *, chaos=None, budget_k=3, n_req=4,
+           latency_frac=0.5, **kw):
+    from repro.core import plan_shared_arena
+    from repro.launch.serve import (
+        plan_decode_arena,
+        run_server,
+        synth_requests,
+    )
+
+    _, model, params = smoke_model
+    smax = PROMPT + GEN
+    plan = plan_decode_arena(model, 1, smax)
+    budget = plan_shared_arena([plan["plan"]] * budget_k).arena_bytes
+    reqs = synth_requests(n_req, PROMPT, GEN, model.cfg.vocab_size, seed=3,
+                          latency_frac=latency_frac, priorities=(0, 1))
+    m = run_server(model, params, reqs, smax=smax, budget_bytes=budget,
+                   warm=1, chaos=chaos, **kw)
+    return reqs, m
+
+
+def _token_map(reqs) -> dict[int, list[int]]:
+    return {r.rid: list(r.tokens) for r in reqs if not r.rejected}
+
+
+class TestChaosServerReal:
+    def test_mid_run_shrink_walks_ladder_and_preserves_tokens(
+            self, smoke_model):
+        base_reqs, base_m = _serve(smoke_model)
+        plan = FaultPlan([FaultSpec("budget_shrink", 2, 0.5)])
+        reqs, m = _serve(smoke_model, chaos=ChaosController(plan))
+        assert m["budget_shrinks"] == 1
+        assert m["min_budget_bytes"] < base_m["budget_bytes"]
+        # the shrink forced the ladder to shed bytes by preempting
+        assert m["n_preempted"] >= 1
+        assert sum(m["ladder"].values()) >= 1
+        assert m["spill_bytes"] > 0
+        # invariant 2: never over the instantaneous budget at a tick edge
+        assert m["max_over_budget_bytes"] <= 0
+        # invariant 1: no request lost
+        assert m["n_served"] + m["n_rejected"] == len(reqs)
+        for r in reqs:
+            if r.rejected:
+                assert r.reject_code
+        # invariant 3: every surviving request's tokens bit-equal the
+        # fault-free run — the preempt -> spill -> re-admit round-trip
+        # restored decode state exactly
+        base_tok = _token_map(base_reqs)
+        for rid, toks in _token_map(reqs).items():
+            assert toks == base_tok[rid]
+
+    def test_transient_executor_error_is_retried(self, smoke_model):
+        base_reqs, _ = _serve(smoke_model)
+        plan = FaultPlan([FaultSpec("executor_error", 2)])
+        reqs, m = _serve(smoke_model, chaos=ChaosController(plan))
+        assert m["transient_errors"] == 1
+        assert m["n_served"] == len(reqs)
+        assert _token_map(reqs) == _token_map(base_reqs)
+
+    def test_admission_fault_delays_but_loses_nothing(self, smoke_model):
+        base_reqs, _ = _serve(smoke_model)
+        plan = FaultPlan([FaultSpec("admission_failure", 1),
+                          FaultSpec("admission_failure", 2)])
+        reqs, m = _serve(smoke_model, chaos=ChaosController(plan))
+        assert m["admission_faults"] >= 1
+        assert m["n_served"] == len(reqs)
+        assert _token_map(reqs) == _token_map(base_reqs)
+
+    def test_generated_corpus_smoke_subset(self, smoke_model):
+        """Tier-1 slice of the corpus against the real server (the full
+        sweep runs nightly — see the slow test below)."""
+        base_reqs, _ = _serve(smoke_model)
+        base_tok = _token_map(base_reqs)
+        for seed in (0, 1):
+            plan = FaultPlan.generate(seed, n_ticks=8, rate=0.4)
+            reqs, m = _serve(smoke_model, chaos=ChaosController(plan))
+            assert m["n_served"] + m["n_rejected"] == len(reqs)
+            assert m["max_over_budget_bytes"] <= 0
+            for rid, toks in _token_map(reqs).items():
+                assert toks == base_tok[rid], plan.describe()
+
+    @pytest.mark.slow
+    def test_generated_corpus_full_sweep(self, smoke_model):
+        base_reqs, _ = _serve(smoke_model)
+        base_tok = _token_map(base_reqs)
+        for seed in range(CORPUS_SEEDS):
+            plan = FaultPlan.generate(seed, n_ticks=8, rate=0.4)
+            reqs, m = _serve(smoke_model, chaos=ChaosController(plan))
+            assert m["n_served"] + m["n_rejected"] == len(reqs)
+            assert m["max_over_budget_bytes"] <= 0
+            for rid, toks in _token_map(reqs).items():
+                assert toks == base_tok[rid], plan.describe()
+
+
+class TestWatchdogAndStallDiagnostics:
+    def test_stall_error_carries_structured_report(self, smoke_model):
+        from repro.launch.serve import (
+            DecodeServer,
+            ServingStallError,
+            make_pool,
+            plan_decode_arena,
+            synth_requests,
+        )
+
+        _, model, params = smoke_model
+        smax = PROMPT + GEN
+        plan = plan_decode_arena(model, 1, smax)
+        pool = make_pool(4 * plan["arena_bytes"])
+        server = DecodeServer(model, params, pool, smax=smax)
+        # a hook that always fails models a broken allocator: the queue can
+        # provably never drain, and the server must escalate with the
+        # queued requests' identities and _fits reasons — not just a count
+        pool.admission_hook = lambda: True
+        reqs = synth_requests(2, PROMPT, GEN, model.cfg.vocab_size, seed=5,
+                              latency_frac=0.5, priorities=(2, 9))
+        with pytest.raises(ServingStallError) as ei:
+            server.run(reqs)
+        e = ei.value
+        assert "serving stalled" in str(e)
+        assert len(e.report["queued"]) == 2
+        q0 = e.report["queued"][0]
+        assert {"rid", "klass", "priority", "tenant", "why"} <= set(q0)
+        assert q0["why"] == "admissible"      # bytes fit; the hook blocked
+        assert f"rid={q0['rid']}" in str(e)
+        assert e.report["budget_bytes"] == pool.budget_bytes
+        assert server.last_stall is e.report
+
+    def test_watchdog_escalates_after_stall_ticks(self, smoke_model):
+        from repro.launch.serve import (
+            DecodeServer,
+            ServingStallError,
+            make_pool,
+            plan_decode_arena,
+            synth_requests,
+        )
+
+        _, model, params = smoke_model
+        smax = PROMPT + GEN
+        plan = plan_decode_arena(model, 1, smax)
+        pool = make_pool(4 * plan["arena_bytes"])
+        # chaos present: the provably-stalled fast path defers to the
+        # watchdog, which must escalate after stall_ticks quiet ticks
+        chaos = ChaosController(FaultPlan())
+        server = DecodeServer(model, params, pool, smax=smax, chaos=chaos,
+                              stall_ticks=5)
+        pool.admission_hook = lambda: True
+        reqs = synth_requests(1, PROMPT, GEN, model.cfg.vocab_size, seed=5)
+        with pytest.raises(ServingStallError):
+            server.run(reqs)
+        assert server.watchdog.escalations == 1
+        assert server.watchdog.ticks == 5
+
+    def test_step_deadline_misses_counted(self, smoke_model):
+        from repro.launch.serve import (
+            DecodeServer,
+            make_pool,
+            plan_decode_arena,
+            synth_requests,
+        )
+
+        _, model, params = smoke_model
+        smax = PROMPT + GEN
+        plan = plan_decode_arena(model, 1, smax)
+        pool = make_pool(4 * plan["arena_bytes"])
+        server = DecodeServer(model, params, pool, smax=smax,
+                              step_deadline_s=0.0)   # every tick misses
+        reqs = synth_requests(2, PROMPT, GEN, model.cfg.vocab_size, seed=5)
+        m = server.run(reqs)
+        assert m["n_served"] == 2
+        assert m["watchdog"]["deadline_misses"] == m["watchdog"]["ticks"]
+        assert m["watchdog"]["ticks"] == m["steps"]
+
+    def test_watchdog_observe_unit(self):
+        from repro.launch.serve import TickWatchdog
+
+        wd = TickWatchdog(step_deadline_s=1.0, stall_ticks=3)
+        assert not wd.observe(0.1, progressed=True)
+        assert wd.deadline_misses == 0
+        assert not wd.observe(2.0, progressed=False)
+        assert wd.deadline_misses == 1 and wd.slowest_tick_s == 2.0
+        assert not wd.observe(0.1, progressed=False)
+        assert wd.observe(0.1, progressed=False)     # 3rd quiet tick
+        assert wd.escalations == 1 and wd.stagnant_ticks == 0

@@ -204,3 +204,49 @@ def test_real_baseline_self_diff_is_clean(capsys, tmp_path):
                 for r in json.load(f).get("rows", [])}
     out = _run(capsys, rows, dict(rows), tmp_path)
     assert not _warnings(out)
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving rows (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_byte_watermarks_are_thresholded_not_exact(capsys,
+                                                            tmp_path):
+    # spill_bytes / min_budget_bytes scale with load: small drift is
+    # silent, >2x growth warns — same unit-aware regime as peak_*bytes
+    base = {"serving/degraded_shrink":
+            "spill_bytes=36100;min_budget_bytes=25740;n_preempted=1"}
+    out = _run(capsys, base,
+               {"serving/degraded_shrink":
+                "spill_bytes=40000;min_budget_bytes=30000;n_preempted=1"},
+               tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys, base,
+               {"serving/degraded_shrink":
+                "spill_bytes=80000;min_budget_bytes=25740;n_preempted=1"},
+               tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "spill_bytes regressed >2x" in w[0]
+
+
+def test_degraded_counters_still_exact_diff(capsys, tmp_path):
+    # the ladder rung counters are deterministic: any drift warns
+    out = _run(capsys,
+               {"serving/degraded_shrink": "n_preempted=1;ladder_replan=1"},
+               {"serving/degraded_shrink": "n_preempted=3;ladder_replan=1"},
+               tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "n_preempted drifted 1 -> 3" in w[0]
+
+
+def test_degraded_latency_keys_keep_duration_tripwire(capsys, tmp_path):
+    # p99 under pressure: exempt from exact diff, tripwired above 2x
+    out = _run(capsys,
+               {"serving/degraded_shrink": "p99_ms=2605.5"},
+               {"serving/degraded_shrink": "p99_ms=2900.0"}, tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys,
+               {"serving/degraded_shrink": "p99_ms=2605.5"},
+               {"serving/degraded_shrink": "p99_ms=6000.0"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "latency p99_ms regressed >2x" in w[0]

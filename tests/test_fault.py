@@ -1,0 +1,148 @@
+"""Direct tests for runtime/fault.py: StepTimer straggler flagging and
+FaultTolerantLoop bounded retry / checkpoint restore / SIGTERM shutdown.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.runtime.fault import FaultTolerantLoop, StepTimer
+
+# ---------------------------------------------------------------------------
+# StepTimer
+# ---------------------------------------------------------------------------
+
+
+class TestStepTimer:
+    def test_no_flag_before_warmup(self):
+        t = StepTimer()
+        for _ in range(6):
+            assert not t.observe(0.01)
+        # 7 samples < the 8-sample warmup: even a huge step is not flagged
+        assert not t.observe(100.0)
+        assert t.stragglers == 0
+        # the 8th sample crosses the warmup: now it is flagged
+        assert t.observe(100.0)
+        assert t.stragglers == 1
+
+    def test_flags_outlier_against_moving_median(self):
+        t = StepTimer(straggler_factor=2.5)
+        for _ in range(10):
+            t.observe(0.01)
+        assert t.observe(0.1)            # 10x the median
+        assert not t.observe(0.02)       # 2x: under the 2.5x factor
+        assert t.stragglers == 1
+
+    def test_window_is_bounded(self):
+        t = StepTimer(window=8)
+        for i in range(50):
+            t.observe(0.01 + i * 1e-6)
+        assert len(t.history) == 8
+
+
+# ---------------------------------------------------------------------------
+# FaultTolerantLoop
+# ---------------------------------------------------------------------------
+
+
+def _batches(start: int):
+    """Deterministic restartable stream: batch i is the float i."""
+    i = start
+    while True:
+        yield float(i)
+        i += 1
+
+
+def _loop(tmp_path, step_fn, **kw) -> FaultTolerantLoop:
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=10)
+    return FaultTolerantLoop(step_fn, mgr, _batches, **kw)
+
+
+def _state():
+    return {"w": np.zeros((), np.float64)}
+
+
+class TestFaultTolerantLoop:
+    def test_happy_path_checkpoints_and_counts(self, tmp_path):
+        def step(state, batch):
+            return {"w": state["w"] + batch}, {"loss": batch}
+
+        loop = _loop(tmp_path, step, ckpt_every=2)
+        seen = []
+        state, step_no = loop.run(_state(), 0, 5,
+                                  on_metrics=lambda s, m: seen.append(s))
+        assert step_no == 5
+        assert float(state["w"]) == sum(range(5))    # b0..b4
+        assert seen == [1, 2, 3, 4, 5]
+        assert latest_step(loop.ckpt.dir) == 5       # final save
+        assert len(loop.timer.history) == 5
+
+    def test_transient_failure_restores_from_checkpoint(self, tmp_path):
+        fails = {3: 1}                                # fail once at step 3
+
+        def step(state, batch):
+            step_no = int(round(float(batch)))
+            if fails.get(step_no):
+                fails[step_no] -= 1
+                raise RuntimeError("injected transient step failure")
+            return {"w": state["w"] + batch}, {}
+
+        loop = _loop(tmp_path, step, ckpt_every=2, max_retries=3)
+        state, step_no = loop.run(_state(), 0, 6)
+        # restored from the step-2 checkpoint and replayed: the final state
+        # must equal the clean run bit-for-bit (batches are step-indexed)
+        assert step_no == 6
+        assert float(state["w"]) == sum(range(6))
+
+    def test_retry_budget_exhaustion_raises(self, tmp_path):
+        def step(state, batch):
+            raise RuntimeError("permanent failure")
+
+        loop = _loop(tmp_path, step, ckpt_every=100, max_retries=2)
+        with pytest.raises(RuntimeError, match="permanent failure"):
+            loop.run(_state(), 0, 5)
+
+    def test_retry_counter_resets_on_success(self, tmp_path):
+        # two separate single-step failures: each is retried independently
+        # and must not accumulate toward the retry budget
+        fails = {1: 1, 3: 1}
+
+        def step(state, batch):
+            step_no = int(round(float(batch)))
+            if fails.get(step_no):
+                fails[step_no] -= 1
+                raise RuntimeError("transient")
+            return {"w": state["w"] + batch}, {}
+
+        loop = _loop(tmp_path, step, ckpt_every=1, max_retries=1)
+        state, step_no = loop.run(_state(), 0, 5)
+        assert step_no == 5
+        assert float(state["w"]) == sum(range(5))
+
+    def test_sigterm_checkpoints_before_exit(self, tmp_path):
+        prev = signal.getsignal(signal.SIGTERM)
+        try:
+            stop_at = 3
+
+            def step(state, batch):
+                step_no = int(round(float(batch)))
+                if step_no == stop_at:
+                    # preemption notice mid-training: the handler runs
+                    # between steps and must checkpoint before exiting
+                    os.kill(os.getpid(), signal.SIGTERM)
+                return {"w": state["w"] + batch}, {}
+
+            loop = _loop(tmp_path, step, ckpt_every=100)
+            state, step_no = loop.run(_state(), 0, 100)
+            assert loop._stop
+            assert step_no == stop_at + 1            # stopped early
+            # the exit checkpoint holds the full progress so far
+            assert latest_step(loop.ckpt.dir) == step_no
+            assert float(state["w"]) == sum(range(stop_at + 1))
+        finally:
+            signal.signal(signal.SIGTERM, prev)

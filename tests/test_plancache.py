@@ -349,3 +349,158 @@ def test_pareto_and_peak_plans_do_not_alias():
     assert plan(g, PlanConfig(), cache=pc) is r_peak
     assert plan(g, PlanConfig(objective="pareto", max_width=2),
                 cache=pc) is r_par
+
+# -- disk corruption (DESIGN.md §13) -----------------------------------------
+
+
+def _put_one(tmp_path, payload="payload", options=("t",)):
+    """Seed a disk-backed cache with one entry; return (graph, path)."""
+    g = _chain3()
+    pc = PlanCache(disk_dir=str(tmp_path))
+    pc.put(g, options, payload)
+    path = pc._disk_path(pc.key_for(g, options))
+    assert path is not None and __import__("os").path.exists(path)
+    return g, path
+
+
+class TestBlobFrame:
+    def test_round_trip(self):
+        from repro.core.plancache import frame_blob, unframe_blob
+
+        payload = pickle.dumps({"order": [0, 1, 2]})
+        blob = frame_blob(payload)
+        assert blob != payload                # frame actually prepends bytes
+        assert unframe_blob(blob) == payload
+
+    def test_rejects_truncation_garbage_and_stale_schema(self):
+        import struct
+        import zlib
+
+        from repro.core.plancache import (
+            SCHEMA_VERSION,
+            frame_blob,
+            unframe_blob,
+        )
+
+        payload = pickle.dumps(list(range(64)))
+        blob = frame_blob(payload)
+        # truncated write: anything shorter than the full blob fails CRC
+        assert unframe_blob(blob[: len(blob) // 2]) is None
+        assert unframe_blob(b"") is None
+        assert unframe_blob(blob[:7]) is None          # shorter than header
+        # single flipped payload bit
+        bad = bytearray(blob)
+        bad[-1] ^= 0x40
+        assert unframe_blob(bytes(bad)) is None
+        # wrong magic
+        assert unframe_blob(b"XXXX" + blob[4:]) is None
+        # intact blob from an older code version: schema field catches what
+        # CRC cannot
+        stale = struct.pack(
+            "<4sII", b"RPLN", SCHEMA_VERSION - 1, zlib.crc32(payload)
+        ) + payload
+        assert unframe_blob(stale) is None
+
+
+class TestDiskCorruptionEviction:
+    def _fresh_get(self, tmp_path, g, options=("t",)):
+        pc = PlanCache(disk_dir=str(tmp_path))
+        return pc, pc.get(g, options)
+
+    def test_truncated_write_is_counted_and_evicted(self, tmp_path):
+        import os
+
+        g, path = _put_one(tmp_path)
+        with open(path, "rb") as f:
+            blob = f.read()
+        with open(path, "wb") as f:
+            f.write(blob[: len(blob) // 2])
+        pc, got = self._fresh_get(tmp_path, g)
+        assert got is None                    # clean miss, not poison
+        assert pc.stats.corrupt == 1
+        assert pc.stats.misses == 1
+        assert not os.path.exists(path)       # evicted on detection
+        # next read is an ordinary miss, not another corruption event
+        pc2, got2 = self._fresh_get(tmp_path, g)
+        assert got2 is None and pc2.stats.corrupt == 0
+
+    def test_garbage_bytes_are_counted_and_evicted(self, tmp_path):
+        import os
+
+        g, path = _put_one(tmp_path)
+        blob = bytearray(open(path, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF          # bit rot mid-payload
+        with open(path, "wb") as f:
+            f.write(bytes(blob))
+        pc, got = self._fresh_get(tmp_path, g)
+        assert got is None
+        assert pc.stats.corrupt == 1
+        assert not os.path.exists(path)
+
+    def test_stale_schema_blob_is_counted_and_evicted(self, tmp_path):
+        import os
+        import struct
+        import zlib
+
+        from repro.core.plancache import SCHEMA_VERSION, unframe_blob
+
+        g, path = _put_one(tmp_path)
+        payload = unframe_blob(open(path, "rb").read())
+        assert payload is not None
+        with open(path, "wb") as f:           # intact blob, older writer
+            f.write(struct.pack(
+                "<4sII", b"RPLN", SCHEMA_VERSION - 1, zlib.crc32(payload)
+            ) + payload)
+        pc, got = self._fresh_get(tmp_path, g)
+        assert got is None
+        assert pc.stats.corrupt == 1
+        assert not os.path.exists(path)
+
+    def test_framed_unpicklable_payload_is_corrupt(self, tmp_path):
+        # CRC passes but pickle.loads raises: still a counted eviction
+        from repro.core.plancache import frame_blob
+
+        g, path = _put_one(tmp_path)
+        with open(path, "wb") as f:
+            f.write(frame_blob(b"\x80\x04 not a pickle"))
+        pc, got = self._fresh_get(tmp_path, g)
+        assert got is None
+        assert pc.stats.corrupt == 1
+
+    def test_blob_hook_injects_corruption(self, tmp_path):
+        # the chaos seam: a hook-flipped bit is detected like real bit rot
+        from repro.runtime import ChaosController, FaultPlan
+
+        g, _ = _put_one(tmp_path)
+        chaos = ChaosController(FaultPlan.generate(
+            seed=3, n_ticks=4, kinds=("cache_corrupt",), rate=1.0))
+        chaos.begin_tick(1)                   # arm a cache_corrupt fault
+        pc = PlanCache(disk_dir=str(tmp_path), blob_hook=chaos.corrupt_blob)
+        assert pc.get(g, ("t",)) is None
+        assert pc.stats.corrupt == 1
+        # an idle hook passes blobs through untouched
+        _put_one(tmp_path)
+        pc2 = PlanCache(disk_dir=str(tmp_path), blob_hook=chaos.corrupt_blob)
+        assert pc2.get(g, ("t",)) == "payload"
+        assert pc2.stats.disk_hits == 1 and pc2.stats.corrupt == 0
+
+    def test_schedule_survives_corrupted_disk_tier(self, tmp_path):
+        # end-to-end: every disk entry rotten -> recompute, re-persist
+        import glob
+
+        g = randwire_graph(seed=10, n=16)
+        cold = schedule(g, cache=PlanCache(disk_dir=str(tmp_path)))
+        for path in glob.glob(str(tmp_path / "*.plan.pkl")):
+            with open(path, "r+b") as f:
+                f.truncate(9)
+        pc = PlanCache(disk_dir=str(tmp_path))
+        again = schedule(randwire_graph(seed=10, n=16), cache=pc)
+        assert pc.stats.corrupt >= 1
+        assert pc.stats.disk_hits == 0
+        assert again.order == cold.order
+        assert again.peak_bytes == cold.peak_bytes
+        # the recompute re-persisted valid frames: third process disk-hits
+        pc3 = PlanCache(disk_dir=str(tmp_path))
+        warm = schedule(randwire_graph(seed=10, n=16), cache=pc3)
+        assert pc3.stats.disk_hits == 1 and pc3.stats.corrupt == 0
+        assert warm.order == cold.order
