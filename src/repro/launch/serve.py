@@ -349,6 +349,12 @@ class DecodeServer:
         # robustness state (DESIGN.md §13)
         self.chaos = chaos
         if chaos is not None:
+            if pool.admission_hook is not None:
+                raise ValueError(
+                    "chaos= takes ownership of pool.admission_hook, but "
+                    "the pool already has one installed; construct the "
+                    "pool without admission_hook= or inject admission "
+                    "faults through the chaos FaultPlan instead")
             pool.admission_hook = chaos.admission_should_fail
         self.max_readmit_attempts = max_readmit_attempts
         self.max_transient_retries = max_transient_retries
@@ -475,6 +481,12 @@ class DecodeServer:
         pin vmap decode to exact-size batch buckets and drop any padding
         scratch.  Rung 3: preempt the lowest-priority lease outright.
         """
+        # admitted-but-unpolled tickets (an external set_budget between
+        # poll and _start) hold leases none of the rungs below can see:
+        # absorb them into the active set first so their bytes are
+        # sheddable rather than silently left over budget
+        for ticket in self.pool.poll():
+            self._start(ticket)
         lat = [r for r in self.active if r.klass == "latency"
                and r.lease is not None]
         if lat and "memory" in self.pool.pareto_classes(self._key):
@@ -513,7 +525,7 @@ class DecodeServer:
                 self._tickets[ticket.rid] = req   # restored by _start
             else:
                 sp.backoff(self._tick)
-                if sp.attempts > self.max_readmit_attempts:
+                if sp.attempts >= self.max_readmit_attempts:
                     ticket.reason_code = "readmit_exhausted"
                     ticket.reason = (
                         f"re-admission failed after {sp.attempts} attempts "

@@ -229,7 +229,8 @@ class SpilledLease:
 
     def backoff(self, tick: int) -> None:
         """Record a failed re-admission attempt; next try after 2^attempts
-        ticks (1, 2, 4, ... — exponential)."""
+        ticks counting the attempt just recorded (2, 4, 8, ... —
+        exponential)."""
         self.attempts += 1
         self.next_tick = tick + (1 << self.attempts)
 
@@ -683,25 +684,30 @@ class ArenaPool:
         bucketed vmap decode materializes beyond the active batch.  The
         reservation replaces any previous one (pass 0 to release) and is
         charged by ``_fits``, so queued requests cannot be admitted into
-        bytes the scratch is using.  Raises :class:`PoolError` when the
-        scratch does not fit over the current members.
+        bytes the scratch is using.  Raises :class:`PoolError` when a
+        *growing* reservation does not fit over the current members;
+        shrinking or releasing always succeeds — the degradation ladder
+        depends on ``reserve_scratch(0)`` even after a budget shrink has
+        left the members alone over budget.
         """
         nbytes = int(nbytes)
         if nbytes < 0:
             raise PoolError(f"negative scratch reservation {nbytes}",
                             code="bad_scratch", requested_bytes=nbytes)
-        joint = self._joint_extent([m.plan for m in self._members])
-        if joint + nbytes > self.budget_bytes:
-            raise PoolError(
-                f"scratch reservation of {nbytes} bytes does not fit: "
-                f"members reserve {joint} of {self.budget_bytes} budget "
-                f"bytes", code="scratch_overflow", requested_bytes=nbytes,
-                budget_bytes=self.budget_bytes, reserved_bytes=joint,
-                queue_depth=len(self._queue))
+        prev = self._scratch_bytes
+        if nbytes > prev:
+            joint = self._joint_extent([m.plan for m in self._members])
+            if joint + nbytes > self.budget_bytes:
+                raise PoolError(
+                    f"scratch reservation of {nbytes} bytes does not fit: "
+                    f"members reserve {joint} of {self.budget_bytes} budget "
+                    f"bytes", code="scratch_overflow", requested_bytes=nbytes,
+                    budget_bytes=self.budget_bytes, reserved_bytes=joint,
+                    queue_depth=len(self._queue))
         self._scratch_bytes = nbytes
         self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
                                              self.reserved_bytes)
-        if nbytes == 0:
+        if nbytes < prev:
             self._drain()
 
     def shared_plan(self) -> SharedArenaPlan:

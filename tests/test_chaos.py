@@ -441,7 +441,7 @@ class SimServer:
                 self.tickets[t.rid] = req
             else:
                 sp.backoff(self.tick)
-                if sp.attempts > self.max_readmit_attempts:
+                if sp.attempts >= self.max_readmit_attempts:
                     self._reject(req, "readmit_exhausted")
                 else:
                     still.append(req)
@@ -669,6 +669,113 @@ class TestChaosServerReal:
             assert m["max_over_budget_bytes"] <= 0
             for rid, toks in _token_map(reqs).items():
                 assert toks == base_tok[rid], plan.describe()
+
+
+class TestLadderRegressions:
+    """Review regressions: rung 2 must shed scratch even when the members
+    alone exceed a just-shrunk budget, the ladder must see leases held by
+    admitted-but-unpolled tickets, chaos= must not clobber a caller's
+    admission hook, and ``max_readmit_attempts`` means exactly that many
+    failed attempts."""
+
+    def _server(self, smoke_model, *, budget_k=3, **kw):
+        from repro.core import plan_shared_arena
+        from repro.launch.serve import (
+            DecodeServer,
+            make_pool,
+            plan_decode_arena,
+        )
+
+        _, model, params = smoke_model
+        smax = PROMPT + GEN
+        dplan = plan_decode_arena(model, 1, smax)
+        budget = plan_shared_arena([dplan["plan"]] * budget_k).arena_bytes
+        pool = make_pool(budget)
+        server = DecodeServer(model, params, pool, smax=smax, **kw)
+        return model, server, pool
+
+    def _drain(self, server, max_steps: int = 200) -> None:
+        steps = 0
+        while (server.active or server._tickets or server._spilled) \
+                and steps < max_steps:
+            server.step()
+            steps += 1
+        assert not (server.active or server._tickets or server._spilled)
+
+    def test_shrink_with_scratch_reserved_sheds_scratch(self, smoke_model):
+        from repro.launch.serve import synth_requests
+
+        model, server, pool = self._server(smoke_model)
+        reqs = synth_requests(2, PROMPT, GEN, model.cfg.vocab_size, seed=7)
+        for r in reqs:
+            server.submit(r)
+        server.step()
+        assert len(server.active) == 2
+        pool.reserve_scratch(64)              # e.g. vmap padding rows
+        members = pool.reserved_bytes - pool.scratch_bytes
+        # members alone now exceed the new budget: rung 1 is inert (the
+        # requests are classless), so rung 2 must shed the scratch — not
+        # crash inside reserve_scratch(0) — and rung 3 preempts
+        server.set_budget(members - 1)
+        assert pool.scratch_bytes == 0
+        assert server.ladder["shrink_buckets"] == 1
+        assert server.ladder["preempt"] >= 1
+        assert pool.reserved_bytes <= pool.budget_bytes
+        self._drain(server)
+        assert all(len(r.tokens) == GEN for r in reqs if not r.rejected)
+        assert server.max_over_budget_bytes <= 0
+
+    def test_set_budget_sees_unpolled_admissions(self, smoke_model):
+        from repro.launch.serve import synth_requests
+
+        model, server, pool = self._server(smoke_model, budget_k=2)
+        req = synth_requests(1, PROMPT, GEN, model.cfg.vocab_size, seed=9)[0]
+        server.submit(req)                    # pool admits immediately...
+        assert pool.pending_admissions == 1   # ...but nothing polled yet
+        server.set_budget(1)
+        # the ladder absorbed the pending admission and preempted its
+        # lease: nothing stays over budget, nothing is silently dropped
+        assert pool.reserved_bytes <= pool.budget_bytes
+        assert server.ladder["preempt"] == 1
+        self._drain(server)
+        assert req.rejected and req.reject_code == "budget"
+
+    def test_readmit_exhausts_after_exactly_max_attempts(self, smoke_model):
+        from repro.launch.serve import synth_requests
+
+        model, server, pool = self._server(smoke_model,
+                                           max_readmit_attempts=2)
+        req = synth_requests(1, PROMPT, GEN, model.cfg.vocab_size, seed=9)[0]
+        server.submit(req)
+        server.step()
+        assert server.active
+        server._preempt_request(server.active[0])
+        pool.admission_hook = lambda: True    # admission faulted forever
+        for _ in range(32):
+            if not server._spilled:
+                break
+            server._tick += 1
+            server._retry_spilled()
+        assert req.rejected and req.reject_code == "readmit_exhausted"
+        assert req.spill is None
+        # max_readmit_attempts=2 permits exactly 2 failed attempts
+        assert pool.preemption_stats.readmit_attempts == 2
+
+    def test_chaos_refuses_to_clobber_admission_hook(self, smoke_model):
+        from repro.launch.serve import (
+            DecodeServer,
+            make_pool,
+            plan_decode_arena,
+        )
+
+        _, model, params = smoke_model
+        smax = PROMPT + GEN
+        dplan = plan_decode_arena(model, 1, smax)
+        pool = make_pool(4 * dplan["arena_bytes"])
+        pool.admission_hook = lambda: False
+        with pytest.raises(ValueError, match="admission_hook"):
+            DecodeServer(model, params, pool, smax=smax,
+                         chaos=ChaosController(FaultPlan()))
 
 
 class TestWatchdogAndStallDiagnostics:

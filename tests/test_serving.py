@@ -226,6 +226,23 @@ class TestArenaPool:
             pool.reserve_scratch(-1)
         assert pool.scratch_bytes == 10        # failed calls change nothing
 
+    def test_scratch_release_survives_budget_shrink(self):
+        # regression: the degradation ladder's rung 2 releases scratch
+        # after a shrink may already have left the members alone over
+        # budget — shrinking/releasing the reservation must never raise,
+        # else the ladder crashes instead of shedding bytes
+        g = state_graph()
+        pool = ArenaPool(1 << 40, overlap="none")
+        pool.submit(g)
+        pool.reserve_scratch(64)
+        members = pool.reserved_bytes - pool.scratch_bytes
+        pool.set_budget(members - 1)
+        pool.reserve_scratch(32)               # shrinking succeeds
+        pool.reserve_scratch(0)                # releasing succeeds
+        assert pool.scratch_bytes == 0
+        with pytest.raises(PoolError, match="scratch"):
+            pool.reserve_scratch(1)            # growing is still checked
+
 
 # ---------------------------------------------------------------------------
 # plan_decode_arena + decode-state pack/unpack (jax/model-based)
