@@ -1,0 +1,251 @@
+"""Sharded serving fleet under open-loop load (DESIGN.md §14).
+
+Five sections, all on the deterministic simulated device step (pure byte
+arithmetic — the rows measure scheduling policy, not kernels), all seeded,
+so every tick-domain metric exact-diffs against the committed baseline:
+
+* **fleet/loadgen** — the generated workload's shape summary (arrival
+  span, prompt/gen moments, token total).  Seeds are fixed: any drift
+  here means the generator changed, not the load.
+* **fleet/sharded_4x** — the headline run: 10k+ requests (smoke: 1.5k)
+  over 4 decode shards + 1 prefill shard, each with its own `ArenaPool`
+  byte budget, plans served by one `PlannerService`.  Asserts the two
+  SLOs (p99 latency in ticks, rejection rate) plus the standing
+  invariants: **no request lost** and **no shard ever over its
+  instantaneous budget**.
+* **fleet/single_shard** — the same workload and the *same total byte
+  budget* on one decode shard (the `DecodeServer` shape: one pool, one
+  tick loop).  Asserts the 4-shard fleet sustains **>= 2.5x** its
+  throughput (tokens/tick) — the shards' independent decode lanes are
+  the win; bytes alone don't scale a single batch slot.
+* **fleet/disagg_ab** — a long-prompt workload with and without the
+  prefill lane: inline prefill visibly stalls decode ticks
+  (``prefill_stall_ticks``); the lane removes every stall and hands
+  finished prefill state to decode shards through the host-spill round
+  trip (``handoffs``), token streams bit-equal.
+* **fleet/chaos** — generated per-shard fault scripts (budget shrinks,
+  admission faults, transient executor errors) over the sharded fleet;
+  across the corpus no request is lost, budgets hold, and surviving
+  token streams bit-equal the fault-free twin.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+from repro.runtime.chaos import FaultPlan
+from repro.runtime.fleet import (
+    Fleet,
+    PlannerService,
+    bucket_key_for,
+    bucketed_records,
+)
+from repro.runtime.loadgen import OpenLoopLoadGen, workload_summary
+
+# SLOs asserted on the sharded run (tick-domain, deterministic under the
+# fixed seed — these are gates, not tripwires)
+SLO_P99_TICKS = 600.0
+SLO_REJECTION_RATE = 0.02
+
+N_DECODE = 4
+MAX_BATCH = 8
+PREFILL_CHUNK = 32
+BUCKETS = (48, 192, 2048)    # smax buckets; the 2048 plan exceeds every
+                             # shard budget -> oversize arrivals are real
+                             # router rejections, not a special case
+
+
+def _planner_and_budget():
+    planner = PlannerService()
+    records = bucketed_records(planner, BUCKETS)
+    # per-shard budget: a full decode batch of the largest servable bucket
+    budget = MAX_BATCH * records[BUCKETS[-2]].alone_bytes
+    assert records[BUCKETS[-1]].alone_bytes > budget, \
+        "oversize bucket must overflow a shard budget"
+    return planner, records, budget
+
+
+def _loadgen(seed: int = 7) -> OpenLoopLoadGen:
+    # ~3.5 arrivals/tick * ~6 tokens each ~= 21 tok/tick of decode demand
+    # against 4*8 = 32 slots: loaded but stable, so the p99 SLO is
+    # meaningful rather than queue-growth noise
+    return OpenLoopLoadGen(seed, rate=3.5, prompt_mean=28.0,
+                           prompt_sigma=0.8, prompt_max=1100,
+                           gen_mean=6.0, gen_max=32, latency_frac=0.25,
+                           priority_weights={0: 3.0, 1: 1.0},
+                           tenant_weights={"a": 2.0, "b": 1.0})
+
+
+def _fleet(planner, records, budget, *, n_decode=N_DECODE, n_prefill=1,
+           fault_plans=None) -> Fleet:
+    return Fleet(planner, key_for=bucket_key_for(records),
+                 n_decode=n_decode, n_prefill=n_prefill,
+                 shard_budget_bytes=budget, max_batch=MAX_BATCH,
+                 prefill_chunk=PREFILL_CHUNK, fault_plans=fault_plans)
+
+
+def _tokens(fleet: Fleet) -> dict[int, tuple]:
+    return {r.rid: tuple(r.tokens) for r in fleet.done}
+
+
+def _fmt(m: dict, extra: str = "") -> str:
+    s = (f"n_requests={m['n_requests']};n_served={m['n_served']};"
+         f"n_rejected={m['n_rejected']};n_lost={m['n_lost']};"
+         f"rejection_rate={m['rejection_rate']};ticks={m['ticks']};"
+         f"p50_ticks={m['p50_ticks']};p99_ticks={m['p99_ticks']};"
+         f"tokens={m['tokens']};tok_per_tick={m['tok_per_tick']};"
+         f"migrations={m['migrations']};handoffs={m['handoffs']};"
+         f"preemptions={m['preemptions']};"
+         f"max_over_budget={m['max_over_budget']};"
+         f"prefill_stall_ticks={m['prefill_stall_ticks']}")
+    return s + (";" + extra if extra else "")
+
+
+def _assert_invariants(m: dict, label: str) -> None:
+    assert m["n_lost"] == 0, \
+        f"{label}: lost {m['n_lost']} request(s) (neither served nor rejected)"
+    assert m["max_over_budget"] <= 0, (
+        f"{label}: a shard exceeded its instantaneous budget by "
+        f"{m['max_over_budget']} bytes")
+    assert m["n_served"] + m["n_rejected"] == m["n_requests"], label
+
+
+def run(csv_rows: list, smoke: bool = False) -> dict:
+    n_req = 1_500 if smoke else 10_000
+
+    # -- workload ----------------------------------------------------------
+    gen = _loadgen()
+    t0 = time.perf_counter()
+    arrivals = gen.arrivals(n_req)
+    gen_us = (time.perf_counter() - t0) * 1e6
+    ws = workload_summary(arrivals)
+    csv_rows.append((
+        "fleet/loadgen", gen_us,
+        f"n={ws['n']};span_ticks={ws['span_ticks']};"
+        f"prompt_mean={ws['prompt_mean']};prompt_p99={ws['prompt_p99']};"
+        f"gen_mean={ws['gen_mean']};tokens_total={ws['tokens_total']};"
+        f"latency_frac={ws['latency_frac']};rate={gen.rate}",
+    ))
+
+    # -- sharded fleet (the headline row + both SLOs) ----------------------
+    planner, records, budget = _planner_and_budget()
+    fleet = _fleet(planner, records, budget)
+    t0 = time.perf_counter()
+    m = fleet.run_arrivals(arrivals)
+    wall = time.perf_counter() - t0
+    _assert_invariants(m, "sharded_4x")
+    assert math.isfinite(m["p99_ticks"]), "sharded_4x: no request served"
+    assert m["p99_ticks"] <= SLO_P99_TICKS, (
+        f"p99 latency SLO violated: {m['p99_ticks']} ticks > "
+        f"{SLO_P99_TICKS} (served {m['n_served']}/{m['n_requests']})")
+    assert m["rejection_rate"] <= SLO_REJECTION_RATE, (
+        f"rejection-rate SLO violated: {m['rejection_rate']} > "
+        f"{SLO_REJECTION_RATE} ({m['n_rejected']} rejected)")
+    base_tokens = _tokens(fleet)
+    csv_rows.append((
+        "fleet/sharded_4x", wall * 1e6,
+        _fmt(m, f"n_decode={N_DECODE};n_prefill=1;"
+                f"shard_budget_bytes={budget};wall_s={wall:.3f};"
+                f"slo_p99_ticks={SLO_P99_TICKS:g};"
+                f"slo_rejection_rate={SLO_REJECTION_RATE:g}"),
+    ))
+
+    # -- single shard, same total budget (the DecodeServer shape) ----------
+    planner1, records1, _ = _planner_and_budget()
+    single = _fleet(planner1, records1, N_DECODE * budget,
+                    n_decode=1, n_prefill=0)
+    t0 = time.perf_counter()
+    m1 = single.run_arrivals(arrivals)
+    wall1 = time.perf_counter() - t0
+    _assert_invariants(m1, "single_shard")
+    gain = m["tok_per_tick"] / max(m1["tok_per_tick"], 1e-9)
+    assert gain >= 2.5, (
+        f"sharding gained only {gain:.2f}x tokens/tick over one shard "
+        f"with the same total budget (need >= 2.5x)")
+    csv_rows.append((
+        "fleet/single_shard", wall1 * 1e6,
+        _fmt(m1, f"total_budget_bytes={N_DECODE * budget};"
+                 f"sharding_gain={gain:.2f};wall_s={wall1:.3f}"),
+    ))
+
+    # -- prefill/decode disaggregation A/B ---------------------------------
+    # prompt_min >= the lane threshold (2 * PREFILL_CHUNK): every prompt
+    # is long, so the lane absorbs all prefill and stalls drop to zero
+    ab_arrivals = OpenLoopLoadGen(
+        11, rate=1.0, prompt_mean=110.0, prompt_sigma=0.4, prompt_max=900,
+        prompt_min=2 * PREFILL_CHUNK,
+        gen_mean=5.0, gen_max=16).arrivals(300 if smoke else 1_500)
+    ab = {}
+    for n_prefill in (0, 1):
+        p, r, b = _planner_and_budget()
+        f = _fleet(p, r, b, n_prefill=n_prefill)
+        t0 = time.perf_counter()
+        am = f.run_arrivals(ab_arrivals)
+        ab[n_prefill] = (am, _tokens(f), time.perf_counter() - t0)
+        _assert_invariants(am, f"disagg n_prefill={n_prefill}")
+    m0, tok0, _ = ab[0]
+    mp, tokp, wallp = ab[1]
+    assert m0["prefill_stall_ticks"] > 0, \
+        "inline prefill should visibly stall decode ticks"
+    assert mp["prefill_stall_ticks"] == 0 and mp["handoffs"] > 0, \
+        "the prefill lane should remove every stall via handoffs"
+    assert tok0 == tokp, "disaggregation changed a token stream"
+    csv_rows.append((
+        "fleet/disagg_ab", wallp * 1e6,
+        f"n={m0['n_requests']};stalls_inline={m0['prefill_stall_ticks']};"
+        f"stalls_disagg={mp['prefill_stall_ticks']};"
+        f"handoffs={mp['handoffs']};ticks_inline={m0['ticks']};"
+        f"ticks_disagg={mp['ticks']};p99_inline={m0['p99_ticks']};"
+        f"p99_disagg={mp['p99_ticks']}",
+    ))
+
+    # -- chaos corpus over the sharded fleet -------------------------------
+    chaos_arrivals = arrivals[: 400 if smoke else 1_200]
+    pc, rc, bc = _planner_and_budget()
+    twin = _fleet(pc, rc, bc)
+    twin.run_arrivals(chaos_arrivals)
+    twin_tokens = _tokens(twin)
+    seeds = range(3 if smoke else 8)
+    total_faults = preempts = 0
+    t0 = time.perf_counter()
+    for seed in seeds:
+        plans = {sid: FaultPlan.generate(seed + 13 * sid, n_ticks=60,
+                                         rate=0.15)
+                 for sid in range(N_DECODE)}
+        p, r, b = _planner_and_budget()
+        f = _fleet(p, r, b, fault_plans=plans)
+        cm = f.run_arrivals(chaos_arrivals)
+        ctx = f"chaos seed={seed}"
+        _assert_invariants(cm, ctx)
+        for rid, toks in _tokens(f).items():
+            assert toks == twin_tokens[rid], \
+                f"{ctx}: rid={rid} token stream diverged from fault-free twin"
+        total_faults += sum(len(pl) for pl in plans.values())
+        preempts += cm["preemptions"]
+    chaos_wall = time.perf_counter() - t0
+    csv_rows.append((
+        "fleet/chaos", chaos_wall * 1e6,
+        f"n={len(chaos_arrivals)};corpus={len(list(seeds))};"
+        f"faults={total_faults};preemptions={preempts};"
+        f"lost=0;over_budget=0",
+    ))
+
+    return {
+        "n_requests": n_req,
+        "p99_ticks": m["p99_ticks"],
+        "rejection_rate": m["rejection_rate"],
+        "tok_per_tick": m["tok_per_tick"],
+        "sharding_gain": gain,
+        "stalls_removed": m0["prefill_stall_ticks"],
+        "chaos_corpus": len(list(seeds)),
+    }
+
+
+if __name__ == "__main__":
+    rows: list = []
+    summary = run(rows, smoke=False)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(summary)

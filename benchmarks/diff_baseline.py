@@ -9,12 +9,17 @@ microseconds) are machine-dependent and exempt from exact comparison, but
 absolute durations in ``scheduling_time/`` rows are still sanity-checked:
 a search that got more than 2x slower than the baseline (above a small
 noise floor) warns — the tripwire for scheduling-time regressions the CI
-run annotates.  ``serving/`` rows get the same first-class treatment:
-request-latency percentiles (``p50_ms``/``p99_ms``/``wall_s``) are
-tripwired at >2x with the unit-aware noise floor, and the load-dependent
-peak-bytes columns (``peak_reserved_bytes``) warn on a >2x regression
-instead of exact-diffing (admission timing may legitimately shift them a
-little; doubling means the pool stopped sharing).  ``executor/`` rows are
+run annotates.  ``serving/`` and ``fleet/`` rows get the same first-class
+treatment: request-latency percentiles (``p50_ms``/``p99_ms``/``wall_s``)
+are tripwired at >2x with the unit-aware noise floor, and the
+load-dependent peak-bytes columns (``peak_reserved_bytes``) warn on a >2x
+regression instead of exact-diffing (admission timing may legitimately
+shift them a little; doubling means the pool stopped sharing).  Their SLO
+columns are guarded explicitly: a ``rejection_rate`` that rises past both
+an absolute point (+0.01) and 1.5x the (floored) baseline warns, and a
+latency percentile that goes from a measured value to ``NaN`` — an
+all-rejected run — or *disappears* from the smoke row entirely warns
+instead of being skipped as machine-dependent timing.  ``executor/`` rows are
 tripwired on every duration column (``*_us`` step times) with a lower,
 per-step noise floor, while their fusion-coverage counts
 (``n_regions``/``n_fused``/``max_chain``) stay exact-diffed.  ``frontier=`` values (the
@@ -38,6 +43,7 @@ intentional.
 from __future__ import annotations
 
 import json
+import math
 import re
 import sys
 
@@ -59,9 +65,17 @@ _NOISE_FLOOR = {"s": 0.05, "ms": 50.0, "us": 50_000.0}
 # executor rows measure single steps (tens of microseconds and up), so the
 # scheduling-time floor would mask every real regression: use a lower one
 _NOISE_FLOOR_EXEC = {"s": 0.0005, "ms": 0.5, "us": 500.0}
-# serving rows: latency keys eligible for the >2x duration tripwire (plain
-# `tok_per_s` etc. end in `_s` too, but are rates, not durations)
+# serving/fleet rows: latency keys eligible for the >2x duration tripwire
+# (plain `tok_per_s` etc. end in `_s` too, but are rates, not durations)
 _SERVING_LAT_KEY = re.compile(r"^(p\d+_(ms|s|us)|wall_s|latency_\w+)$")
+# rows that carry serving SLO metrics (latency percentiles, rejection rate)
+_SLO_ROW = ("serving/", "fleet/")
+# rejection-rate SLO tripwire: warn when the new rate exceeds the old by
+# more than an absolute point AND by more than 1.5x (with a floor so a
+# jump from 0.000 to 0.004 — a handful of requests — never warns)
+_REJECT_ABS_FLOOR = 0.01
+_REJECT_FACTOR = 1.5
+_REJECT_BASE_FLOOR = 0.005
 # serving rows: load-dependent byte watermarks — >2x threshold, not exact.
 # Degraded-mode rows (DESIGN.md §13) add spill_bytes / min_budget_bytes:
 # how much state the ladder preempted and how low the scripted shrink went
@@ -105,7 +119,7 @@ def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
         if not (_DURATION_KEY.search(key) or _DURATION.match(new)):
             return False
         floor = _NOISE_FLOOR_EXEC
-    elif name.startswith("serving/"):
+    elif name.startswith(_SLO_ROW):
         if not _SERVING_LAT_KEY.match(key):
             return False
     else:
@@ -118,10 +132,16 @@ def _check_time_regression(name: str, key: str, old: str, new: str) -> bool:
         fn = float(new.rstrip("smu"))
     except ValueError:
         return False
+    if math.isnan(fn) and not math.isnan(fo):
+        # the latency went from measured to NaN: nothing was served — a
+        # vacuous-SLO regression, never a silent skip
+        print(f"::warning::{name}: latency {key} became NaN "
+              f"(was {old}; zero requests served?)")
+        return True
     if fn <= floor[unit] or fo <= 0:
         return False
     if fn > _REGRESSION_FACTOR * fo:
-        kind = "latency" if name.startswith("serving/") else \
+        kind = "latency" if name.startswith(_SLO_ROW) else \
             "step time" if name.startswith("executor/") else "scheduling time"
         print(f"::warning::{name}: {kind} {key} regressed "
               f">{_REGRESSION_FACTOR:g}x: {old} -> {new}")
@@ -139,6 +159,23 @@ def _check_bytes_regression(name: str, key: str, old: str, new: str) -> bool:
         return False
     print(f"::warning::{name}: {key} regressed >{_REGRESSION_FACTOR:g}x: "
           f"{old} -> {new} bytes")
+    return True
+
+
+def _check_rejection_rate(name: str, old: str, new: str) -> bool:
+    """True (and warn) when a serving/fleet rejection rate regressed past
+    the SLO floors (see the constants above)."""
+    try:
+        fo, fn = float(old), float(new)
+    except ValueError:
+        return False
+    if fn <= fo + _REJECT_ABS_FLOOR:
+        return False
+    if fn <= _REJECT_FACTOR * max(fo, _REJECT_BASE_FLOOR):
+        return False
+    print(f"::warning::{name}: rejection_rate regressed {old} -> {new} "
+          f"(>{_REJECT_ABS_FLOOR:g} absolute and "
+          f">{_REJECT_FACTOR:g}x the baseline)")
     return True
 
 
@@ -216,6 +253,10 @@ def _differs(a: str, b: str) -> bool:
         fa, fb = float(a), float(b)
     except ValueError:
         return a != b
+    if math.isnan(fa) or math.isnan(fb):
+        # NaN on one side only is a drift (e.g. a latency that stopped
+        # being measurable); NaN == NaN for diffing purposes
+        return math.isnan(fa) != math.isnan(fb)
     if fa == fb:
         return False
     return abs(fa - fb) > _REL_TOL * max(abs(fa), abs(fb))
@@ -242,10 +283,18 @@ def main() -> None:
                 # Pareto frontier: structural point-by-point diff
                 warnings += _check_frontier(name, key, b[key], n[key])
                 continue
-            if name.startswith("serving/") and _SERVING_BYTES_KEY.match(key):
+            if name.startswith(_SLO_ROW) and _SERVING_BYTES_KEY.match(key):
                 # load-dependent watermark: >2x threshold, not exact diff
                 if _check_bytes_regression(name, key, b[key], n[key]):
                     warnings += 1
+                continue
+            if name.startswith(_SLO_ROW) and key == "rejection_rate":
+                # SLO row: floored threshold check, not exact diff
+                if _check_rejection_rate(name, b[key], n[key]):
+                    warnings += 1
+                elif _differs(b[key], n[key]):
+                    print(f"note: {name}: rejection_rate moved "
+                          f"{b[key]} -> {n[key]} (within SLO floors)")
                 continue
             if not _deterministic(key) or _DURATION.match(b[key]) \
                     or _DURATION.match(n[key]):
@@ -260,6 +309,14 @@ def main() -> None:
                       f"{b[key]} -> {n[key]}")
         for key in sorted(b.keys() - n.keys()):
             if not _deterministic(key):
+                # timing keys come and go with the machine — except the
+                # serving latency SLO columns: a p50/p99 that stops being
+                # reported is a bench silently dropping its gate
+                if name.startswith(_SLO_ROW) \
+                        and _SERVING_LAT_KEY.match(key):
+                    warnings += 1
+                    print(f"::warning::{name}: latency metric {key} "
+                          f"disappeared from smoke run (was {b[key]})")
                 continue
             warnings += 1
             print(f"::warning::{name}: metric {key} disappeared from "

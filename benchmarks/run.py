@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_roofline         (ours)      dry-run roofline table (§Roofline)
   bench_jaxpr_sched      (ours)      SERENITY-on-jaxpr liveness gains
   bench_serving          (ours)      multi-tenant pool vs per-request arenas
+  bench_fleet            (ours)      sharded fleet: 10k open-loop requests,
+                                     4 shards + prefill lane, SLO gates
   bench_executor         (ours)      us/step: slice-per-node vs fused vs jit
                                      executors + serial vs batched decode
 
@@ -50,6 +52,7 @@ def main() -> None:
         sys.path.insert(0, _ROOT)
     from benchmarks import (
         bench_executor,
+        bench_fleet,
         bench_footprint_trace,
         bench_jaxpr_sched,
         bench_offchip_traffic,
@@ -67,6 +70,7 @@ def main() -> None:
         bench_roofline,
         bench_jaxpr_sched,
         bench_serving,
+        bench_fleet,
         bench_executor,
     ]
     if args.only:

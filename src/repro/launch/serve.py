@@ -59,6 +59,8 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models.params import ParamDef
 from repro.models.zoo import build_model
 from repro.runtime.chaos import ChaosController, TransientExecutorError
+from repro.runtime.fleet import Fleet, PlannerService, bucket_key_for
+from repro.runtime.loadgen import OpenLoopLoadGen, workload_summary
 from repro.runtime.pool import ArenaPool, PoolError
 
 #: Pareto request classes decode admission serves (DESIGN.md §12): a
@@ -363,6 +365,7 @@ class DecodeServer:
         self._tick = 0
         self._spilled: list[Request] = []       # preempted, awaiting readmit
         self._exact_buckets = False             # ladder rung 2 latch
+        self._scratch_token = None              # vmap padding reservation
         self.ladder = {"replan": 0, "shrink_buckets": 0, "preempt": 0}
         self.transient_errors = 0
         self._transient_streak = 0
@@ -497,8 +500,11 @@ class DecodeServer:
         if not self._exact_buckets:
             self._exact_buckets = True
             self.ladder["shrink_buckets"] += 1
-            if self.pool.scratch_bytes:
-                self.pool.reserve_scratch(0)
+            # drop the server's own padding-scratch reservation (token-
+            # scoped: other reservers' scratch is theirs to release)
+            token, self._scratch_token = self._scratch_token, None
+            if token is not None:
+                token.release()
             return True
         owned = [r for r in self.active if r.lease is not None]
         if not owned:
@@ -595,9 +601,11 @@ class DecodeServer:
         if pad:
             # padding rows materialize real state + transients beyond the
             # admitted set: charge them to the pool budget for the duration
-            # of the step, or shrink the bucket to the exact batch
+            # of the step (a handle-based reservation released in the
+            # finally below), or shrink the bucket to the exact batch
             try:
-                self.pool.reserve_scratch(pad * self._plan["arena_bytes"])
+                self._scratch_token = self.pool.reserve_scratch(
+                    pad * self._plan["arena_bytes"])
             except PoolError:
                 bucket, pad = B, 0
         try:
@@ -619,8 +627,9 @@ class DecodeServer:
                 req.t += 1
                 req.arena = arenas[i]
         finally:
-            if pad:
-                self.pool.reserve_scratch(0)
+            token, self._scratch_token = self._scratch_token, None
+            if token is not None:
+                token.release()
 
     def step(self) -> int:
         """One scheduler tick; returns the number of active requests.
@@ -687,12 +696,26 @@ class DecodeServer:
     # -- stall diagnostics (DESIGN.md §13) ----------------------------------
 
     def _progress_sig(self) -> tuple:
-        """Observable state; two equal signatures = a tick did nothing."""
+        """Observable state; two equal signatures = a tick did nothing.
+
+        Spill backoff state is part of the signature: a failed readmit
+        attempt re-arms the backoff (``attempts``/``next_tick`` move), and
+        that is observable work even when nothing else changed.
+        """
         return (len(self.done),
                 sum(len(r.tokens) for r in self.active),
                 len(self.active), len(self._spilled), len(self._tickets),
                 self.pool.queue_len, self.pool.stats.admitted,
-                self.pool.budget_bytes)
+                self.pool.budget_bytes,
+                tuple(sorted((r.rid, r.spill.attempts, r.spill.next_tick)
+                             for r in self._spilled)))
+
+    def _backoff_pending(self) -> bool:
+        """True while a spilled re-admission is waiting out its exponential
+        backoff window — that wait is scheduled future work, not
+        stagnation, so it must not count toward watchdog escalation."""
+        return any(r.spill is not None and r.spill.next_tick > self._tick
+                   for r in self._spilled)
 
     def _stall_report(self) -> dict:
         """Structured queue diagnostics: every waiting request's identity
@@ -736,7 +759,8 @@ class DecodeServer:
             sig = self._progress_sig()
             self.step()
             steps += 1
-            progressed = self._progress_sig() != sig
+            progressed = self._progress_sig() != sig \
+                or self._backoff_pending()
             if self.watchdog.observe(self._last_tick_s, progressed):
                 self._raise_stall()
             if not progressed and not self.active and self._tickets \
@@ -751,7 +775,14 @@ class DecodeServer:
         jax.block_until_ready(self.params)
         wall = time.perf_counter() - t0
         served = [r for r in self.done if not r.rejected]
-        lat = sorted(r.latency_s for r in served) or [0.0]
+        lat = sorted(r.latency_s for r in served)
+        if lat:
+            p50_ms = 1e3 * float(np.percentile(lat, 50))
+            p99_ms = 1e3 * float(np.percentile(lat, 99))
+        else:
+            # an all-rejected run has no latencies: report NaN, never a
+            # vacuous 0.0 that would pass any latency SLO silently
+            p50_ms = p99_ms = float("nan")
         n_tok = sum(len(r.tokens) for r in served)
         st = self.pool.stats
         ps = self.pool.preemption_stats
@@ -767,8 +798,8 @@ class DecodeServer:
             "n_tokens": n_tok,
             "wall_s": wall,
             "tok_per_s": n_tok / max(wall, 1e-9),
-            "p50_ms": 1e3 * float(np.percentile(lat, 50)),
-            "p99_ms": 1e3 * float(np.percentile(lat, 99)),
+            "p50_ms": p50_ms,
+            "p99_ms": p99_ms,
             "steps": steps,
             "max_concurrent": st.max_concurrent,
             "peak_reserved_bytes": st.peak_reserved_bytes,
@@ -853,6 +884,66 @@ def synth_requests(n: int, prompt_len: int, gen: int, vocab: int,
     return reqs
 
 
+# ---------------------------------------------------------------------------
+# Sharded fleet top layer (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def fleet_planner_for_model(model, buckets: Sequence[int]) \
+        -> tuple[PlannerService, dict]:
+    """A :class:`PlannerService` loaded with this model's real decode
+    plans, one per sequence bucket.
+
+    Each bucket's regions-layout decode plan (KV caches pinned resident,
+    transients above — :func:`plan_decode_arena`) is registered together
+    with its two Pareto class plans, all backed by the shared
+    content-addressed plan cache — so fleet workers lease exactly the
+    plans the single-device server serves, fetched by fingerprint, never
+    planned locally.  Returns ``(planner, {bucket: PlanRecord})``.
+    """
+    planner = PlannerService(cache=default_cache())
+    records = {}
+    for b in sorted(set(int(b) for b in buckets)):
+        d = plan_decode_arena(model, 1, b)
+        records[b] = planner.register(
+            d["graph"], plan=d["plan"],
+            classes={"memory": d["plan"],
+                     "latency": pin_transients(d["plan"])})
+    return planner, records
+
+
+def run_fleet(model, arrivals, *, buckets: Sequence[int],
+              n_decode: int = 4, n_prefill: int = 1,
+              shard_budget_bytes: int | None = None,
+              prefill_budget_bytes: int | None = None,
+              max_batch: int = 8, prefill_chunk: int = 32,
+              tenant_quotas: dict[str, int] | None = None,
+              fault_plans: dict | None = None,
+              max_ticks: int | None = None) -> dict:
+    """Serve an open-loop workload on a sharded fleet of this model's
+    decode plans (simulated device workers — scheduling fidelity, not
+    kernels; see ``runtime/fleet.py``).
+
+    ``shard_budget_bytes`` defaults to ``max_batch`` times the largest
+    non-oversize bucket's arena — each decode shard can hold a full
+    batch of the biggest routable request.
+    """
+    planner, records = fleet_planner_for_model(model, buckets)
+    if shard_budget_bytes is None:
+        fitted = sorted(records)[:-1] or sorted(records)
+        shard_budget_bytes = max_batch * records[fitted[-1]].alone_bytes
+    fleet = Fleet(planner, key_for=bucket_key_for(records),
+                  n_decode=n_decode, n_prefill=n_prefill,
+                  shard_budget_bytes=shard_budget_bytes,
+                  prefill_budget_bytes=prefill_budget_bytes,
+                  max_batch=max_batch, prefill_chunk=prefill_chunk,
+                  tenant_quotas=tenant_quotas, fault_plans=fault_plans)
+    metrics = fleet.run_arrivals(arrivals, max_ticks=max_ticks)
+    metrics["shard_budget_bytes"] = shard_budget_bytes
+    metrics["buckets"] = sorted(records)
+    return metrics
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -875,6 +966,16 @@ def main() -> None:
     ap.add_argument("--mesh", choices=("none", "single", "multi"),
                     default="none")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve on a sharded fleet of N decode shards "
+                         "(simulated workers over the real decode plans) "
+                         "instead of the single in-process server")
+    ap.add_argument("--prefill-shards", type=int, default=1,
+                    help="dedicated prefill-lane shards (fleet mode; 0 "
+                         "prefills inline on decode shards)")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="open-loop Poisson arrival rate, requests/tick "
+                         "(fleet mode)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -893,6 +994,30 @@ def main() -> None:
 
     budget = int(args.budget_mb * 1e6) if args.budget_mb else \
         4 * plan["arena_bytes"]
+
+    if args.fleet > 0:
+        # sharded fleet: open-loop load over per-bucket decode plans;
+        # simulated workers exercise routing/admission, not kernels
+        gen = OpenLoopLoadGen(
+            seed=args.seed, rate=args.rate,
+            prompt_mean=args.prompt_len, prompt_max=4 * smax,
+            gen_mean=args.gen, gen_max=2 * args.gen, latency_frac=0.25)
+        arrivals = gen.arrivals(args.requests)
+        print(f"[fleet] workload: {workload_summary(arrivals)}")
+        m = run_fleet(model, arrivals,
+                      buckets=(smax, 2 * smax, 8 * smax),
+                      n_decode=args.fleet, n_prefill=args.prefill_shards)
+        print(f"[fleet] {m['n_served']}/{m['n_requests']} served "
+              f"({m['n_rejected']} rejected, rate {m['rejection_rate']}), "
+              f"{m['tokens']} tokens over {m['ticks']} ticks on "
+              f"{args.fleet}+{args.prefill_shards} shards "
+              f"({m['tok_per_tick']} tok/tick)")
+        print(f"[fleet] latency p50 {m['p50_ticks']} / p99 {m['p99_ticks']} "
+              f"ticks; {m['handoffs']} prefill handoffs, "
+              f"{m['migrations']} migrations, {m['preemptions']} "
+              f"preemptions; shard budget "
+              f"{m['shard_budget_bytes']/1e6:.2f} MB")
+        return
 
     mesh = rules = None
     if args.mesh != "none":

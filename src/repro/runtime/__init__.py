@@ -6,6 +6,16 @@ from repro.runtime.chaos import (
     seeded_corpus,
 )
 from repro.runtime.fault import FaultTolerantLoop, StepTimer
+from repro.runtime.fleet import (
+    Fleet,
+    FleetRequest,
+    FleetRouter,
+    FleetStallError,
+    PlannerService,
+    PlanRecord,
+    WorkerShard,
+)
+from repro.runtime.loadgen import Arrival, OpenLoopLoadGen, workload_summary
 from repro.runtime.pool import (
     ArenaPool,
     Lease,
@@ -13,24 +23,36 @@ from repro.runtime.pool import (
     PoolError,
     PoolStats,
     PreemptionStats,
+    ScratchReservation,
     SpilledLease,
     Ticket,
 )
 
 __all__ = [
     "ArenaPool",
+    "Arrival",
     "ChaosController",
     "FaultPlan",
     "FaultSpec",
     "FaultTolerantLoop",
+    "Fleet",
+    "FleetRequest",
+    "FleetRouter",
+    "FleetStallError",
     "Lease",
     "LeaseError",
+    "OpenLoopLoadGen",
+    "PlanRecord",
+    "PlannerService",
     "PoolError",
     "PoolStats",
     "PreemptionStats",
+    "ScratchReservation",
     "SpilledLease",
     "StepTimer",
     "Ticket",
     "TransientExecutorError",
+    "WorkerShard",
     "seeded_corpus",
+    "workload_summary",
 ]

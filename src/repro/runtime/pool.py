@@ -32,6 +32,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import warnings
 from typing import Callable, Sequence
 
 import numpy as np
@@ -238,6 +239,27 @@ class SpilledLease:
         return tick >= self.next_tick
 
 
+@dataclasses.dataclass
+class ScratchReservation:
+    """A handle on transient scratch bytes charged against a pool's budget.
+
+    Returned by :meth:`ArenaPool.reserve_scratch`; each reservation is
+    independent — two reservers (a vmap padding step and a prefill lane,
+    say) each hold their own token and release only their own bytes, so
+    neither can clobber the other.  Release via :meth:`release` (or
+    :meth:`ArenaPool.release_scratch`); releasing twice raises
+    :class:`PoolError` with ``code='scratch_double_release'``.
+    """
+
+    sid: int
+    nbytes: int
+    _pool: "ArenaPool" = dataclasses.field(repr=False)
+    released: bool = dataclasses.field(default=False, repr=False)
+
+    def release(self) -> None:
+        self._pool.release_scratch(self)
+
+
 class ArenaPool:
     """Budgeted pool of pre-planned arena leases (DESIGN.md §9).
 
@@ -304,7 +326,10 @@ class ArenaPool:
             collections.deque()
         self._admitted_since_poll: list[Ticket] = []
         self._rejected_since_poll: list[Ticket] = []
-        self._scratch_bytes = 0
+        self._scratch: dict[int, ScratchReservation] = {}
+        self._scratch_sid = itertools.count()
+        self._scratch_bytes = 0              # running sum over _scratch
+        self._legacy_scratch: ScratchReservation | None = None
         self._pareto: dict[str, dict[str, ArenaPlan]] = {}
         self.stats = PoolStats()
         self.preemption_stats = PreemptionStats()
@@ -666,6 +691,13 @@ class ArenaPool:
         return len(self._queue)
 
     @property
+    def queued_bytes(self) -> int:
+        """Standalone bytes the waiting queue will eventually charge — the
+        load a router should count against this pool beyond
+        ``reserved_bytes`` when ranking shards by projected occupancy."""
+        return sum(self._joint_extent([p]) for _, p in self._queue)
+
+    @property
     def reserved_bytes(self) -> int:
         """Joint bytes the current admitted set (plus any transient scratch
         reservation) charges to the budget."""
@@ -676,38 +708,115 @@ class ArenaPool:
     def scratch_bytes(self) -> int:
         return self._scratch_bytes
 
-    def reserve_scratch(self, nbytes: int) -> None:
-        """Reserve transient scratch bytes against the budget.
+    def reserve_scratch(self, nbytes: int) -> ScratchReservation:
+        """Reserve transient scratch bytes; returns a release token.
 
         For execution-side allocations that are not leases but still occupy
         device memory alongside the admitted set — e.g. the padding rows a
-        bucketed vmap decode materializes beyond the active batch.  The
-        reservation replaces any previous one (pass 0 to release) and is
-        charged by ``_fits``, so queued requests cannot be admitted into
-        bytes the scratch is using.  Raises :class:`PoolError` when a
-        *growing* reservation does not fit over the current members;
-        shrinking or releasing always succeeds — the degradation ladder
-        depends on ``reserve_scratch(0)`` even after a budget shrink has
+        bucketed vmap decode materializes beyond the active batch, or a
+        prefill chunk's workspace.  Each call is an *independent*
+        reservation: the returned :class:`ScratchReservation` releases only
+        its own bytes (``token.release()`` or :meth:`release_scratch`), so
+        two concurrent reservers never clobber each other.  All live
+        reservations are charged by ``_fits``, so queued requests cannot be
+        admitted into bytes scratch is using.  Raises :class:`PoolError`
+        when the new reservation does not fit over the current members plus
+        existing scratch; releasing always succeeds — the degradation
+        ladder depends on shedding scratch even after a budget shrink has
         left the members alone over budget.
         """
         nbytes = int(nbytes)
         if nbytes < 0:
             raise PoolError(f"negative scratch reservation {nbytes}",
                             code="bad_scratch", requested_bytes=nbytes)
-        prev = self._scratch_bytes
-        if nbytes > prev:
+        if nbytes > 0:
             joint = self._joint_extent([m.plan for m in self._members])
-            if joint + nbytes > self.budget_bytes:
+            held = self._scratch_bytes
+            if joint + held + nbytes > self.budget_bytes:
                 raise PoolError(
                     f"scratch reservation of {nbytes} bytes does not fit: "
-                    f"members reserve {joint} of {self.budget_bytes} budget "
-                    f"bytes", code="scratch_overflow", requested_bytes=nbytes,
-                    budget_bytes=self.budget_bytes, reserved_bytes=joint,
+                    f"members reserve {joint} (+{held} scratch) of "
+                    f"{self.budget_bytes} budget bytes",
+                    code="scratch_overflow", requested_bytes=nbytes,
+                    budget_bytes=self.budget_bytes, reserved_bytes=joint + held,
                     queue_depth=len(self._queue))
-        self._scratch_bytes = nbytes
+        token = ScratchReservation(sid=next(self._scratch_sid),
+                                   nbytes=nbytes, _pool=self)
+        self._scratch[token.sid] = token
+        self._scratch_bytes += nbytes
         self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
                                              self.reserved_bytes)
-        if nbytes < prev:
+        return token
+
+    def release_scratch(self, token: ScratchReservation) -> None:
+        """Release one scratch reservation and drain the queue.
+
+        Always succeeds for a live token of this pool (shedding scratch
+        must work even when a budget shrink left the pool over budget).
+        Raises :class:`PoolError` on a double release
+        (``code='scratch_double_release'``) or a token from another pool
+        (``code='foreign_scratch'``).
+        """
+        if token.released:
+            raise PoolError(
+                f"scratch reservation {token.sid} ({token.nbytes} bytes) "
+                f"already released (double free)",
+                code="scratch_double_release", requested_bytes=token.nbytes)
+        if token._pool is not self or self._scratch.pop(token.sid, None) is None:
+            raise PoolError(
+                f"scratch reservation {token.sid} is not held by this pool",
+                code="foreign_scratch", requested_bytes=token.nbytes)
+        token.released = True
+        if self._legacy_scratch is token:
+            self._legacy_scratch = None
+        self._scratch_bytes -= token.nbytes
+        self._drain()
+
+    def reserve_scratch_absolute(self, nbytes: int) -> None:
+        """Deprecated absolute-valued scratch API (pre-token shim).
+
+        Replaces any previous *absolute* reservation with ``nbytes`` (pass
+        0 to release), exactly like the old ``reserve_scratch`` — but
+        implemented as a single pool-owned token, so it composes with (and
+        cannot clobber) token-based reservations held by other callers.
+        Migrate to ``token = reserve_scratch(n)`` / ``token.release()``.
+        """
+        warnings.warn(
+            "reserve_scratch_absolute is deprecated; use "
+            "reserve_scratch(n) -> token and token.release()",
+            DeprecationWarning, stacklevel=2)
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise PoolError(f"negative scratch reservation {nbytes}",
+                            code="bad_scratch", requested_bytes=nbytes)
+        prev = self._legacy_scratch
+        prev_bytes = prev.nbytes if prev is not None else 0
+        if nbytes > prev_bytes:
+            joint = self._joint_extent([m.plan for m in self._members])
+            others = self._scratch_bytes - prev_bytes
+            if joint + others + nbytes > self.budget_bytes:
+                raise PoolError(
+                    f"scratch reservation of {nbytes} bytes does not fit: "
+                    f"members reserve {joint} (+{others} scratch) of "
+                    f"{self.budget_bytes} budget bytes",
+                    code="scratch_overflow", requested_bytes=nbytes,
+                    budget_bytes=self.budget_bytes,
+                    reserved_bytes=joint + others,
+                    queue_depth=len(self._queue))
+        if prev is not None:
+            del self._scratch[prev.sid]
+            prev.released = True
+            self._scratch_bytes -= prev_bytes
+            self._legacy_scratch = None
+        if nbytes > 0:
+            token = ScratchReservation(sid=next(self._scratch_sid),
+                                       nbytes=nbytes, _pool=self)
+            self._scratch[token.sid] = token
+            self._scratch_bytes += nbytes
+            self._legacy_scratch = token
+        self.stats.peak_reserved_bytes = max(self.stats.peak_reserved_bytes,
+                                             self.reserved_bytes)
+        if nbytes < prev_bytes:
             self._drain()
 
     def shared_plan(self) -> SharedArenaPlan:

@@ -711,11 +711,12 @@ class TestLadderRegressions:
             server.submit(r)
         server.step()
         assert len(server.active) == 2
-        pool.reserve_scratch(64)              # e.g. vmap padding rows
+        # e.g. vmap padding rows, held by the server as a token
+        server._scratch_token = pool.reserve_scratch(64)
         members = pool.reserved_bytes - pool.scratch_bytes
         # members alone now exceed the new budget: rung 1 is inert (the
         # requests are classless), so rung 2 must shed the scratch — not
-        # crash inside reserve_scratch(0) — and rung 3 preempts
+        # crash releasing the token — and rung 3 preempts
         server.set_budget(members - 1)
         assert pool.scratch_bytes == 0
         assert server.ladder["shrink_buckets"] == 1
@@ -760,6 +761,30 @@ class TestLadderRegressions:
         assert req.spill is None
         # max_readmit_attempts=2 permits exactly 2 failed attempts
         assert pool.preemption_stats.readmit_attempts == 2
+
+    def test_backoff_wait_does_not_trip_watchdog(self, smoke_model):
+        # regression (PR 10): `_progress_sig` ignored spill backoff state,
+        # so the ticks a preempted request spends waiting out its
+        # exponential backoff window (2, 4, 8, ... ticks) counted as
+        # stagnation and tripped TickWatchdog escalation under a tight
+        # stall budget.  Backoff waits are scheduled future work: the run
+        # must ride them out and resolve the request (here: exhaust its
+        # retries), never raise ServingStallError.
+        from repro.launch.serve import synth_requests
+
+        model, server, pool = self._server(smoke_model, stall_ticks=4,
+                                           max_readmit_attempts=5)
+        req = synth_requests(1, PROMPT, GEN, model.cfg.vocab_size, seed=11)[0]
+        server.submit(req)
+        server.step()
+        assert server.active
+        server._preempt_request(server.active[0])
+        pool.admission_hook = lambda: True    # every readmit faults
+        # the final backoff window (2^4 = 16 ticks) dwarfs stall_ticks=4;
+        # pre-fix this raised ServingStallError mid-wait
+        m = server.run([])
+        assert req.rejected and req.reject_code == "readmit_exhausted"
+        assert m["watchdog"]["escalations"] == 0
 
     def test_chaos_refuses_to_clobber_admission_hook(self, smoke_model):
         from repro.launch.serve import (

@@ -250,3 +250,79 @@ def test_degraded_latency_keys_keep_duration_tripwire(capsys, tmp_path):
                {"serving/degraded_shrink": "p99_ms=6000.0"}, tmp_path)
     w = _warnings(out)
     assert len(w) == 1 and "latency p99_ms regressed >2x" in w[0]
+
+
+# ---------------------------------------------------------------------------
+# fleet SLO rows (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_rows_get_latency_tripwire(capsys, tmp_path):
+    out = _run(capsys,
+               {"fleet/sharded_4x": "wall_s=4.2"},
+               {"fleet/sharded_4x": "wall_s=5.0"}, tmp_path)
+    assert not _warnings(out)
+    out = _run(capsys,
+               {"fleet/sharded_4x": "wall_s=4.2"},
+               {"fleet/sharded_4x": "wall_s=9.5"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "latency wall_s regressed >2x" in w[0]
+
+
+def test_latency_to_nan_warns_never_passes_silently(capsys, tmp_path):
+    # regression (PR 10): an all-rejected run used to report 0.0 ms and
+    # sail through; now it reports NaN, and the differ flags the
+    # measured->NaN transition instead of skipping it as timing noise
+    out = _run(capsys,
+               {"serving/pooled": "p99_ms=120.0"},
+               {"serving/pooled": "p99_ms=nan"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "became NaN" in w[0]
+    # NaN on both sides is stable, not a fresh regression
+    out = _run(capsys,
+               {"serving/pooled": "p99_ms=nan"},
+               {"serving/pooled": "p99_ms=nan"}, tmp_path)
+    assert not _warnings(out)
+
+
+def test_deterministic_value_to_nan_still_drifts(capsys, tmp_path):
+    # NaN leaking into an exact-diffed key must not compare clean
+    out = _run(capsys,
+               {"fleet/sharded_4x": "p99_ticks=177.0"},
+               {"fleet/sharded_4x": "p99_ticks=nan"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "drifted" in w[0]
+
+
+def test_disappeared_latency_metric_warns(capsys, tmp_path):
+    # regression (PR 10): a latency column that vanishes from a serving
+    # or fleet row was silently skipped as machine-dependent timing
+    out = _run(capsys,
+               {"fleet/sharded_4x": "n_served=100;wall_s=4.2"},
+               {"fleet/sharded_4x": "n_served=100"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "latency metric wall_s disappeared" in w[0]
+    # non-SLO rows keep the old exemption for timing columns
+    out = _run(capsys,
+               {"peak_memory/x": "peak_bytes=1;wall_s=4.2"},
+               {"peak_memory/x": "peak_bytes=1"}, tmp_path)
+    assert not _warnings(out)
+
+
+def test_rejection_rate_slo_thresholds(capsys, tmp_path):
+    base = {"fleet/sharded_4x": "rejection_rate=0.0023"}
+    # small absolute movement: a note, not a warning
+    out = _run(capsys, base,
+               {"fleet/sharded_4x": "rejection_rate=0.008"}, tmp_path)
+    assert not _warnings(out)
+    assert any("within SLO floors" in ln for ln in out)
+    # past the absolute AND relative floors: warns
+    out = _run(capsys, base,
+               {"fleet/sharded_4x": "rejection_rate=0.05"}, tmp_path)
+    w = _warnings(out)
+    assert len(w) == 1 and "rejection_rate regressed" in w[0]
+    # a rise from zero below the absolute floor stays quiet
+    out = _run(capsys,
+               {"fleet/sharded_4x": "rejection_rate=0.0"},
+               {"fleet/sharded_4x": "rejection_rate=0.009"}, tmp_path)
+    assert not _warnings(out)

@@ -1,0 +1,400 @@
+"""Fleet-layer tests (DESIGN.md §14): open-loop load generator, planner
+service, shard router properties, prefill/decode disaggregation,
+cross-shard migration bit-exactness, and the chaos-corpus invariants
+(no request lost, every shard within its instantaneous budget).
+
+Everything here runs the *simulated* device step — pure byte arithmetic,
+no jax — so the whole file is fast enough for the PR lane.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.runtime.chaos import FaultPlan, FaultSpec
+from repro.runtime.fleet import (
+    Fleet,
+    FleetRequest,
+    PlannerService,
+    bucket_key_for,
+    bucketed_records,
+    sim_state_graph,
+)
+from repro.runtime.loadgen import Arrival, OpenLoopLoadGen, workload_summary
+from repro.runtime.pool import PoolError
+
+BUCKETS = (16, 32, 64)
+
+
+def make_fleet(n_decode=2, n_prefill=0, *, slots=3, buckets=BUCKETS,
+               planner=None, **kw):
+    """A small fleet whose decode budgets hold ``slots`` mid-bucket plans
+    (the largest bucket's plan exceeds one slotless budget only when the
+    caller shrinks it — budgets here admit every bucket)."""
+    planner = planner or PlannerService()
+    records = bucketed_records(planner, buckets)
+    budget = slots * records[buckets[-1]].alone_bytes
+    fleet = Fleet(planner, key_for=bucket_key_for(records),
+                  n_decode=n_decode, n_prefill=n_prefill,
+                  shard_budget_bytes=budget, **kw)
+    return fleet, records
+
+
+def short_requests(n, records, *, gen=3, prompt=4, stagger=1, **kw):
+    key = records[BUCKETS[0]].key
+    return [FleetRequest(rid=i, key=key, prompt_len=prompt, gen_len=gen,
+                         arrival_tick=1 + i * stagger, **kw)
+            for i in range(n)]
+
+
+def token_map(fleet):
+    return {r.rid: tuple(r.tokens) for r in fleet.done}
+
+
+# ---------------------------------------------------------------------------
+# Open-loop load generator
+# ---------------------------------------------------------------------------
+
+
+class TestLoadGen:
+    def test_seeded_determinism(self):
+        kw = dict(rate=2.0, latency_frac=0.3,
+                  priority_weights={0: 3.0, 1: 1.0},
+                  tenant_weights={"a": 1.0, "b": 1.0})
+        a = OpenLoopLoadGen(7, **kw).arrivals(500)
+        b = OpenLoopLoadGen(7, **kw).arrivals(500)
+        assert a == b                      # bit-identical across instances
+        c = OpenLoopLoadGen(8, **kw).arrivals(500)
+        assert a != c                      # and seed-sensitive
+
+    def test_distribution_shape(self):
+        gen = OpenLoopLoadGen(3, rate=4.0, prompt_mean=48.0,
+                              prompt_min=2, prompt_max=256,
+                              gen_mean=8.0, gen_max=32, latency_frac=0.25)
+        arr = gen.arrivals(4000)
+        assert [a.rid for a in arr] == list(range(4000))
+        ticks = [a.tick for a in arr]
+        assert ticks == sorted(ticks) and ticks[0] >= 1
+        # Poisson at rate 4/tick: ~4000 arrivals span ~1000 ticks
+        assert 800 <= ticks[-1] <= 1250
+        prompts = np.array([a.prompt_len for a in arr])
+        gens = np.array([a.gen_len for a in arr])
+        assert prompts.min() >= 2 and prompts.max() <= 256
+        assert gens.min() >= 1 and gens.max() <= 32
+        assert 40 <= prompts.mean() <= 56          # lognormal mean ~48
+        assert 6 <= gens.mean() <= 10              # geometric mean ~8
+        # heavy right tail: p99 well above the mean
+        assert np.percentile(prompts, 99) > 2 * prompts.mean()
+        lat = sum(a.klass == "latency" for a in arr) / len(arr)
+        assert 0.2 <= lat <= 0.3
+        assert all(a.klass in ("latency", "memory") for a in arr)
+
+    def test_mixes_and_summary(self):
+        gen = OpenLoopLoadGen(1, rate=2.0,
+                              priority_weights={0: 1.0, 2: 1.0},
+                              tenant_weights={"t0": 3.0, "t1": 1.0})
+        arr = gen.arrivals(1000)
+        prios = {a.priority for a in arr}
+        tenants = [a.tenant for a in arr]
+        assert prios == {0, 2}
+        assert set(tenants) == {"t0", "t1"}
+        assert tenants.count("t0") > 2 * tenants.count("t1")
+        s = workload_summary(arr)
+        assert s["n"] == 1000 and s["tokens_total"] == \
+            sum(a.gen_len for a in arr)
+        assert workload_summary([]) == {"n": 0}
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="rate"):
+            OpenLoopLoadGen(0, rate=0.0)
+        with pytest.raises(ValueError, match="latency_frac"):
+            OpenLoopLoadGen(0, latency_frac=1.5)
+        with pytest.raises(ValueError, match="prompt bounds"):
+            OpenLoopLoadGen(0, prompt_min=5, prompt_max=4)
+        with pytest.raises(ValueError, match="weight"):
+            OpenLoopLoadGen(0, tenant_weights={"a": -1.0})
+        assert OpenLoopLoadGen(0).arrivals(0) == []
+
+
+# ---------------------------------------------------------------------------
+# Planner service
+# ---------------------------------------------------------------------------
+
+
+class TestPlannerService:
+    def test_plans_each_graph_once(self):
+        svc = PlannerService()
+        g = sim_state_graph(16)
+        r1 = svc.plan_graph(g)
+        r2 = svc.plan_graph(sim_state_graph(16))   # same fingerprint
+        assert r1 is r2
+        assert svc.stats.planned == 1 and svc.stats.record_hits == 1
+
+    def test_shared_cache_tier(self):
+        # two services over one PlanCache: the second rebuilds from the
+        # shared tier instead of planning again
+        svc1 = PlannerService()
+        rec = svc1.plan_graph(sim_state_graph(32))
+        svc2 = PlannerService(cache=svc1.cache)
+        rec2 = svc2.plan_graph(sim_state_graph(32))
+        assert svc2.stats.planned == 0 and svc2.stats.shared_hits == 1
+        assert rec2.key == rec.key
+        assert rec2.plan.arena_bytes == rec.plan.arena_bytes
+        assert [a.offset for a in rec2.plan.allocations] == \
+            [a.offset for a in rec.plan.allocations]
+
+    def test_unknown_fingerprint_is_hard_error(self):
+        with pytest.raises(KeyError, match="never plan locally"):
+            PlannerService().record("deadbeef")
+
+    def test_pareto_classes_derived(self):
+        rec = PlannerService().plan_graph(sim_state_graph(16))
+        assert set(rec.classes) == {"memory", "latency"}
+        assert rec.charge_bytes("memory") == rec.alone_bytes
+        assert rec.charge_bytes(None) == rec.alone_bytes
+        with pytest.raises(PoolError) as ei:
+            rec.plan_for("turbo")
+        assert ei.value.code == "unknown_class"
+
+    def test_workers_never_plan_locally(self):
+        fleet, records = make_fleet(n_decode=1)
+        shard = fleet.shards[0]
+        # submitting a graph the planner never registered forces the
+        # shard pool onto its planner callback, which must refuse
+        with pytest.raises(PoolError) as ei:
+            shard.pool.submit(sim_state_graph(128))
+        assert ei.value.code == "no_local_planning"
+
+
+# ---------------------------------------------------------------------------
+# Router properties
+# ---------------------------------------------------------------------------
+
+
+class TestRouter:
+    def test_least_loaded_spread(self):
+        fleet, records = make_fleet(n_decode=4, slots=8)
+        reqs = short_requests(8, records, stagger=0)
+        for r in reqs:
+            fleet.submit(r, now=1)
+        per_shard = [s.stats.submitted for s in fleet.shards]
+        assert per_shard == [2, 2, 2, 2]   # byte-balanced, deterministic
+
+    def test_placement_never_exceeds_budget(self):
+        fleet, records = make_fleet(n_decode=3, slots=2)
+        m = fleet.run(short_requests(40, records, gen=4, stagger=1))
+        assert m["n_lost"] == 0
+        assert m["max_over_budget"] <= 0
+        for s in fleet.shards:
+            assert s.pool.stats.peak_reserved_bytes <= s.pool.budget_bytes
+
+    def test_oversize_request_rejected_with_budget_code(self):
+        fleet, records = make_fleet(n_decode=2, slots=2, buckets=(16, 32))
+        huge = records[32]
+        # shrink every decode budget below the large plan's charge
+        for s in fleet.shards:
+            s.pool.set_budget(huge.alone_bytes - 1)
+        req = FleetRequest(rid=0, key=huge.key, prompt_len=4, gen_len=2)
+        fleet.submit(req, now=1)
+        assert req.rejected and req.reject_code == "budget"
+        assert "bytes alone" in req.reject_reason
+
+    def test_tenant_quota_rejection(self):
+        planner = PlannerService()
+        records = bucketed_records(planner, (16,))
+        charge = records[16].alone_bytes
+        fleet = Fleet(planner, key_for=bucket_key_for(records), n_decode=2,
+                      shard_budget_bytes=4 * charge,
+                      tenant_quotas={"small": charge - 1})
+        req = FleetRequest(rid=0, key=records[16].key, prompt_len=2,
+                           gen_len=2, tenant="small")
+        fleet.submit(req, now=1)
+        assert req.rejected and req.reject_code == "tenant_quota"
+        # an unquota'd tenant still lands
+        req2 = FleetRequest(rid=1, key=records[16].key, prompt_len=2,
+                            gen_len=2, tenant="big")
+        fleet.submit(req2, now=1)
+        assert not req2.rejected
+
+    def test_all_rejected_fleet_reports_nan_latency(self):
+        fleet, records = make_fleet(n_decode=2, slots=2, buckets=(16, 32))
+        for s in fleet.shards:
+            s.pool.set_budget(1)
+        m = fleet.run(short_requests(3, records))
+        assert m["n_served"] == 0 and m["n_rejected"] == 3
+        assert math.isnan(m["p50_ticks"]) and math.isnan(m["p99_ticks"])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end fleet runs
+# ---------------------------------------------------------------------------
+
+
+class TestFleetRuns:
+    def test_open_loop_run_serves_everything(self):
+        fleet, records = make_fleet(n_decode=2, slots=4)
+        gen = OpenLoopLoadGen(5, rate=1.0, prompt_mean=8.0, prompt_max=30,
+                              gen_mean=4.0, gen_max=10, latency_frac=0.25)
+        arr = gen.arrivals(120)
+        m = fleet.run_arrivals(arr)
+        assert m["n_requests"] == 120
+        assert m["n_served"] + m["n_rejected"] == 120 and m["n_lost"] == 0
+        assert m["n_served"] > 100
+        assert m["max_over_budget"] <= 0
+        assert m["tokens"] == sum(len(r.tokens) for r in fleet.done)
+        assert math.isfinite(m["p99_ticks"])
+        # workers fetched every record from the planner, planned nothing
+        assert m["planner"]["planned"] == len(BUCKETS)
+
+    def test_tokens_deterministic_across_fleet_shapes(self):
+        # the simulated decode is a pure function of (rid, prompt, step):
+        # 1-shard and 4-shard fleets must emit identical token streams
+        gen = OpenLoopLoadGen(11, rate=1.5, prompt_mean=10.0, prompt_max=40,
+                              gen_mean=4.0, gen_max=12)
+        arr = gen.arrivals(80)
+        outs = []
+        for n_decode in (1, 4):
+            fleet, _ = make_fleet(n_decode=n_decode, slots=4)
+            fleet.run_arrivals(arr)
+            outs.append(token_map(fleet))
+        assert set(outs[0]) == set(outs[1])
+        assert outs[0] == outs[1]
+
+    def test_latency_class_gets_batch_priority(self):
+        # oversubscribe one shard: latency-class requests must finish
+        # no later than equal-age memory-class ones
+        fleet, records = make_fleet(n_decode=1, slots=8, max_batch=2)
+        key = records[BUCKETS[0]].key
+        reqs = [FleetRequest(rid=i, key=key, prompt_len=2, gen_len=4,
+                             klass=("latency" if i % 2 else "memory"),
+                             arrival_tick=1)
+                for i in range(6)]
+        fleet.run(reqs)
+        done = {r.rid: r.done_tick for r in fleet.done}
+        lat = max(done[i] for i in (1, 3, 5))
+        mem = min(done[i] for i in (0, 2, 4))
+        assert lat <= mem
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode disaggregation
+# ---------------------------------------------------------------------------
+
+
+class TestDisaggregation:
+    def _workload(self, records, n=16):
+        key = records[BUCKETS[-1]].key
+        # long prompts (>= the default threshold 2*chunk) + short gens
+        return [FleetRequest(rid=i, key=key, prompt_len=40, gen_len=3,
+                             arrival_tick=1 + i) for i in range(n)]
+
+    def test_handoff_round_trip_and_stall_removal(self):
+        results = {}
+        for n_prefill in (0, 1):
+            fleet, records = make_fleet(n_decode=2, n_prefill=n_prefill,
+                                        slots=4, prefill_chunk=8)
+            m = fleet.run(self._workload(records))
+            results[n_prefill] = (m, token_map(fleet))
+        m0, tok0 = results[0]
+        m1, tok1 = results[1]
+        assert m0["n_lost"] == m1["n_lost"] == 0
+        assert m0["n_served"] == m1["n_served"] == 16
+        # inline prefill visibly stalls decode; the lane removes it
+        assert m0["prefill_stall_ticks"] > 0 and m0["handoffs"] == 0
+        assert m1["handoffs"] == 16 and m1["prefill_stall_ticks"] == 0
+        # the handoff is the same host-spill round trip: bit-equal tokens
+        assert tok0 == tok1
+
+    def test_short_prompts_skip_the_prefill_lane(self):
+        fleet, records = make_fleet(n_decode=2, n_prefill=1, slots=4,
+                                    prefill_chunk=8)
+        m = fleet.run(short_requests(10, records, prompt=4))
+        assert m["handoffs"] == 0
+        assert fleet.shards[2].stats.submitted == 0   # prefill shard idle
+
+
+# ---------------------------------------------------------------------------
+# Migration + chaos invariants
+# ---------------------------------------------------------------------------
+
+
+class TestMigrationAndChaos:
+    def _workload(self, records, n=24):
+        key = records[BUCKETS[0]].key
+        return [FleetRequest(rid=i, key=key, prompt_len=4, gen_len=6,
+                             arrival_tick=1 + i // 2, priority=i % 2)
+                for i in range(n)]
+
+    def test_budget_shrink_migrates_leases_bit_exactly(self):
+        # budgets sized in units of the (only) bucket plan, so the shrink
+        # bites: 4 slots -> ~1 slot at tick 3
+        base, records = make_fleet(n_decode=2, slots=4, buckets=(16,))
+        base.run(self._workload(records))
+        base_tok = token_map(base)
+
+        # shard 0's budget collapses below one plan at tick 3: its members
+        # must spill and can only re-enter on shard 1 (a migration)
+        plan = FaultPlan([FaultSpec("budget_shrink", 3, 0.05)])
+        fleet, records = make_fleet(n_decode=2, slots=4, buckets=(16,),
+                                    fault_plans={0: plan})
+        m = fleet.run(self._workload(records))
+        assert m["n_lost"] == 0
+        assert m["preemptions"] > 0
+        assert m["migrations"] > 0                 # crossed shards
+        assert m["max_over_budget"] <= 0
+        migrated = [r for r in fleet.done if r.migrations > 0]
+        assert migrated
+        assert all(len(set(r.shards)) > 1 for r in migrated)
+        # served streams bit-equal the fault-free twin, migrations and all
+        for rid, toks in token_map(fleet).items():
+            assert toks == base_tok[rid]
+
+    def test_chaos_corpus_invariants(self):
+        # generated fault scripts on every shard: across the corpus, no
+        # request is ever lost, no shard ever exceeds its instantaneous
+        # budget, and surviving token streams bit-equal the fault-free run
+        base, records = make_fleet(n_decode=2, slots=3)
+        base.run(self._workload(records))
+        base_tok = token_map(base)
+        for seed in range(6):
+            plans = {sid: FaultPlan.generate(seed + 17 * sid, n_ticks=10,
+                                             rate=0.35)
+                     for sid in range(2)}
+            fleet, records = make_fleet(n_decode=2, slots=3,
+                                        fault_plans=plans)
+            m = fleet.run(self._workload(records))
+            ctx = f"seed={seed}: " + "; ".join(
+                p.describe() for p in plans.values())
+            assert m["n_lost"] == 0, ctx
+            assert m["n_served"] + m["n_rejected"] == m["n_requests"], ctx
+            assert m["max_over_budget"] <= 0, ctx
+            for rid, toks in token_map(fleet).items():
+                assert toks == base_tok[rid], ctx
+
+    def test_readmit_exhaustion_is_a_rejection_not_a_loss(self):
+        # a hard budget shrink mid-run spills admitted leases; with every
+        # re-admission blocked, the retries must exhaust into clean
+        # rejections (never a lost request, never an infinite loop)
+        fleet, records = make_fleet(n_decode=1, slots=4,
+                                    max_readmit_attempts=2)
+        shard = fleet.shards[0]
+        reqs = [FleetRequest(rid=i, key=records[BUCKETS[0]].key,
+                             prompt_len=4, gen_len=6, arrival_tick=1)
+                for i in range(3)]
+        orig_tick = shard.tick
+
+        def tick(now, fl):
+            if now == 2:     # shrink hard, then fault all re-admission
+                shard.set_budget(1, fl, now)
+                shard.pool.admission_hook = lambda: True
+            orig_tick(now, fl)
+
+        shard.tick = tick
+        m = fleet.run(reqs)
+        assert m["n_lost"] == 0
+        assert fleet.rejected
+        assert all(r.reject_code in ("readmit_exhausted", "budget")
+                   for r in fleet.rejected)

@@ -200,14 +200,14 @@ class TestArenaPool:
         arena = one.reserved_bytes            # one member's standalone extent
         pool = ArenaPool(2 * arena, overlap="none")
         assert pool.submit(g).admitted
-        pool.reserve_scratch(arena)
+        token = pool.reserve_scratch(arena)
         assert pool.scratch_bytes == arena
         assert pool.reserved_bytes == 2 * arena
         # a second request fits the raw budget but not budget-minus-scratch:
         # it must queue behind the scratch, then drain when it is released
         t = pool.submit(g)
         assert not t.admitted and not t.rejected
-        pool.reserve_scratch(0)
+        token.release()
         assert t.admitted
         assert pool.reserved_bytes == 2 * arena
         assert pool.stats.peak_reserved_bytes == 2 * arena
@@ -229,19 +229,65 @@ class TestArenaPool:
     def test_scratch_release_survives_budget_shrink(self):
         # regression: the degradation ladder's rung 2 releases scratch
         # after a shrink may already have left the members alone over
-        # budget — shrinking/releasing the reservation must never raise,
-        # else the ladder crashes instead of shedding bytes
+        # budget — releasing the reservation must never raise, else the
+        # ladder crashes instead of shedding bytes
         g = state_graph()
         pool = ArenaPool(1 << 40, overlap="none")
         pool.submit(g)
-        pool.reserve_scratch(64)
+        token = pool.reserve_scratch(64)
         members = pool.reserved_bytes - pool.scratch_bytes
         pool.set_budget(members - 1)
-        pool.reserve_scratch(32)               # shrinking succeeds
-        pool.reserve_scratch(0)                # releasing succeeds
+        token.release()                        # releasing succeeds
         assert pool.scratch_bytes == 0
         with pytest.raises(PoolError, match="scratch"):
-            pool.reserve_scratch(1)            # growing is still checked
+            pool.reserve_scratch(1)            # reserving is still checked
+
+    def test_independent_scratch_reservers_do_not_clobber(self):
+        # regression (PR 10): the absolute-valued reserve_scratch let two
+        # independent reservers silently overwrite each other — reserving
+        # 100 then 50 left 50 total and the first reserver's bytes were
+        # admitted over.  Token-based reservations are additive and each
+        # releases only its own bytes.
+        pool = ArenaPool(1 << 20, overlap="none")
+        t_a = pool.reserve_scratch(100)
+        t_b = pool.reserve_scratch(50)
+        assert pool.scratch_bytes == 150       # pre-fix: 50 (clobbered)
+        t_b.release()
+        assert pool.scratch_bytes == 100       # a's bytes survive b's release
+        t_a.release()
+        assert pool.scratch_bytes == 0
+
+    def test_scratch_double_release_and_foreign_token_raise(self):
+        pool = ArenaPool(1 << 20, overlap="none")
+        other = ArenaPool(1 << 20, overlap="none")
+        token = pool.reserve_scratch(32)
+        token.release()
+        with pytest.raises(PoolError, match="already released") as ei:
+            token.release()
+        assert ei.value.code == "scratch_double_release"
+        foreign = other.reserve_scratch(8)
+        with pytest.raises(PoolError, match="not held") as ei:
+            pool.release_scratch(foreign)
+        assert ei.value.code == "foreign_scratch"
+        assert other.scratch_bytes == 8        # foreign release changed nothing
+
+    def test_scratch_absolute_shim_is_deprecated_but_composes(self):
+        # the pre-token API survives as a deprecation shim with its old
+        # replace semantics, implemented as one pool-owned token — so it
+        # coexists with (and cannot clobber) token-based reservers
+        pool = ArenaPool(1 << 20, overlap="none")
+        held = pool.reserve_scratch(100)
+        with pytest.deprecated_call():
+            pool.reserve_scratch_absolute(40)
+        assert pool.scratch_bytes == 140
+        with pytest.deprecated_call():
+            pool.reserve_scratch_absolute(10)  # replaces the 40, not the 100
+        assert pool.scratch_bytes == 110
+        with pytest.deprecated_call():
+            pool.reserve_scratch_absolute(0)   # releases only the legacy slot
+        assert pool.scratch_bytes == 100
+        held.release()
+        assert pool.scratch_bytes == 0
 
 
 # ---------------------------------------------------------------------------
@@ -414,6 +460,17 @@ class TestDecodeServer:
         pool = make_pool(1 << 30, step_mode="serial", pooled=True)
         with pytest.raises(ValueError, match="overlap='none'"):
             DecodeServer(model, params, pool, smax=8, step_mode="vmap")
+
+    def test_all_rejected_run_reports_nan_latency(self, smoke_model):
+        # regression (PR 10): `lat = sorted(...) or [0.0]` made an
+        # all-rejected run report p50/p99 = 0.0 ms, so latency SLOs
+        # passed vacuously with zero requests served.  An empty served
+        # set must report NaN, which no SLO comparison accepts.
+        import math
+
+        _, m = self._run(smoke_model, n_req=3, budget_factor=0.5)
+        assert m["n_served"] == 0 and m["n_rejected"] == 3
+        assert math.isnan(m["p50_ms"]) and math.isnan(m["p99_ms"])
 
     def test_pooled_concurrency_beats_naive(self, smoke_model):
         _, m_naive = self._run(smoke_model, n_req=5, budget_factor=1.5,
